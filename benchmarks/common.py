@@ -1,0 +1,69 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (TenantSpec, VNPUConfig, VNPUManager,
+                        compile_neuisa, compile_vliw)
+from repro.core.simulator import SimResult, Simulator
+from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
+from repro.npu.workloads import PAPER_PAIRS, get_workload
+
+POLICIES = ("pmt", "v10", "neu10_nh", "neu10")
+
+
+def run_pair(
+    w1: str,
+    w2: str,
+    policy: str,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    n_requests: int = 6,
+    hbm_scale: float = 1.0,
+    me_ve: Tuple[int, int] = (2, 2),
+) -> SimResult:
+    """Paper §V-A setup: two vNPUs of 2ME/2VE on a 4ME/4VE core,
+    SRAM/HBM split evenly."""
+    mgr = VNPUManager(core=core)
+    mapping = "spatial" if policy.startswith("neu10") else "temporal"
+    specs = []
+    for name in (w1, w2):
+        tr = get_workload(name, core)
+        v = mgr.create(
+            VNPUConfig(*me_ve, hbm_bytes=core.hbm_bytes // 2,
+                       sram_bytes=core.sram_bytes // 2),
+            name=name, mapping=mapping)
+        if policy.startswith("neu10"):
+            prog = compile_neuisa(tr, core)
+        else:
+            # temporal baselines compile for the full physical core;
+            # the false contention (Fig. 9) comes from operators whose
+            # own tiling can't fill it (n_tiles < n_me).
+            prog = compile_vliw(tr, core)
+        specs.append(TenantSpec(prog, v, n_requests))
+    return Simulator(specs, policy=policy, core=core,
+                     hbm_scale=hbm_scale).run()
+
+
+def geomean(xs) -> float:
+    xs = [max(x, 1e-12) for x in xs]
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+@dataclass
+class BenchRow:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn) -> Tuple[float, object]:
+    t0 = time.time()
+    out = fn()
+    return (time.time() - t0) * 1e6, out

@@ -1,0 +1,70 @@
+"""Paper Fig. 12: allocator cost-effectiveness.
+
+Sweep the EU budget from 2 to 16 for representative workloads; for
+each budget compare the Eq.-4 allocator's (n_me, n_ve) pick against
+every alternative split, scoring by simulated solo throughput on a
+matching (8ME/8VE-max) core with harvesting off (so the allocation —
+not the scheduler — is what's measured).
+
+Success criterion (paper: "selects a configuration with better
+performance than others ... a sub-optimal pick still achieves similar
+performance"): allocator pick within 5% of the best split.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import BenchRow, timed
+from repro.core import TenantSpec, VNPUConfig, VNPUManager, compile_neuisa
+from repro.core.allocator import allocate_for_trace
+from repro.core.simulator import Simulator
+from repro.npu.hw_config import NPUCoreConfig
+from repro.npu.workloads import get_workload
+
+WORKLOADS = ("BERT", "DLRM", "RsNt", "ENet", "NCF", "RtNt")
+
+
+def _solo_throughput(name: str, n_me: int, n_ve: int,
+                     core: NPUCoreConfig) -> float:
+    mgr = VNPUManager(core=core)
+    tr = get_workload(name, core)
+    v = mgr.create(VNPUConfig(n_me, n_ve, hbm_bytes=core.hbm_bytes))
+    res = Simulator([TenantSpec(compile_neuisa(tr, core), v, 4)],
+                    policy="neu10_nh", core=core).run()
+    return res.throughput(0)
+
+
+def run() -> List[BenchRow]:
+    core = NPUCoreConfig(n_me=8, n_ve=8)
+    rows: List[BenchRow] = []
+    regrets: List[float] = []
+    for name in WORKLOADS:
+        tr = get_workload(name, core)
+        for budget in (4, 8, 12, 16):
+            us, _ = timed(lambda: None)
+            alloc = allocate_for_trace(tr, budget, core)
+            picked = _solo_throughput(name, alloc.n_me, alloc.n_ve, core)
+            best = picked
+            best_split = (alloc.n_me, alloc.n_ve)
+            for n_me in range(1, budget):
+                n_ve = budget - n_me
+                if n_me > core.n_me or n_ve > core.n_ve:
+                    continue
+                thr = _solo_throughput(name, n_me, n_ve, core)
+                if thr > best:
+                    best, best_split = thr, (n_me, n_ve)
+            regret = 1.0 - picked / best
+            regrets.append(regret)
+            rows.append(BenchRow(
+                f"fig12/{name}/eu{budget}", us,
+                f"picked=({alloc.n_me},{alloc.n_ve}) best={best_split} "
+                f"regret={regret:.3f}"))
+    avg = sum(regrets) / len(regrets)
+    rows.append(BenchRow("fig12/avg_regret", 0.0, f"{avg:.4f}"))
+    assert avg < 0.05, f"allocator avg regret {avg:.3f} exceeds 5%"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

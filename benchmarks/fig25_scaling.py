@@ -1,0 +1,41 @@
+"""Paper Fig. 25: Neu10 throughput improvement over V10 as the core
+grows (2ME/2VE .. 8ME/8VE, split evenly between the two vNPUs).
+Paper claim: more MEs/VEs -> more benefit from μTOp scheduling."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchRow, geomean, run_pair, timed
+from repro.npu.hw_config import NPUCoreConfig
+
+PAIRS = [("ENet", "TFMR"), ("RNRS", "RtNt"), ("BERT", "ENet")]
+SIZES = [2, 4, 8]
+
+
+def run() -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    gains_by_size = {}
+    for n in SIZES:
+        core = NPUCoreConfig(n_me=n, n_ve=n)
+        half = (n // 2, n // 2)
+        gains = []
+        for w1, w2 in PAIRS:
+            us, pair = timed(lambda a=w1, b=w2: (
+                run_pair(a, b, "neu10", core=core, me_ve=half),
+                run_pair(a, b, "v10", core=core, me_ve=half)))
+            neu, v10 = pair
+            g = neu.total_throughput() / max(v10.total_throughput(), 1e-9)
+            gains.append(g)
+            rows.append(BenchRow(
+                f"fig25/{w1}+{w2}/{n}ME{n}VE", us, f"neu10/v10={g:.3f}"))
+        gains_by_size[n] = geomean(gains)
+        rows.append(BenchRow(f"fig25/geomean/{n}ME{n}VE", 0.0,
+                             f"{gains_by_size[n]:.3f}"))
+    # scaling trend: benefit at 8 engines >= benefit at 2 engines
+    assert gains_by_size[8] >= gains_by_size[2] - 0.05
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,53 @@
+"""Paper Fig. 26 + Fig. 27: throughput vs HBM bandwidth, and the LLM
+(memory-bound decode) collocation case study.
+
+Fig. 26: memory-intensive pairs under 900/1200/1600/2400 GB/s.
+Fig. 27: LLaMA decode + compute-intensive workloads — V10's temporal
+sharing strands the memory-stalled MEs; Neu10's spatial μTOp
+scheduling lets the collocated tenant use them (paper: up to 1.6x)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchRow, geomean, run_pair, timed
+
+MEM_PAIRS = [("DLRM", "NCF"), ("NCF", "TFMR")]
+LLM_PARTNERS = ("BERT", "RsNt", "RtNt")
+BWS = (0.75, 1.0, 1.33, 2.0)   # x1200 GB/s -> 900..2400
+
+
+def run() -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    for w1, w2 in MEM_PAIRS:
+        for s in BWS:
+            us, pair = timed(lambda a=w1, b=w2, ss=s: (
+                run_pair(a, b, "neu10", hbm_scale=ss),
+                run_pair(a, b, "v10", hbm_scale=ss)))
+            neu, v10 = pair
+            g = neu.total_throughput() / max(v10.total_throughput(), 1e-9)
+            rows.append(BenchRow(
+                f"fig26/{w1}+{w2}/bw{int(1200*s)}GBs", us,
+                f"neu10/v10={g:.3f}"))
+    # Fig. 27: LLM decode collocation
+    gains = []
+    for partner in LLM_PARTNERS:
+        us, pair = timed(lambda p=partner: (
+            run_pair("LLaMA", p, "neu10"),
+            run_pair("LLaMA", p, "v10")))
+        neu, v10 = pair
+        # partner throughput gain (the harvester) + LLM overhead
+        g = neu.throughput(1) / max(v10.throughput(1), 1e-9)
+        llm_pen = v10.throughput(0) / max(neu.throughput(0), 1e-9)
+        gains.append(g)
+        rows.append(BenchRow(
+            f"fig27/LLaMA+{partner}", us,
+            f"partner_gain={g:.3f} llm_slowdown={llm_pen:.3f}"))
+    rows.append(BenchRow("fig27/geomean_partner_gain", 0.0,
+                         f"{geomean(gains):.3f}"))
+    assert geomean(gains) > 1.0
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig19_21   # one figure
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig12_allocator,
+    fig16_neuisa_overhead,
+    fig19_21_latency_throughput,
+    fig22_utilization,
+    fig25_scaling,
+    fig26_hbm,
+    table3_harvest_overhead,
+)
+
+SUITES = {
+    "fig12": fig12_allocator,
+    "fig16": fig16_neuisa_overhead,
+    "fig19_21": fig19_21_latency_throughput,
+    "fig22": fig22_utilization,
+    "table3": table3_harvest_overhead,
+    "fig25": fig25_scaling,
+    "fig26": fig26_hbm,
+}
+
+
+def main() -> None:
+    selected = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    failures = []
+    for key in selected:
+        mod = SUITES[key]
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                print(row.csv(), flush=True)
+            print(f"{key}/TOTAL,{(time.time()-t0)*1e6:.0f},ok", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"{key}/TOTAL,0,FAILED: {e}", flush=True)
+            failures.append(key)
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

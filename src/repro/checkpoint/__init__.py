@@ -1,0 +1,9 @@
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.checkpoint.elastic import reshard_state
+
+__all__ = ["Checkpointer", "save_checkpoint", "restore_checkpoint",
+           "reshard_state"]

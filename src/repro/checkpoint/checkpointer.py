@@ -1,0 +1,166 @@
+"""Fault-tolerant checkpointing: msgpack tensor store with atomic
+rename, async (background-thread) saves, integrity manifest, and
+keep-last-k retention.
+
+Layout:  <dir>/step_<N>/arrays.msgpack   (+ manifest.json)
+A save is visible only after the atomic directory rename, so a crash
+mid-save never corrupts the restore point — the restart path picks
+the newest complete step.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(state) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    keyed = jax.tree_util.tree_flatten_with_path(state)[0]
+    out = []
+    for (path, leaf) in keyed:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out, treedef
+
+
+def _dtype_of(name: str) -> np.dtype:
+    # name-based so ml_dtypes (bfloat16, fp8) round-trip correctly
+    import jax.numpy as jnp
+
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(jnp, name))
+
+
+def _pack_array(a: np.ndarray) -> Dict[str, Any]:
+    return {"dtype": a.dtype.name, "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_array(d) -> np.ndarray:
+    return np.frombuffer(
+        d["data"], dtype=_dtype_of(d["dtype"])).reshape(d["shape"]).copy()
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state) -> str:
+    """Synchronous atomic save. Returns the final directory path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays, _ = _flatten(state)
+    payload = {k: _pack_array(v) for k, v in arrays}
+    blob = msgpack.packb(payload)
+    with open(os.path.join(tmp, "arrays.msgpack"), "wb") as f:
+        f.write(blob)
+    manifest = {
+        "step": step,
+        "n_arrays": len(arrays),
+        "bytes": len(blob),
+        "sha256": hashlib.sha256(blob).hexdigest(),
+        "keys": [k for k, _ in arrays],
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def list_checkpoints(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def restore_checkpoint(ckpt_dir: str, like, step: Optional[int] = None):
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). Verifies the integrity hash."""
+    steps = list_checkpoints(ckpt_dir)
+    if not steps:
+        return None, -1
+    step = step if step is not None else steps[-1]
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "arrays.msgpack"), "rb") as f:
+        blob = f.read()
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if hashlib.sha256(blob).hexdigest() != manifest["sha256"]:
+        raise IOError(f"checkpoint {path} failed integrity check")
+    payload = msgpack.unpackb(blob)
+    keyed = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for (pth, leaf) in keyed[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        arr = _unpack_array(payload[key])
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want:
+            arr = arr.astype(want)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(keyed[1], leaves), step
+
+
+class Checkpointer:
+    """Async checkpointer: `save()` snapshots to host memory on the
+    caller thread (cheap) and writes in a background thread, so the
+    train loop never blocks on disk. `keep` newest checkpoints are
+    retained."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    def save(self, step: int, state, blocking: bool = False) -> None:
+        self.wait()
+        host_state = jax.tree_util.tree_map(np.asarray, state)
+
+        def work():
+            try:
+                save_checkpoint(self.dir, step, host_state)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._err = e
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def restore(self, like, step: Optional[int] = None):
+        return restore_checkpoint(self.dir, like, step)
+
+    def _gc(self) -> None:
+        steps = list_checkpoints(self.dir)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)

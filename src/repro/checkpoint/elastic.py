@@ -1,0 +1,66 @@
+"""Elastic scaling: reshard a checkpoint for a different mesh.
+
+When a pod (or hosts) drop out, the surviving cluster rebuilds a
+smaller mesh and the coordinator replays the newest checkpoint with
+new shardings. Parameters are topology-independent (full logical
+arrays in the checkpoint), so resharding is: load -> re-place with
+the new mesh's NamedShardings -> resume. The DATA order is also
+preserved: the synthetic pipeline keys batches on (step, shard), and
+`plan_elastic_restart` recomputes shard assignments for the new
+world size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def reshard_state(state, mesh: Mesh, spec_tree) -> Any:
+    """Place a host-memory state pytree onto `mesh` under `spec_tree`
+    (PartitionSpec pytree). Works for both grow and shrink."""
+    from repro.distributed.sharding import named
+
+    shardings = named(mesh, spec_tree)
+    return jax.tree_util.tree_map(
+        lambda a, sh: jax.device_put(a, sh), state, shardings)
+
+
+@dataclass
+class ElasticPlan:
+    old_world: int
+    new_world: int
+    new_data_axis: int
+    new_global_batch: int
+    restart_step: int
+
+
+def plan_elastic_restart(
+    old_world: int,
+    surviving: int,
+    model_parallel: int,
+    global_batch: int,
+    last_step: int,
+) -> ElasticPlan:
+    """Compute the largest viable mesh from surviving chips: the
+    model axis is fixed (sharded params must fit), data axis shrinks
+    to the largest multiple that divides the batch."""
+    if surviving < model_parallel:
+        raise RuntimeError(
+            f"cannot rebuild: {surviving} chips < model axis "
+            f"{model_parallel}")
+    new_data = surviving // model_parallel
+    while new_data > 0 and global_batch % new_data != 0:
+        new_data -= 1
+    if new_data == 0:
+        raise RuntimeError("no data-axis size divides the global batch")
+    return ElasticPlan(
+        old_world=old_world,
+        new_world=new_data * model_parallel,
+        new_data_axis=new_data,
+        new_global_batch=global_batch,
+        restart_step=last_step,
+    )

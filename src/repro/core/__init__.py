@@ -1,0 +1,48 @@
+"""Neu10: the paper's primary contribution.
+
+vNPU abstraction (§III-A) -> allocator (§III-B) -> mapper (§III-C) ->
+NeuISA μTOp compiler (§III-D) -> hardware scheduler + event-driven
+simulator (§III-E/G) with the PMT / V10 / Neu10-NH baselines (§V-A).
+"""
+from repro.core.allocator import (
+    Allocation,
+    allocate_eus,
+    allocate_for_trace,
+    eu_utilization,
+    normalized_exec_time,
+    optimal_ratio,
+)
+from repro.core.compiler import compile_neuisa, compile_vliw
+from repro.core.mapper import VNPUManager
+from repro.core.neuisa import MuTOp, MuTOpGroup, NeuISAProgram, VLIWProgram
+from repro.core.simulator import (
+    SimResult,
+    Simulator,
+    TenantSpec,
+    run_collocation,
+)
+from repro.core.vnpu import PRESETS, VNPU, VNPUConfig, VNPUState
+
+__all__ = [
+    "Allocation",
+    "allocate_eus",
+    "allocate_for_trace",
+    "eu_utilization",
+    "normalized_exec_time",
+    "optimal_ratio",
+    "compile_neuisa",
+    "compile_vliw",
+    "VNPUManager",
+    "MuTOp",
+    "MuTOpGroup",
+    "NeuISAProgram",
+    "VLIWProgram",
+    "SimResult",
+    "Simulator",
+    "TenantSpec",
+    "run_collocation",
+    "PRESETS",
+    "VNPU",
+    "VNPUConfig",
+    "VNPUState",
+]

@@ -1,0 +1,173 @@
+"""NeuISA compiler (§III-D "Compiler support").
+
+Lowers a WorkloadTrace (operator list) into
+
+* a ``NeuISAProgram``: each ME-bearing operator is partitioned into
+  up to n_x ME μTOps (ROLLER-style tile partitioning — here the tile
+  counts come from the cost model, which uses the same 128-aligned
+  tiling as the Pallas kernels in ``repro/kernels``); each μTOp is
+  compiled "for a fictional NPU with one ME and n_y VEs". Fused VE
+  epilogues ride in the group's VE μTOp (pipelined with the MEs).
+  Operators whose tiling cut the reduction dimension get a trailing
+  VE-reduce group — the Fig. 16 overhead case (no ME/VE pipelining
+  across the group boundary).
+
+* a ``VLIWProgram``: the baseline lowering where each operator's
+  instruction stream statically couples n_me_static MEs (what PMT/V10
+  schedule).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.neuisa import (
+    ME,
+    VE,
+    MuTOp,
+    MuTOpGroup,
+    NeuISAProgram,
+    VLIWOp,
+    VLIWProgram,
+)
+from repro.npu.cost_model import Operator, WorkloadTrace
+from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
+
+
+class _SnippetTable:
+    """Deduplicates μTOp code snippets (§III-D code-inflation note):
+    μTOps that execute the same code (same op, same tile shape) share
+    one snippet; only the μTOp index register differs."""
+
+    def __init__(self):
+        self._table: Dict[Tuple, int] = {}
+
+    def get(self, key: Tuple) -> int:
+        if key not in self._table:
+            self._table[key] = len(self._table)
+        return self._table[key]
+
+
+def compile_neuisa(
+    trace: WorkloadTrace,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    n_x: Optional[int] = None,
+    n_y: Optional[int] = None,
+) -> NeuISAProgram:
+    n_x = n_x or core.n_me
+    n_y = n_y or core.n_ve
+    snip = _SnippetTable()
+    groups: List[MuTOpGroup] = []
+
+    for op in trace.ops:
+        if op.kind == "me":
+            p = max(1, min(n_x, op.n_tiles))
+            me_share = op.me_cycles / p
+            hbm_share = op.hbm_bytes / p
+            sid = snip.get((op.name.split("_")[0], "me", round(me_share, 3)))
+            g = MuTOpGroup(op_name=op.name)
+            for i in range(p):
+                g.me_utops.append(
+                    MuTOp(ME, me_share, hbm_share, op.name, sid)
+                )
+            if op.reduction_split:
+                # drain VE work stays fused; the cross-partition SUM
+                # must wait for every partial -> its own group.
+                drain = max(op.ve_cycles - _reduce_cycles(op, p, core), 0.0)
+                if drain > 0:
+                    g.ve_utop = MuTOp(
+                        VE, drain, 0.0, op.name,
+                        snip.get((op.name, "ve_drain")),
+                    )
+                groups.append(g)
+                groups.append(
+                    MuTOpGroup(
+                        ve_utop=MuTOp(
+                            VE, _reduce_cycles(op, p, core), 0.0,
+                            f"{op.name}:reduce",
+                            snip.get((op.name, "ve_reduce")),
+                        ),
+                        op_name=f"{op.name}:reduce",
+                    )
+                )
+            else:
+                if op.ve_cycles > 0:
+                    g.ve_utop = MuTOp(
+                        VE, op.ve_cycles, 0.0, op.name,
+                        snip.get((op.name, "ve_fused")),
+                    )
+                groups.append(g)
+        else:  # ve / mem operator -> one VE μTOp group
+            groups.append(
+                MuTOpGroup(
+                    ve_utop=MuTOp(
+                        VE, op.ve_cycles, op.hbm_bytes, op.name,
+                        snip.get((op.name.split("_")[0], "ve",
+                                  round(op.ve_cycles, 3))),
+                    ),
+                    op_name=op.name,
+                )
+            )
+
+    prog = NeuISAProgram(
+        name=trace.name, groups=groups, n_x=n_x, n_y=n_y,
+        source_ops=len(trace.ops),
+    )
+    prog.validate()
+    return prog
+
+
+def _reduce_cycles(op: Operator, p: int, core: NPUCoreConfig) -> float:
+    """VE cycles to sum p partial outputs ((p-1) adds per element)."""
+    return op.out_elems * max(p - 1, 0) / core.ve_elems_per_cycle
+
+
+def compile_vliw(
+    trace: WorkloadTrace,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    max_mes: Optional[int] = None,
+    n_x: Optional[int] = None,
+    n_y: Optional[int] = None,
+) -> VLIWProgram:
+    """Baseline lowering: the compiler bakes the ME count into the
+    instruction stream (Fig. 9's rigidity).
+
+    ``max_mes`` is the ME count the program is compiled FOR — the
+    tenant's vNPU size. Under V10's temporal sharing an op then
+    occupies the whole physical array while only exploiting
+    ``min(max_mes, n_tiles)`` MEs (the paper's false contention);
+    under PMT the whole core is the vNPU, so ``max_mes`` defaults to
+    the core width."""
+    n_x = n_x or core.n_me
+    n_y = n_y or core.n_ve
+    cap = max_mes or n_x
+    ops: List[VLIWOp] = []
+    for op in trace.ops:
+        if op.kind == "me":
+            p = max(1, min(cap, op.n_tiles))
+            ops.append(VLIWOp(op.name, p, op.me_cycles, op.ve_cycles,
+                              op.hbm_bytes))
+        else:
+            ops.append(VLIWOp(op.name, 0, 0.0, op.ve_cycles, op.hbm_bytes))
+    return VLIWProgram(name=trace.name, ops=ops, n_x=n_x, n_y=n_y)
+
+
+def neuisa_overhead_terms(trace: WorkloadTrace,
+                          core: NPUCoreConfig = DEFAULT_CORE
+                          ) -> Tuple[float, float]:
+    """Analytic single-tenant makespans (VLIW vs NeuISA) used by the
+    Fig. 16 benchmark; the simulator measures the same quantity
+    dynamically."""
+    n_x, n_y = core.n_me, core.n_ve
+    t_vliw = t_neu = 0.0
+    for op in trace.ops:
+        p = max(1, min(n_x, op.n_tiles))
+        me = op.me_cycles / p
+        ve = op.ve_cycles / n_y
+        hbm = op.hbm_bytes / core.hbm_bytes_per_cycle
+        t_vliw += max(me, ve, hbm)
+        if op.reduction_split:
+            red = _reduce_cycles(op, p, core) / n_y
+            t_neu += max(me, ve - red, hbm) + red
+        else:
+            t_neu += max(me, ve, hbm)
+    return t_vliw, t_neu

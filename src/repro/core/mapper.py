@@ -1,0 +1,189 @@
+"""vNPU -> pNPU mapping (§III-C).
+
+The vNPU manager tracks every physical NPU's free MEs/VEs and
+SRAM/HBM segments, and places vNPUs under two schemes:
+
+* ``spatial``  (hardware-isolated): dedicated EUs + segments. A set of
+  vNPUs is collocatable iff total EU/memory demand fits the pNPU.
+* ``temporal`` (software-isolated): EUs oversubscribed; placement
+  load-balances total demand across pNPUs.
+
+The default placement is the paper's greedy rule: balance the
+*fraction* of EUs vs memory consumed on each core, so EU-hungry
+vNPUs land next to memory-hungry ones.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.vnpu import MemorySegments, VNPU, VNPUConfig, VNPUState
+from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
+
+
+@dataclass
+class CoreState:
+    """Bookkeeping for one physical NPU core."""
+
+    core: NPUCoreConfig
+    pnpu_id: int
+    core_id: int
+    free_mes: List[int] = field(default_factory=list)
+    free_ves: List[int] = field(default_factory=list)
+    free_sram_segs: List[int] = field(default_factory=list)
+    free_hbm_segs: List[int] = field(default_factory=list)
+    residents: List[int] = field(default_factory=list)  # vnpu ids
+    # temporal mode: cumulative oversubscribed demand
+    demand_me: int = 0
+    demand_ve: int = 0
+
+    def __post_init__(self):
+        c = self.core
+        self.free_mes = list(range(c.n_me))
+        self.free_ves = list(range(c.n_ve))
+        self.free_sram_segs = list(range(c.sram_bytes // c.sram_segment))
+        self.free_hbm_segs = list(range(c.hbm_bytes // c.hbm_segment))
+
+    # -- utilization fractions for the greedy balance rule --
+    @property
+    def eu_used_frac(self) -> float:
+        c = self.core
+        used = (c.n_me - len(self.free_mes)) + (c.n_ve - len(self.free_ves))
+        return used / (c.n_me + c.n_ve)
+
+    @property
+    def mem_used_frac(self) -> float:
+        c = self.core
+        total = c.hbm_bytes // c.hbm_segment
+        return (total - len(self.free_hbm_segs)) / max(total, 1)
+
+    def fits_spatial(self, cfg: VNPUConfig) -> bool:
+        c = self.core
+        n_sram = -(-max(cfg.sram_bytes, c.sram_segment) // c.sram_segment)
+        n_hbm = -(-max(cfg.hbm_bytes, c.hbm_segment) // c.hbm_segment)
+        return (
+            len(self.free_mes) >= cfg.n_me
+            and len(self.free_ves) >= cfg.n_ve
+            and len(self.free_sram_segs) >= n_sram
+            and len(self.free_hbm_segs) >= n_hbm
+        )
+
+
+class VNPUManager:
+    """Host-side vNPU manager (the paper's kernel-module control
+    plane, minus the KVM plumbing — see DESIGN.md §3)."""
+
+    def __init__(self, n_pnpus: int = 1, cores_per_pnpu: int = 1,
+                 core: NPUCoreConfig = DEFAULT_CORE):
+        self.core_cfg = core
+        self.cores: List[CoreState] = [
+            CoreState(core, p, c)
+            for p in range(n_pnpus)
+            for c in range(cores_per_pnpu)
+        ]
+        self.vnpus: Dict[int, VNPU] = {}
+
+    # ------------------------------------------------------------------
+    def create(self, cfg: VNPUConfig, name: str = "",
+               mapping: str = "spatial") -> VNPU:
+        cfg.validate(self.core_cfg)
+        v = VNPU(config=cfg, name=name, mapping=mapping)
+        self.vnpus[v.vnpu_id] = v
+        self._map(v)
+        return v
+
+    def destroy(self, v: VNPU) -> None:
+        """vNPU deallocation: clean the context, release EUs+segments,
+        tear down the (modeled) DMA mappings."""
+        if v.state == VNPUState.DESTROYED:
+            return
+        cs = self._core_of(v)
+        if cs is not None:
+            if v.mapping == "spatial":
+                cs.free_mes.extend(v.me_ids)
+                cs.free_ves.extend(v.ve_ids)
+                cs.free_mes.sort()
+                cs.free_ves.sort()
+            else:
+                cs.demand_me -= v.config.n_me
+                cs.demand_ve -= v.config.n_ve
+            if v.segments is not None:
+                cs.free_sram_segs.extend(
+                    s for s in v.segments.sram_segments)
+                cs.free_hbm_segs.extend(
+                    s for s in v.segments.hbm_segments)
+                cs.free_sram_segs.sort()
+                cs.free_hbm_segs.sort()
+            cs.residents.remove(v.vnpu_id)
+        v.destroy()
+
+    def reconfigure(self, v: VNPU, cfg: VNPUConfig) -> VNPU:
+        """Paper hypercall (2): change an existing vNPU's config."""
+        mapping = v.mapping
+        self.destroy(v)
+        nv = self.create(cfg, name=v.name, mapping=mapping)
+        return nv
+
+    # ------------------------------------------------------------------
+    def _core_of(self, v: VNPU) -> Optional[CoreState]:
+        for cs in self.cores:
+            if v.vnpu_id in cs.residents:
+                return cs
+        return None
+
+    def _alloc_segments(self, cs: CoreState, cfg: VNPUConfig) -> MemorySegments:
+        c = cs.core
+        n_sram = -(-max(cfg.sram_bytes, c.sram_segment) // c.sram_segment)
+        n_hbm = -(-max(cfg.hbm_bytes, c.hbm_segment) // c.hbm_segment)
+        if len(cs.free_sram_segs) < n_sram or len(cs.free_hbm_segs) < n_hbm:
+            raise RuntimeError("out of memory segments")
+        sram = tuple(cs.free_sram_segs[:n_sram])
+        hbm = tuple(cs.free_hbm_segs[:n_hbm])
+        del cs.free_sram_segs[:n_sram]
+        del cs.free_hbm_segs[:n_hbm]
+        return MemorySegments(sram, hbm, c.sram_segment, c.hbm_segment)
+
+    def _map(self, v: VNPU) -> None:
+        cfg = v.config
+        if v.mapping == "spatial":
+            # greedy §III-C: among cores that fit, pick the one where
+            # adding this vNPU best balances EU-frac vs mem-frac.
+            def imbalance(cs: CoreState) -> float:
+                c = cs.core
+                eu = cs.eu_used_frac + cfg.n_eus / (c.n_me + c.n_ve)
+                total_hbm = c.hbm_bytes // c.hbm_segment
+                mem = cs.mem_used_frac + (
+                    -(-max(cfg.hbm_bytes, c.hbm_segment) // c.hbm_segment)
+                    / max(total_hbm, 1)
+                )
+                return abs(eu - mem)
+
+            candidates = [cs for cs in self.cores if cs.fits_spatial(cfg)]
+            if not candidates:
+                raise RuntimeError(
+                    f"no pNPU core fits vNPU {cfg.n_me}ME/{cfg.n_ve}VE "
+                    f"(spatial); free up resources or use temporal mapping"
+                )
+            cs = min(candidates, key=imbalance)
+            v.me_ids = tuple(cs.free_mes[: cfg.n_me])
+            v.ve_ids = tuple(cs.free_ves[: cfg.n_ve])
+            del cs.free_mes[: cfg.n_me]
+            del cs.free_ves[: cfg.n_ve]
+        else:
+            # temporal: least-loaded core by oversubscribed demand
+            cs = min(self.cores, key=lambda c: c.demand_me + c.demand_ve)
+            cs.demand_me += cfg.n_me
+            cs.demand_ve += cfg.n_ve
+            v.me_ids = tuple(range(cfg.n_me))   # logical ids
+            v.ve_ids = tuple(range(cfg.n_ve))
+        v.segments = self._alloc_segments(cs, cfg)
+        cs.residents.append(v.vnpu_id)
+        v.pnpu_id, v.core_id = cs.pnpu_id, cs.core_id
+        v.state = VNPUState.MAPPED
+
+    # ------------------------------------------------------------------
+    def collocated(self, v: VNPU) -> List[VNPU]:
+        cs = self._core_of(v)
+        if cs is None:
+            return []
+        return [self.vnpus[i] for i in cs.residents if i != v.vnpu_id]

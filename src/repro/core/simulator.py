@@ -1,0 +1,626 @@
+"""Event-driven NPU simulator (§III-G) with the μTOp / operation
+schedulers (§III-E) and the paper's baselines (§V-A).
+
+Granularity: μTOp events with cycle-accurate durations. An ME μTOp
+occupies one ME; a VE μTOp is split into n_y slot-chunks served by
+the operation scheduler. HBM bandwidth is shared between tenants with
+in-flight memory-demanding μTOps (fair sharing, §III-B). The ME
+preemption penalty is the paper's 256 cycles (drain partial sums +
+weights of a 128x128 array).
+
+Policies
+--------
+* ``pmt``      — PREMA-style whole-core temporal sharing; preemptive
+                 fair scheduling at operator boundaries.
+* ``v10``      — V10: operator-granular temporal sharing; an ME
+                 operator occupies ALL MEs (VLIW control-flow
+                 coupling); VE-only operators from other vNPUs may run
+                 concurrently; priority-based preemption.
+* ``neu10_nh`` — spatial-isolated vNPUs, no harvesting (MIG-like).
+* ``neu10``    — spatial-isolated + dynamic μTOp scheduling with
+                 ME/VE harvesting and reclaim preemption.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.neuisa import ME, VE, MuTOpGroup, NeuISAProgram, VLIWProgram
+from repro.core.vnpu import VNPU
+from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
+
+EPS = 1e-9
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class Chunk:
+    """A schedulable unit: one ME μTOp, one VE μTOp slot-chunk, or a
+    whole VLIW operator (multi-engine)."""
+
+    tenant: int
+    kind: str                    # "me" | "ve"
+    cycles: float                # per-engine work
+    hbm_bytes: float
+    op_name: str = ""
+    n_engines: int = 1           # VLIW ops seize several engines
+    penalty: float = 0.0         # context-switch cycles to add (resume)
+    group_key: int = -1          # group (NeuISA) or op (VLIW) index
+    from_me_group: bool = False  # VE chunk draining an ME group
+
+
+@dataclass
+class TenantSpec:
+    program: Union[NeuISAProgram, VLIWProgram]
+    vnpu: VNPU
+    n_requests: int = 8
+    weight: float = 1.0          # fair-share priority
+
+
+@dataclass
+class TenantStats:
+    name: str
+    latencies: List[float] = field(default_factory=list)
+    requests_done: int = 0
+    me_work: float = 0.0
+    ve_work: float = 0.0
+    harvested_me_work: float = 0.0   # work done on non-owned MEs
+    harvested_ve_work: float = 0.0
+    reclaim_blocked: float = 0.0     # Table III: stall due to being
+                                     # harvested (reclaim ctx windows)
+    preemptions: int = 0
+
+    def p95(self) -> float:
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        i = min(len(xs) - 1, max(0, math.ceil(0.95 * len(xs)) - 1))
+        return xs[i]
+
+    def mean(self) -> float:
+        return sum(self.latencies) / len(self.latencies) if self.latencies else 0.0
+
+
+@dataclass
+class SimResult:
+    policy: str
+    makespan: float              # cycles until every tenant hit N reqs
+    tenants: List[TenantStats]
+    n_me: int
+    n_ve: int
+    freq_hz: float
+
+    def me_utilization(self) -> float:
+        return sum(t.me_work for t in self.tenants) / (self.n_me * self.makespan)
+
+    def ve_utilization(self) -> float:
+        return sum(t.ve_work for t in self.tenants) / (self.n_ve * self.makespan)
+
+    def throughput(self, idx: int) -> float:
+        """requests/sec for tenant idx over the makespan."""
+        t = self.tenants[idx]
+        return t.requests_done / (self.makespan / self.freq_hz)
+
+    def total_throughput(self) -> float:
+        return sum(self.throughput(i) for i in range(len(self.tenants)))
+
+
+# ----------------------------------------------------------------------
+class _Engine:
+    __slots__ = ("kind", "eid", "owner", "token", "chunk", "tenant",
+                 "start", "end", "harvested")
+
+    def __init__(self, kind: str, eid: int, owner: Optional[int]):
+        self.kind = kind
+        self.eid = eid
+        self.owner = owner       # tenant idx (spatial) or None
+        self.token: int = -1     # generation counter; -1 = free
+        self.chunk: Optional[Chunk] = None
+        self.tenant: int = -1
+        self.start = 0.0
+        self.end = 0.0
+        self.harvested = False
+
+    @property
+    def free(self) -> bool:
+        return self.token < 0
+
+
+class _TenantRT:
+    """Runtime cursor over a tenant's program (closed-loop requests)."""
+
+    def __init__(self, idx: int, spec: TenantSpec, core: NPUCoreConfig):
+        self.idx = idx
+        self.spec = spec
+        self.core = core
+        self.is_neuisa = isinstance(spec.program, NeuISAProgram)
+        self.me_ids = set(spec.vnpu.me_ids)
+        self.ve_ids = set(spec.vnpu.ve_ids)
+        self.stats = TenantStats(name=spec.program.name)
+        self.active_cycles = 0.0          # fair-share bookkeeping
+        self.req_start = 0.0
+        self.cursor = -1                  # group / op index
+        self.outstanding = 0              # chunks of current step in flight
+        self.ready_me: List[Chunk] = []
+        self.ready_ve: List[Chunk] = []
+        self.loop_remaining: Dict[int, int] = {}
+        self.done = False                 # reached n_requests (keeps running)
+        self.finished_at = math.inf
+
+    # ---------------- program stepping ----------------
+    def start_request(self, t: float) -> None:
+        self.req_start = t
+        self.cursor = -1
+        self.loop_remaining = {}
+        self._advance(t)
+
+    def _advance(self, t: float) -> None:
+        """Move to the next non-empty group/op; refill ready queues."""
+        prog = self.spec.program
+        while True:
+            nxt = self._next_cursor()
+            if nxt is None:
+                # request complete
+                self.stats.latencies.append(t - self.req_start)
+                self.stats.requests_done += 1
+                if (self.stats.requests_done >= self.spec.n_requests
+                        and not self.done):
+                    self.done = True
+                    self.finished_at = t
+                self.start_request(t)
+                return
+            self.cursor = nxt
+            if self._fill_ready():
+                return
+
+    def _next_cursor(self) -> Optional[int]:
+        prog = self.spec.program
+        if self.is_neuisa:
+            n = len(prog.groups)
+            if self.cursor < 0:
+                return 0 if n else None
+            # loop control (uTop.nextGroup)
+            g = prog.groups[self.cursor]
+            tgt = next((u.next_group for u in g.all_utops()
+                        if u.next_group is not None), None)
+            if tgt is not None:
+                trips = self.loop_remaining.get(
+                    self.cursor, prog.loop_trips.get(self.cursor, 1))
+                if trips > 1:
+                    self.loop_remaining[self.cursor] = trips - 1
+                    return tgt
+            nxt = self.cursor + 1
+            return nxt if nxt < n else None
+        n = len(prog.ops)
+        nxt = self.cursor + 1
+        return nxt if nxt < n else None
+
+    def _fill_ready(self) -> bool:
+        """Expand current group/op into ready chunks. False if empty."""
+        prog = self.spec.program
+        made = 0
+        if self.is_neuisa:
+            g: MuTOpGroup = prog.groups[self.cursor]
+            for u in g.me_utops:
+                if u.cycles > EPS or u.hbm_bytes > EPS:
+                    self.ready_me.append(Chunk(
+                        self.idx, ME, u.cycles, u.hbm_bytes, u.op_name,
+                        group_key=self.cursor))
+                    made += 1
+            if g.ve_utop is not None and (
+                    g.ve_utop.cycles > EPS or g.ve_utop.hbm_bytes > EPS):
+                n_y = prog.n_y
+                for _ in range(n_y):
+                    self.ready_ve.append(Chunk(
+                        self.idx, VE, g.ve_utop.cycles / n_y,
+                        g.ve_utop.hbm_bytes / n_y, g.ve_utop.op_name,
+                        group_key=self.cursor,
+                        from_me_group=bool(g.me_utops)))
+                    made += 1
+        else:
+            op = prog.ops[self.cursor]
+            if op.n_me_static > 0 and (op.me_cycles > EPS or op.hbm_bytes > EPS):
+                self.ready_me.append(Chunk(
+                    self.idx, ME, op.me_cycles, op.hbm_bytes, op.op_name,
+                    n_engines=op.n_me_static, group_key=self.cursor))
+                made += 1
+                # drain VE work is folded into the op span (pipelined)
+            elif op.ve_cycles > EPS or op.hbm_bytes > EPS:
+                self.ready_ve.append(Chunk(
+                    self.idx, VE, op.ve_cycles, op.hbm_bytes, op.op_name,
+                    group_key=self.cursor))
+                made += 1
+        self.outstanding = made
+        return made > 0
+
+    def chunk_done(self, t: float) -> None:
+        self.outstanding -= 1
+        if self.outstanding <= 0 and not self.ready_me and not self.ready_ve:
+            self._advance(t)
+
+
+# ----------------------------------------------------------------------
+class Simulator:
+    """Deterministic event-driven simulator for one physical NPU core
+    shared by collocated vNPU tenants."""
+
+    def __init__(
+        self,
+        tenants: Sequence[TenantSpec],
+        policy: str = "neu10",
+        core: NPUCoreConfig = DEFAULT_CORE,
+        hbm_scale: float = 1.0,
+        fair_slice: float = 50_000.0,   # cycles of service imbalance
+        max_events: int = 20_000_000,
+    ):
+        assert policy in ("pmt", "v10", "neu10_nh", "neu10"), policy
+        self.policy = policy
+        self.core = core
+        self.hbm_scale = hbm_scale
+        self.fair_slice = fair_slice
+        self.max_events = max_events
+        self.tenants = [_TenantRT(i, s, core) for i, s in enumerate(tenants)]
+        spatial = policy in ("neu10", "neu10_nh")
+        self.mes = [
+            _Engine(ME, i, self._owner_of(ME, i) if spatial else None)
+            for i in range(core.n_me)
+        ]
+        self.ves = [
+            _Engine(VE, i, self._owner_of(VE, i) if spatial else None)
+            for i in range(core.n_ve)
+        ]
+        self._heap: List[Tuple[float, int, str, int, int]] = []
+        self._seq = itertools.count()
+        self._tok = itertools.count()
+
+    def _owner_of(self, kind: str, eid: int) -> Optional[int]:
+        for t in self.tenants:
+            ids = t.me_ids if kind == ME else t.ve_ids
+            if eid in ids:
+                return t.idx
+        return None
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        t = 0.0
+        for rt in self.tenants:
+            rt.start_request(0.0)
+        self._schedule(0.0)
+        events = 0
+        while self._heap:
+            events += 1
+            if events > self.max_events:
+                raise RuntimeError("simulator exceeded max_events")
+            t, _, kind, eid, token = heapq.heappop(self._heap)
+            eng = (self.mes if kind == ME else self.ves)[eid]
+            if eng.token != token:
+                continue  # stale (preempted)
+            self._complete(eng, t)
+            # batch any same-time completions before rescheduling
+            while self._heap and self._heap[0][0] <= t + EPS:
+                t2, _, k2, e2, tok2 = heapq.heappop(self._heap)
+                eng2 = (self.mes if k2 == ME else self.ves)[e2]
+                if eng2.token == tok2:
+                    self._complete(eng2, t2)
+            if all(rt.done for rt in self.tenants):
+                break
+            self._schedule(t)
+            if not self._heap:
+                pending = [rt.idx for rt in self.tenants
+                           if rt.ready_me or rt.ready_ve]
+                raise RuntimeError(
+                    f"scheduler deadlock at t={t}: tenants {pending} have "
+                    f"ready work but nothing is in flight")
+        makespan = max((rt.finished_at for rt in self.tenants), default=t)
+        if not all(rt.done for rt in self.tenants):
+            makespan = t
+        return SimResult(
+            policy=self.policy,
+            makespan=max(makespan, EPS),
+            tenants=[rt.stats for rt in self.tenants],
+            n_me=self.core.n_me,
+            n_ve=self.core.n_ve,
+            freq_hz=self.core.freq_hz,
+        )
+
+    # ------------------------------------------------------------------
+    def _complete(self, eng: _Engine, t: float) -> None:
+        chunk, tenant = eng.chunk, eng.tenant
+        if chunk is None:
+            # context-switch drain window finished
+            token = eng.token
+            for e in self.mes + self.ves:
+                if e.token == token:
+                    e.token = -1
+            return
+        engines = self._engines_of(chunk)
+        for e in engines:
+            e.token = -1
+            e.chunk = None
+        rt = self.tenants[tenant]
+        if chunk.kind == ME:
+            rt.stats.me_work += chunk.cycles
+            # note: a VLIW ME op's fused VE-drain work rides inside the
+            # op span without occupying modeled VE engines, so it is
+            # NOT counted as VE work — utilization stats are physical
+            # occupancy for every policy (conservation-exact).
+            if eng.harvested:
+                rt.stats.harvested_me_work += chunk.cycles
+        else:
+            rt.stats.ve_work += chunk.cycles
+            if eng.harvested:
+                rt.stats.harvested_ve_work += chunk.cycles
+        # fairness bookkeeping counts ACTIVE (compute) cycles, like the
+        # paper's per-vNPU performance counters (§III-E) — an
+        # HBM-stalled tenant accrues little and keeps its priority,
+        # which is precisely V10's Fig. 27 pathology.
+        rt.active_cycles += chunk.cycles / max(chunk.n_engines, 1)
+        rt.chunk_done(t)
+
+    def _engines_of(self, chunk: Chunk) -> List[_Engine]:
+        pool = self.mes if chunk.kind == ME else self.ves
+        return [e for e in pool if e.chunk is chunk]
+
+    # ------------------------------------------------------------------
+    def _duration(self, chunk: Chunk, n_dispatched: int) -> float:
+        rt = self.tenants[chunk.tenant]
+        if rt.is_neuisa:
+            # μTOps are single-engine units (a VE μTOp was pre-split
+            # into n_y slot chunks)
+            span = chunk.cycles
+        elif chunk.kind == ME:
+            # VLIW op: rate fixed by its compiled-in ME count (Fig. 9 —
+            # extra engines seized but unusable); drain VE work is
+            # pipelined inside the op span.
+            span = chunk.cycles / max(chunk.n_engines, 1)
+            op = rt.spec.program.ops[chunk.group_key]
+            frac = min(chunk.cycles / max(op.me_cycles, EPS), 1.0)
+            span = max(span, op.ve_cycles * frac / max(rt.spec.program.n_y, 1))
+        else:
+            # VLIW VE op addresses every VE slot granted at dispatch
+            span = chunk.cycles / max(n_dispatched, 1)
+        if chunk.hbm_bytes > 0:
+            # two-level fair sharing (computed at dispatch): HBM BW is
+            # split across tenants with in-flight DMA (§III-B "fair
+            # sharing of HBM bandwidth"), then across THIS tenant's
+            # own in-flight memory chunks — so partitioning one
+            # operator into μTOps never manufactures bandwidth.
+            n_ten, n_mine = self._mem_pressure(chunk.tenant)
+            bw = (self.core.hbm_bytes_per_cycle * self.hbm_scale
+                  / n_ten / n_mine)
+            span = max(span, chunk.hbm_bytes / bw)
+        return span + chunk.penalty
+
+    def _mem_pressure(self, tenant: int) -> Tuple[int, int]:
+        """Max-min fair HBM sharing: only BANDWIDTH-BOUND in-flight
+        chunks contend (a compute-bound neighbor's trickle of weight
+        streaming doesn't halve a decode tenant's BW — §V-F: the
+        collocated LLM 'suffers negligible overhead')."""
+        bpc = self.core.hbm_bytes_per_cycle * self.hbm_scale
+        tenants = {tenant}
+        mine = 1  # the chunk being dispatched
+        seen = set()
+        for e in self.mes + self.ves:
+            c = e.chunk
+            if c is None or c.hbm_bytes <= 0 or id(c) in seen:
+                continue
+            seen.add(id(c))
+            # compute-bound chunks are not HBM contenders. Ties DO
+            # count: memory-paced μTOp chunks sit exactly at the
+            # boundary, and exempting them would let k sibling chunks
+            # stream at k x BW.
+            if c.hbm_bytes / bpc < c.cycles:
+                continue
+            tenants.add(e.tenant)
+            if e.tenant == tenant:
+                mine += 1
+        return len(tenants), mine
+
+    def _dispatch(self, chunk: Chunk, engines: List[_Engine], t: float,
+                  harvested: bool = False) -> None:
+        token = next(self._tok)
+        dur = self._duration(chunk, len(engines))
+        for e in engines:
+            e.token = token
+            e.chunk = chunk
+            e.tenant = chunk.tenant
+            e.start = t
+            e.end = t + dur
+            e.harvested = harvested
+        lead = engines[0]
+        heapq.heappush(
+            self._heap, (t + dur, next(self._seq), lead.kind, lead.eid, token))
+
+    def _preempt(self, eng: _Engine, t: float,
+                 blocked_owner: Optional[int] = None) -> None:
+        """Preempt the chunk on `eng` (and sibling engines for VLIW
+        ops): remaining work returns to its tenant's ready queue with
+        the context-switch penalty; engines drain for ctx cycles.
+        ``blocked_owner``: tenant reclaiming its engine — it eats the
+        drain window (Table III 'blocked because harvested')."""
+        chunk = eng.chunk
+        engines = self._engines_of(chunk)
+        # VE state is tiny vs the 256-cycle systolic drain (§III-G)
+        ctx = float(self.core.ctx_switch_cycles if chunk.kind == ME else 32)
+        # VLIW ops span every ME: their contexts drain serially through
+        # the shared SRAM port — V10 "needs to preempt the entire
+        # operator from ALL MEs" (§V-C), Neu10 only the harvested one.
+        ctx *= len(engines)
+        frac_done = (t - eng.start) / max(eng.end - eng.start, EPS)
+        frac_done = min(max(frac_done, 0.0), 1.0)
+        rt = self.tenants[eng.tenant]
+        remaining = Chunk(
+            chunk.tenant, chunk.kind, chunk.cycles * (1 - frac_done),
+            chunk.hbm_bytes * (1 - frac_done), chunk.op_name,
+            n_engines=chunk.n_engines, penalty=ctx,
+            group_key=chunk.group_key, from_me_group=chunk.from_me_group)
+        (rt.ready_me if chunk.kind == ME else rt.ready_ve).insert(0, remaining)
+        rt.stats.preemptions += 1
+        if blocked_owner is not None:
+            self.tenants[blocked_owner].stats.reclaim_blocked += ctx
+        # account the completed fraction as useful work
+        if chunk.kind == ME:
+            rt.stats.me_work += chunk.cycles * frac_done
+            if eng.harvested:
+                rt.stats.harvested_me_work += chunk.cycles * frac_done
+        else:
+            rt.stats.ve_work += chunk.cycles * frac_done
+        rt.active_cycles += chunk.cycles * frac_done / max(chunk.n_engines, 1)
+        # engines drain their state for ctx cycles
+        token = next(self._tok)
+        for e in engines:
+            e.token = token
+            e.chunk = None
+            e.tenant = -1
+            e.start = t
+            e.end = t + ctx
+            e.harvested = False
+        heapq.heappush(
+            self._heap,
+            (t + ctx, next(self._seq), engines[0].kind, engines[0].eid,
+             token))
+
+    # ------------------------------------------------------------------
+    def _schedule(self, t: float) -> None:
+        if self.policy in ("neu10", "neu10_nh"):
+            self._schedule_spatial(t, harvest=self.policy == "neu10")
+        elif self.policy == "v10":
+            self._schedule_v10(t)
+        else:
+            self._schedule_pmt(t)
+
+    # ---------------- Neu10 / Neu10-NH ----------------
+    def _schedule_spatial(self, t: float, harvest: bool) -> None:
+        # 1) owners dispatch on their own engines (MEs then VEs)
+        for pool, ready_attr in ((self.mes, "ready_me"), (self.ves, "ready_ve")):
+            for rt in self.tenants:
+                ready: List[Chunk] = getattr(rt, ready_attr)
+                if ready_attr == "ready_ve":
+                    # operation scheduler: prioritize drains of ME groups
+                    ready.sort(key=lambda c: not c.from_me_group)
+                own_free = [e for e in pool
+                            if e.owner == rt.idx and e.free]
+                while own_free and ready:
+                    self._dispatch(ready.pop(0), [own_free.pop(0)], t)
+                # 2) reclaim: preempt harvested μTOps on my engines.
+                # Engines drain in PARALLEL, so the owner is wall-
+                # blocked for ONE ctx window per reclaim pass (what
+                # Table III measures), however many engines it takes
+                # back.
+                if harvest and ready:
+                    reclaimed = 0
+                    for e in pool:
+                        if reclaimed >= len(ready):
+                            break
+                        if (e.owner == rt.idx and not e.free
+                                and e.chunk is not None
+                                and e.tenant != rt.idx):
+                            self._preempt(e, t)
+                            reclaimed += 1
+                    if reclaimed:
+                        ctx = float(self.core.ctx_switch_cycles
+                                    if pool is self.mes else 32)
+                        rt.stats.reclaim_blocked += ctx
+        if not harvest:
+            return
+        # 3) harvest: leftover ready chunks take others' idle engines.
+        for pool, ready_attr in ((self.mes, "ready_me"), (self.ves, "ready_ve")):
+            # only engines whose owner has no pending demand are up for
+            # harvest (§III-E scheduling policy)
+            for rt in sorted(self.tenants, key=lambda r: r.active_cycles):
+                ready = getattr(rt, ready_attr)
+                if not ready:
+                    continue
+                for e in pool:
+                    if not ready:
+                        break
+                    if not e.free or e.owner == rt.idx:
+                        continue
+                    owner = self.tenants[e.owner] if e.owner is not None else None
+                    owner_ready = getattr(owner, ready_attr) if owner else []
+                    if owner_ready:
+                        continue  # owner will use it this round
+                    self._dispatch(ready.pop(0), [e], t, harvested=True)
+
+    # ---------------- V10 ----------------
+    def _schedule_v10(self, t: float) -> None:
+        order = sorted(self.tenants,
+                       key=lambda r: r.active_cycles / r.spec.weight)
+        free_mes = [e for e in self.mes if e.free]
+        all_mes_free = len(free_mes) == len(self.mes)
+        for rt in order:
+            # ME op: needs the WHOLE ME array (VLIW coupling)
+            if rt.ready_me:
+                if all_mes_free:
+                    chunk = rt.ready_me.pop(0)
+                    self._dispatch(chunk, list(self.mes), t)
+                    all_mes_free = False
+                else:
+                    # priority-based preemption of the running op
+                    running = next((e for e in self.mes if not e.free
+                                    and e.chunk is not None), None)
+                    if running is not None and running.tenant >= 0:
+                        holder = self.tenants[running.tenant]
+                        deficit = (holder.active_cycles / holder.spec.weight
+                                   - rt.active_cycles / rt.spec.weight)
+                        if deficit > self.fair_slice:
+                            self._preempt(running, t)
+            # VE-only ops run on the free VE pool concurrently
+            if rt.ready_ve:
+                free_ves = [e for e in self.ves if e.free]
+                if free_ves:
+                    chunk = rt.ready_ve.pop(0)
+                    self._dispatch(chunk, free_ves, t)
+        # note: dispatching a VE op across k free VEs divides its span
+        # (VLIW VE ops address all VE slots).
+
+    # ---------------- PMT ----------------
+    def _schedule_pmt(self, t: float) -> None:
+        # whole core belongs to one tenant at a time (PREMA-style
+        # task-level sharing): the core changes hands at operator
+        # boundaries only when the fair-share deficit is large —
+        # switches are coarse and expensive.
+        busy = any(not e.free for e in self.mes + self.ves)
+        if busy:
+            return
+        order = sorted(
+            (rt for rt in self.tenants if rt.ready_me or rt.ready_ve),
+            key=lambda r: r.active_cycles / r.spec.weight)
+        if not order:
+            return
+        rt = order[0]
+        last = getattr(self, "_pmt_last", None)
+        if last is not None and last != rt.idx:
+            holder = self.tenants[last]
+            if holder.ready_me or holder.ready_ve:
+                deficit = (holder.active_cycles / holder.spec.weight
+                           - rt.active_cycles / rt.spec.weight)
+                if deficit < 4 * self.fair_slice:
+                    rt = holder  # keep the core; not worth a switch yet
+        # whole-core context switch cost when the core changes hands
+        penalty = 0.0
+        if getattr(self, "_pmt_last", None) not in (None, rt.idx):
+            penalty = float(self.core.ctx_switch_cycles * self.core.n_me)
+        self._pmt_last = rt.idx
+        if rt.ready_me:
+            chunk = rt.ready_me.pop(0)
+            chunk.penalty += penalty
+            self._dispatch(chunk, list(self.mes), t)
+        elif rt.ready_ve:
+            chunk = rt.ready_ve.pop(0)
+            chunk.penalty += penalty
+            self._dispatch(chunk, list(self.ves), t)
+
+
+# ----------------------------------------------------------------------
+def run_collocation(
+    specs: Sequence[TenantSpec],
+    policy: str,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    hbm_scale: float = 1.0,
+) -> SimResult:
+    return Simulator(specs, policy=policy, core=core,
+                     hbm_scale=hbm_scale).run()

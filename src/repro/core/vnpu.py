@@ -1,0 +1,122 @@
+"""vNPU: the paper's new system abstraction (§III-A).
+
+A vNPU is a virtual NPU device exposed to a tenant: a number of MEs
+and VEs, SRAM/HBM allocations, and a lifecycle
+(CREATE -> MAP -> ACTIVE -> DESTROYED). The guest-visible hierarchy
+(chips/cores) mirrors a physical board; the control-plane calls here
+correspond to the paper's hypercalls (create / reconfigure /
+deallocate) routed to the vNPU manager.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
+
+
+class VNPUState(enum.Enum):
+    CREATED = "created"
+    MAPPED = "mapped"
+    ACTIVE = "active"
+    DESTROYED = "destroyed"
+
+
+@dataclass
+class VNPUConfig:
+    """User-facing pay-as-you-go spec (Fig. 10)."""
+
+    n_me: int
+    n_ve: int
+    sram_bytes: int = 0        # 0 -> proportional to MEs (§III-B)
+    hbm_bytes: int = 0
+    n_cores: int = 1
+    n_chips: int = 1
+    priority: float = 1.0      # temporal-sharing fair-share weight
+
+    @property
+    def n_eus(self) -> int:
+        return self.n_me + self.n_ve
+
+    def validate(self, core: NPUCoreConfig = DEFAULT_CORE) -> None:
+        if self.n_me < 1 or self.n_ve < 1:
+            raise ValueError("each vNPU gets at least 1 ME and 1 VE (§III-B)")
+        if self.n_me > core.n_me or self.n_ve > core.n_ve:
+            raise ValueError(
+                f"vNPU ({self.n_me}ME/{self.n_ve}VE) exceeds pNPU core "
+                f"({core.n_me}ME/{core.n_ve}VE); allocate more vNPU cores instead"
+            )
+
+
+# preset sizes the paper suggests cloud providers expose (§III-A)
+PRESETS = {
+    "small": VNPUConfig(n_me=1, n_ve=1),
+    "medium": VNPUConfig(n_me=4, n_ve=4),
+    "large": VNPUConfig(n_me=8, n_ve=8, n_cores=2),
+}
+
+
+@dataclass
+class MemorySegments:
+    """Fixed-size-segment address-space isolation (§III-C)."""
+
+    sram_segments: Tuple[int, ...] = ()
+    hbm_segments: Tuple[int, ...] = ()
+    sram_segment_size: int = DEFAULT_CORE.sram_segment
+    hbm_segment_size: int = DEFAULT_CORE.hbm_segment
+
+    def translate(self, space: str, vaddr: int) -> int:
+        """Virtual -> physical: base-plus-offset within the segment
+        list. Raises (page fault) on out-of-range access."""
+        segs, size = (
+            (self.sram_segments, self.sram_segment_size)
+            if space == "sram"
+            else (self.hbm_segments, self.hbm_segment_size)
+        )
+        idx, off = divmod(vaddr, size)
+        if vaddr < 0 or idx >= len(segs):
+            raise MemoryError(
+                f"vNPU page fault: {space} vaddr {vaddr:#x} outside the "
+                f"{len(segs)}-segment allocation"
+            )
+        return segs[idx] * size + off
+
+    @property
+    def sram_bytes(self) -> int:
+        return len(self.sram_segments) * self.sram_segment_size
+
+    @property
+    def hbm_bytes(self) -> int:
+        return len(self.hbm_segments) * self.hbm_segment_size
+
+
+_ids = itertools.count()
+
+
+@dataclass
+class VNPU:
+    """A vNPU instance tracked by the vNPU manager."""
+
+    config: VNPUConfig
+    name: str = ""
+    vnpu_id: int = field(default_factory=lambda: next(_ids))
+    state: VNPUState = VNPUState.CREATED
+    # filled in by the mapper
+    pnpu_id: Optional[int] = None
+    core_id: Optional[int] = None
+    me_ids: Tuple[int, ...] = ()
+    ve_ids: Tuple[int, ...] = ()
+    segments: Optional[MemorySegments] = None
+    mapping: str = "spatial"  # "spatial" (hw-isolated) | "temporal"
+
+    def __post_init__(self):
+        if not self.name:
+            self.name = f"vnpu{self.vnpu_id}"
+
+    def destroy(self) -> None:
+        self.state = VNPUState.DESTROYED
+        self.me_ids = ()
+        self.ve_ids = ()
+        self.segments = None

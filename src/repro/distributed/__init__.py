@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    param_specs,
+    state_specs,
+)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "state_specs",
+           "dp_axes"]

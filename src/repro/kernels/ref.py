@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q: (BH, Sq, hd); k/v: (BH, Sk, hd) — kv already head-matched.
+    fp32 softmax, output in q.dtype."""
+    _, sq, hd = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqh,bkh->bqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        scores = jnp.where(mask[None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", w.astype(v.dtype), v)
+
+
+def gqa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, S, Hkv, hd). Returns (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, -1, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, -1, hd)
+    o = attention_ref(qf, kf, vf, causal)
+    return o.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (E, C, d); w: (E, d, f) -> (E, C, f). fp32 accumulation."""
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out.astype(x.dtype)

@@ -1,0 +1,55 @@
+"""Step functions the launch layer lowers/executes: train_step (fwd +
+bwd + AdamW + WSD schedule), prefill_step, decode_step."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import wsd_schedule
+
+TrainState = Dict[str, Any]
+
+
+def init_train_state(model: Model, key, dtype=jnp.float32) -> TrainState:
+    params = model.init(key, dtype)
+    opt = adamw_init(params)
+    return {"params": params, **opt}
+
+
+def make_train_step(model: Model, peak_lr: float = 3e-4,
+                    warmup: int = 2000, stable: int = 80_000,
+                    decay: int = 20_000):
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        def loss_fn(params):
+            loss, metrics = model.loss(params, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        lr = wsd_schedule(state["step"], peak_lr, warmup, stable, decay)
+        new_params, new_opt = adamw_update(
+            state["params"], grads,
+            {"m": state["m"], "v": state["v"], "step": state["step"]}, lr)
+        new_state = {"params": new_params, **new_opt}
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return decode_step

@@ -1,0 +1,365 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM /
+sLSTM).
+
+The SSD chunked algorithm is shared: mLSTM is instantiated as SSD
+with per-head B=k, C=q, x=v and sigmoid forget-gate log-decay, with
+the mLSTM normalizer obtained by augmenting x with a ones-channel
+(the denominator state n·q falls out of the same recurrence).
+
+Prefill/train use the chunked parallel form (scan over chunks,
+quadratic within a chunk); decode is the O(1) recurrent step. Both
+carry an explicit state pytree so the stacks can scan over layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+
+# ======================================================================
+# SSD core (shared by Mamba2 and mLSTM)
+# ======================================================================
+def ssd_chunked(
+    x: jax.Array,      # (b, s, h, p)   already includes dt/input gate
+    a: jax.Array,      # (b, s, h)      per-step log decay (<= 0)
+    B: jax.Array,      # (b, s, g, n)   g in {1, h}
+    C: jax.Array,      # (b, s, g, n)
+    chunk: int,
+    h_init: Optional[jax.Array] = None,   # (b, h, n, p)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (b,s,h,p), final_state (b,h,n,p))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    L = min(chunk, s)
+    pad = (-s) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // L
+
+    def to_chunks(t):  # (b, sp, ...) -> (nc, b, L, ...)
+        return jnp.moveaxis(t.reshape(b, nc, L, *t.shape[2:]), 1, 0)
+
+    xc, ac, Bc, Cc = map(to_chunks, (x, a, B, C))
+    a32 = ac.astype(jnp.float32)
+    a_cs = jnp.cumsum(a32, axis=2)                    # (nc,b,L,h)
+    a_sum = a_cs[:, :, -1:, :]                        # (nc,b,1,h)
+
+    # head-broadcast helper for grouped B/C
+    def bc(t):  # (nc,b,L,g,n) -> (nc,b,L,h,n)
+        return jnp.broadcast_to(
+            t if g == h else jnp.repeat(t, h // g, axis=3),
+            t.shape[:3] + (h, n))
+
+    Bh, Ch = bc(Bc), bc(Cc)
+
+    if h_init is None:
+        h_init = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def chunk_step(state, inp):
+        xcc, acs, asum, Bcc, Ccc = inp
+        # inter-chunk: y_l += exp(a_cs[l]) * C_l . S_prev
+        decay_in = jnp.exp(acs)                       # (b,L,h)
+        y_inter = jnp.einsum("blhn,bhnp->blhp",
+                             Ccc.astype(jnp.float32) * decay_in[..., None],
+                             state)
+        # intra-chunk (causal, decay-weighted). Mask BEFORE exp: the
+        # anti-causal deltas are positive and overflow to inf, which
+        # would poison gradients through the where (inf * 0 = nan).
+        delta = acs[:, :, None, :] - acs[:, None, :, :]          # (b,L,L,h)
+        causal = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        dmat = jnp.exp(jnp.where(causal, delta, -jnp.inf))
+        CB = jnp.einsum("blhn,bmhn->blmh", Ccc.astype(jnp.float32),
+                        Bcc.astype(jnp.float32))
+        W = CB * dmat
+        y_intra = jnp.einsum("blmh,bmhp->blhp", W, xcc.astype(jnp.float32))
+        # chunk-local state + carry update
+        decay_out = jnp.exp(asum - acs)               # (b,L,h)
+        S_loc = jnp.einsum("blhn,blh,blhp->bhnp",
+                           Bcc.astype(jnp.float32), decay_out,
+                           xcc.astype(jnp.float32))
+        state = jnp.exp(asum[:, 0, :])[..., None, None] * state + S_loc
+        return state, y_inter + y_intra
+
+    final, ys = jax.lax.scan(chunk_step, h_init, (xc, a_cs, a_sum, Bh, Ch))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(
+    x: jax.Array,      # (b, h, p)
+    a: jax.Array,      # (b, h) log decay
+    B: jax.Array,      # (b, g, n)
+    C: jax.Array,      # (b, g, n)
+    state: jax.Array,  # (b, h, n, p) fp32
+) -> Tuple[jax.Array, jax.Array]:
+    b, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    if g != h:
+        B = jnp.repeat(B, h // g, axis=1)
+        C = jnp.repeat(C, h // g, axis=1)
+    decay = jnp.exp(a.astype(jnp.float32))[..., None, None]
+    state = decay * state + jnp.einsum(
+        "bhn,bhp->bhnp", B.astype(jnp.float32), x.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", C.astype(jnp.float32), state)
+    return y.astype(x.dtype), state
+
+
+# ======================================================================
+# Mamba2 block
+# ======================================================================
+def mamba2_init(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    """Projections kept SEPARATE (w_z / w_x / w_B / w_C / w_dt) so each
+    shards cleanly under TP — a fused in_proj has split points that do
+    not align with 16-way shards (see repro/distributed/sharding.py)."""
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nh = cfg.ssm_heads
+    st = cfg.ssm_state
+    kconv = cfg.ssm_conv
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "w_z": _dense_init(ks[0], d, d_in, dtype),
+        "w_x": _dense_init(ks[1], d, d_in, dtype),
+        "w_B": _dense_init(ks[2], d, st, dtype),
+        "w_C": _dense_init(ks[3], d, st, dtype),
+        "w_dt": _dense_init(ks[4], d, nh, dtype),
+        "conv_w": (jax.random.normal(ks[5], (kconv, d_in), jnp.float32)
+                   * (1.0 / math.sqrt(kconv))).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "conv_w_bc": (jax.random.normal(ks[6], (kconv, 2 * st), jnp.float32)
+                      * (1.0 / math.sqrt(kconv))).astype(dtype),
+        "conv_b_bc": jnp.zeros((2 * st,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": rmsnorm_init(d_in, dtype),
+        "out_proj": _dense_init(ks[0], d_in, d, dtype),
+    }
+
+
+def mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    d_in = cfg.ssm_expand * cfg.d_model
+    return {
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * cfg.ssm_state),
+                             dtype),
+    }
+
+
+def _causal_conv(w: jax.Array, bias: jax.Array, xc: jax.Array,
+                 conv_state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, kernel k. xc: (b, s, ch)."""
+    k = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((xc.shape[0], k - 1, xc.shape[2]), xc.dtype)
+    xx = jnp.concatenate([conv_state.astype(xc.dtype), xc], axis=1)
+    new_state = xx[:, -(k - 1):, :]
+    out = jnp.zeros_like(xc)
+    for i in range(k):
+        out = out + xx[:, i:i + xc.shape[1], :] * w[i]
+    return jax.nn.silu(out + bias.astype(out.dtype)), new_state
+
+
+def mamba2_apply(
+    p: Params, cfg: ModelConfig, x: jax.Array,
+    state: Optional[Params] = None, decode: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """x: (b, s, d). decode=True requires s == 1 and a state."""
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    nh, st, hd = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    res = x
+    x = rmsnorm(p["norm"], x, cfg.norm_eps)
+    z = x @ p["w_z"]
+    x_c = x @ p["w_x"]
+    bc = jnp.concatenate([x @ p["w_B"], x @ p["w_C"]], axis=-1)
+    dt_raw = x @ p["w_dt"]
+    conv_state = state["conv"] if state is not None else None
+    conv_state_bc = state["conv_bc"] if state is not None else None
+    x_c, new_conv = _causal_conv(p["conv_w"], p["conv_b"], x_c, conv_state)
+    bc, new_conv_bc = _causal_conv(p["conv_w_bc"], p["conv_b_bc"], bc,
+                                   conv_state_bc)
+    x_ssm = x_c.reshape(b, s, nh, hd)
+    Bmat = bc[..., :st].reshape(b, s, 1, st)
+    Cmat = bc[..., st:].reshape(b, s, 1, st)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,s,nh)
+    A = -jnp.exp(p["A_log"])                                          # (nh,)
+    a_log = dt * A[None, None, :]
+    x_in = x_ssm * dt.astype(x_ssm.dtype)[..., None]
+
+    if decode:
+        y, new_ssm = ssd_step(
+            x_in[:, 0], a_log[:, 0], Bmat[:, 0], Cmat[:, 0], state["ssm"])
+        y = y[:, None]
+    else:
+        h0 = state["ssm"] if state is not None else None
+        y, new_ssm = ssd_chunked(x_in, a_log, Bmat, Cmat, cfg.ssm_chunk, h0)
+    y = y + x_ssm * p["D"].astype(x_ssm.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = res + y @ p["out_proj"]
+    new_state = None
+    if state is not None or decode:
+        new_state = {"ssm": new_ssm, "conv": new_conv,
+                     "conv_bc": new_conv_bc}
+    return out, new_state
+
+
+# ======================================================================
+# xLSTM blocks
+# ======================================================================
+def mlstm_init(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    """q/k/v and the two up-projections kept separate so each column
+    dim TP-shards without split-point misalignment."""
+    d = cfg.d_model
+    up = int(cfg.xlstm_proj_factor * d)
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "w_u": _dense_init(ks[0], d, up, dtype),
+        "w_z": _dense_init(ks[1], d, up, dtype),
+        "wq": _dense_init(ks[2], up, up, dtype),
+        "wk": _dense_init(ks[3], up, up, dtype),
+        "wv": _dense_init(ks[4], up, up, dtype),
+        "w_if": _dense_init(ks[5], up, 2 * cfg.n_heads, dtype),
+        "out_norm": rmsnorm_init(up, dtype),
+        "w_down": _dense_init(ks[6], up, d, dtype),
+    }
+
+
+def mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    up = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    hd = up // H
+    return {"C": jnp.zeros((batch, H, hd, hd + 1), jnp.float32)}
+
+
+def mlstm_apply(
+    p: Params, cfg: ModelConfig, x: jax.Array,
+    state: Optional[Params] = None, decode: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    up = int(cfg.xlstm_proj_factor * d)
+    H = cfg.n_heads
+    hd = up // H
+    res = x
+    x = rmsnorm(p["norm"], x, cfg.norm_eps)
+    u = x @ p["w_u"]
+    z = x @ p["w_z"]
+    q = (u @ p["wq"]).reshape(b, s, H, hd) / math.sqrt(hd)
+    k = (u @ p["wk"]).reshape(b, s, H, hd)
+    v = (u @ p["wv"]).reshape(b, s, H, hd)
+    gates = (u @ p["w_if"]).astype(jnp.float32)
+    i_g = jax.nn.sigmoid(gates[..., :H])                    # (b,s,H)
+    f_g = jax.nn.sigmoid(gates[..., H:]) * 0.999 + 1e-4
+    a_log = jnp.log(f_g)
+    # augment v with a ones channel -> numerator & normalizer together
+    v_aug = jnp.concatenate(
+        [v, jnp.ones((b, s, H, 1), v.dtype)], axis=-1)
+    x_in = v_aug * i_g.astype(v.dtype)[..., None]
+    if decode:
+        y_aug, newC = ssd_step(x_in[:, 0], a_log[:, 0], k[:, 0], q[:, 0],
+                               state["C"])
+        y_aug = y_aug[:, None]
+    else:
+        h0 = state["C"] if state is not None else None
+        y_aug, newC = ssd_chunked(x_in, a_log, k, q,
+                                  min(cfg.ssm_chunk or 128, 128), h0)
+    num, den = y_aug[..., :hd], y_aug[..., hd:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0).astype(num.dtype)
+    y = y.reshape(b, s, up)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = res + y @ p["w_down"]
+    new_state = {"C": newC} if (state is not None or decode) else None
+    return out, new_state
+
+
+def slstm_init(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    up = int(cfg.xlstm_proj_factor * d)
+    H = cfg.n_heads
+    hd = up // H
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "w_up": _dense_init(ks[0], d, up, dtype),
+        "w_gates": _dense_init(ks[1], up, 4 * up, dtype),
+        "r_gates": (jax.random.normal(ks[2], (H, hd, 4 * hd), jnp.float32)
+                    * (1.0 / math.sqrt(hd))).astype(dtype),
+        "out_norm": rmsnorm_init(up, dtype),
+        "w_down": _dense_init(ks[3], up, d, dtype),
+    }
+
+
+def slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    up = int(cfg.xlstm_proj_factor * cfg.d_model)
+    return {
+        "c": jnp.zeros((batch, up), jnp.float32),
+        "n": jnp.ones((batch, up), jnp.float32),
+        "h": jnp.zeros((batch, up), jnp.float32),
+    }
+
+
+def _slstm_cell(p: Params, cfg: ModelConfig, xg: jax.Array, st: Params):
+    """xg: (b, 4*up) pre-activation from the input path."""
+    H = cfg.n_heads
+    b = xg.shape[0]
+    up = xg.shape[1] // 4
+    hd = up // H
+    h_prev = st["h"].reshape(b, H, hd).astype(p["r_gates"].dtype)
+    rec = jnp.einsum("bhd,hdk->bhk", h_prev, p["r_gates"]).reshape(b, 4 * up)
+    zifo = (xg + rec).astype(jnp.float32)
+    z_t, i_t, f_t, o_t = jnp.split(zifo, 4, axis=-1)
+    z_t = jnp.tanh(z_t)
+    i_t = jax.nn.sigmoid(i_t)
+    f_t = jax.nn.sigmoid(f_t)
+    o_t = jax.nn.sigmoid(o_t)
+    c = f_t * st["c"] + i_t * z_t
+    n = f_t * st["n"] + i_t
+    h = o_t * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h}
+
+
+def slstm_apply(
+    p: Params, cfg: ModelConfig, x: jax.Array,
+    state: Optional[Params] = None, decode: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    up = int(cfg.xlstm_proj_factor * d)
+    res = x
+    x = rmsnorm(p["norm"], x, cfg.norm_eps)
+    u = x @ p["w_up"]
+    xg = u @ p["w_gates"]                                   # (b, s, 4*up)
+    st = state if state is not None else slstm_state(cfg, b)
+    if decode:
+        st = _slstm_cell(p, cfg, xg[:, 0], st)
+        y = st["h"][:, None].astype(x.dtype)
+        new_state = st
+    else:
+        def step(carry, xg_t):
+            carry = _slstm_cell(p, cfg, xg_t, carry)
+            return carry, carry["h"]
+
+        new_state, hs = jax.lax.scan(step, st, jnp.moveaxis(xg, 1, 0))
+        y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+        if state is None:
+            new_state = None
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    out = res + y @ p["w_down"]
+    return out, new_state

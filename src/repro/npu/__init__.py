@@ -1,0 +1,20 @@
+"""NPU hardware model: core config (paper Table II), analytic
+operator cost model, and workload trace generation.
+
+This package replaces the paper's real-TPUv4 profiling step: traces
+carry the exact schema the paper replays (per-operator ME/VE time,
+HBM bytes, tensor shapes, tiling) but are derived analytically from
+the model-zoo configs. See DESIGN.md §2.
+"""
+from repro.npu.hw_config import NPUCoreConfig, TPUv5eRoofline, DEFAULT_CORE
+from repro.npu.cost_model import Operator, matmul_op, vector_op, memory_op
+
+__all__ = [
+    "NPUCoreConfig",
+    "TPUv5eRoofline",
+    "DEFAULT_CORE",
+    "Operator",
+    "matmul_op",
+    "vector_op",
+    "memory_op",
+]

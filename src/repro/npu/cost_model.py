@@ -1,0 +1,220 @@
+"""Analytic operator cost model for the NPU core.
+
+Maps tensor operators onto (ME cycles, VE cycles, HBM bytes) plus the
+tiling metadata the NeuISA compiler needs (how many independent ME
+partitions exist, and whether the partition had to cut the reduction
+dimension — the Fig. 16 overhead case).
+
+Conventions
+-----------
+* ``me_cycles`` / ``ve_cycles`` are TOTAL work expressed as cycles on
+  ONE engine; executing on ``k`` engines divides the span by ``k``
+  (the trailing fill/drain inefficiency is already baked into
+  ``me_cycles`` via the block model below).
+* Matrix engine model: a ``me_dim x me_dim`` weight-stationary block
+  takes ``rows + me_dim`` cycles to stream ``rows`` activations
+  (fill + drain). Total cycles = #weight-blocks x (rows + me_dim).
+  This reproduces the paper's Fig. 6 behavior: an 8-row pop takes 8
+  cycles of VE post-processing per 8x128 vector but ~me_dim cycles of
+  ME time, so VEs idle during ME-heavy ops and MXU utilization
+  collapses for small-row (decode) matmuls.
+* Vector engine model: ``elems / (lanes * ops_per_lane)`` cycles.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
+
+
+@dataclass
+class Operator:
+    """One tensor operator in a workload trace (paper §III-G schema)."""
+
+    name: str
+    me_cycles: float = 0.0
+    ve_cycles: float = 0.0
+    hbm_bytes: float = 0.0
+    # tiling metadata (selected by the "compiler")
+    n_tiles: int = 1              # independent output partitions for MEs
+    reduction_split: bool = False  # K-dim partition -> trailing VE-reduce
+    fused_ve: bool = True          # VE work rides in ME uTOps' VE slots
+    out_elems: float = 0.0        # output size (reduce cost on K-splits)
+    shapes: Tuple[Tuple[int, ...], ...] = ()
+
+    @property
+    def kind(self) -> str:
+        if self.me_cycles <= 0 and self.ve_cycles <= 0:
+            return "mem"
+        if self.me_cycles <= 0:
+            return "ve"
+        return "me"
+
+    def scaled(self, factor: float) -> "Operator":
+        return Operator(
+            self.name,
+            me_cycles=self.me_cycles * factor,
+            ve_cycles=self.ve_cycles * factor,
+            hbm_bytes=self.hbm_bytes * factor,
+            n_tiles=self.n_tiles,
+            reduction_split=self.reduction_split,
+            fused_ve=self.fused_ve,
+            out_elems=self.out_elems,
+            shapes=self.shapes,
+        )
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def matmul_op(
+    name: str,
+    m: int,
+    k: int,
+    n: int,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    dtype_bytes: int = 2,
+    ve_post_elems: float = 0.0,
+    weight_resident: bool = False,
+    act_in_sram: bool = True,
+    out_to_hbm: bool = False,
+) -> Operator:
+    """(m,k) @ (k,n) on the systolic MEs.
+
+    ``ve_post_elems``: extra per-output VE work fused into the op
+    (bias/activation/residual), in elements; defaults to a pop-side
+    aggregation of 1 op per output element (the VE must always drain
+    the systolic array — paper Fig. 6).
+    """
+    md = core.me_dim
+    blocks = _ceil_div(k, md) * _ceil_div(n, md)
+    # Per weight-stationary block: stream `m` activation rows through
+    # the array; the next block's weights load in the shadow (double
+    # buffered) at HBM rate (or SRAM rate when the operand is
+    # resident). Small-row (decode) matmuls thus become weight-stream
+    # paced — the paper's §V-F "memory-bound, MEs underutilized" case.
+    w_stream = (md * md * dtype_bytes) / core.hbm_bytes_per_cycle
+    if weight_resident:
+        w_stream = 8.0  # SRAM-resident operand: near-free reload
+    me_cycles = blocks * max(float(m), w_stream) + md
+    # VE drains every output vector + any fused epilogue
+    ve_elems = m * n + ve_post_elems
+    ve_cycles = ve_elems / core.ve_elems_per_cycle
+
+    hbm = 0.0
+    if not weight_resident:
+        hbm += k * n * dtype_bytes          # stream weights once
+    if not act_in_sram:
+        hbm += m * k * dtype_bytes
+    if out_to_hbm:
+        hbm += m * n * dtype_bytes
+
+    # tiling: prefer output partitions. A partition must amortize the
+    # array fill/drain, so the compiler's tile floor is 128 rows x 256
+    # cols (the same floor as the Pallas kernels' BlockSpecs) — small
+    # operators therefore CANNOT fill every ME, which is exactly the
+    # paper's Fig. 9 false-contention case for VLIW baselines.
+    out_tiles = _ceil_div(m, md) * _ceil_div(n, 2 * md)
+    reduction_split = False
+    n_tiles = out_tiles
+    if out_tiles < core.n_me and _ceil_div(k, md) >= 2:
+        n_tiles = min(core.n_me, _ceil_div(k, md))
+        reduction_split = True
+    return Operator(
+        name,
+        me_cycles=float(me_cycles),
+        ve_cycles=float(ve_cycles),
+        hbm_bytes=float(hbm),
+        n_tiles=max(int(n_tiles), 1),
+        reduction_split=reduction_split,
+        out_elems=float(m * n),
+        shapes=((m, k), (k, n)),
+    )
+
+
+def vector_op(
+    name: str,
+    elems: float,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    flops_per_elem: float = 1.0,
+    hbm_bytes: float = 0.0,
+) -> Operator:
+    """Pure VE operator (softmax, norm, activation, rope, scan step...)."""
+    cycles = elems * flops_per_elem / core.ve_elems_per_cycle
+    return Operator(
+        name,
+        ve_cycles=float(cycles),
+        hbm_bytes=float(hbm_bytes),
+        n_tiles=1,
+        shapes=((int(elems),),),
+    )
+
+
+def memory_op(
+    name: str,
+    hbm_bytes: float,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    ve_elems: float = 0.0,
+) -> Operator:
+    """HBM-dominated operator (embedding gather, KV-cache read...).
+
+    The VEs issue the gathers/DMA descriptors, so their active time is
+    paced by HBM bandwidth — this is what makes DLRM/NCF "VE-intensive"
+    in the paper's Fig. 4/5 even though they do little arithmetic.
+    """
+    issue_cycles = ve_elems / core.ve_elems_per_cycle if ve_elems else 0.0
+    ve_cycles = max(issue_cycles, hbm_bytes / core.hbm_bytes_per_cycle)
+    return Operator(
+        name,
+        ve_cycles=float(ve_cycles),
+        hbm_bytes=float(hbm_bytes),
+        n_tiles=1,
+    )
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class WorkloadTrace:
+    """A sequence of dependent operators = one inference request.
+
+    Matches the paper's replayed trace: DNN inference graphs are
+    (post-fusion) a dependency chain of operators; intra-operator
+    parallelism is expressed through ``n_tiles``.
+    """
+
+    name: str
+    ops: List[Operator] = field(default_factory=list)
+    hbm_footprint: float = 0.0   # resident bytes (weights + cache)
+    core: NPUCoreConfig = DEFAULT_CORE
+
+    def extend(self, ops: List[Operator]) -> None:
+        self.ops.extend(ops)
+
+    # -- §III-B profile: run on 1 ME + 1 VE, ME/VE pipelined per op --
+    def profile_mv(self) -> Tuple[float, float]:
+        """Returns (m, v): ME / VE active-time fractions on a 1ME+1VE
+        core (compile-time profile the vNPU allocator consumes)."""
+        t_total = me_t = ve_t = 0.0
+        for op in self.ops:
+            span = max(op.me_cycles, op.ve_cycles, 1e-9)
+            t_total += span
+            me_t += op.me_cycles
+            ve_t += op.ve_cycles
+        if t_total <= 0:
+            return 0.0, 0.0
+        return me_t / t_total, ve_t / t_total
+
+    def totals(self) -> Tuple[float, float, float]:
+        return (
+            sum(o.me_cycles for o in self.ops),
+            sum(o.ve_cycles for o in self.ops),
+            sum(o.hbm_bytes for o in self.ops),
+        )
+
+    def ideal_cycles(self, n_me: int, n_ve: int) -> float:
+        """Lower bound: perfectly parallel + overlapped execution."""
+        me, ve, hbm = self.totals()
+        return max(me / n_me, ve / n_ve, hbm / self.core.hbm_bytes_per_cycle)

@@ -1,0 +1,24 @@
+"""LR schedules. WSD (warmup-stable-decay) is the MiniCPM schedule
+[arXiv:2404.06395] — assigned arch minicpm-2b trains with it."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, peak_lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    in_decay = jnp.clip((s - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+    # exponential-style decay to final_frac (MiniCPM uses ~0.1 * peak)
+    decayed = peak_lr * jnp.exp(jnp.log(final_frac) * in_decay)
+    return jnp.where(s < warmup + stable, warm, decayed)
+
+
+def cosine_schedule(step, peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    t = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup, warm, peak_lr * cos)

@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeEngine
+from repro.serve.vserve import MultiTenantServer, Tenant
+
+__all__ = ["ServeEngine", "MultiTenantServer", "Tenant"]

@@ -1,0 +1,77 @@
+"""§III-B allocator: Eq. 1-4 correctness + optimality properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import (
+    allocate_eus,
+    eu_utilization,
+    estimate_memory,
+    normalized_exec_time,
+    optimal_ratio,
+)
+from repro.npu.cost_model import WorkloadTrace, vector_op
+from repro.npu.hw_config import NPUCoreConfig
+
+
+def test_eq1_known_values():
+    # m=1, v=1: fully overlapped -> T = 0/n_m + 0/n_v + 1/min
+    assert normalized_exec_time(1.0, 1.0, 2, 2) == pytest.approx(0.5)
+    # m=1, v=0.5 on 1ME/1VE: T = 0.5 + 0 + 0.5 = 1
+    assert normalized_exec_time(1.0, 0.5, 1, 1) == pytest.approx(1.0)
+
+
+def test_eq4_closed_form():
+    assert optimal_ratio(0.2, 0.9) == pytest.approx(math.sqrt(0.2 / 0.8))
+    assert optimal_ratio(0.9, 0.2) == pytest.approx(math.sqrt(0.8 / 0.2))
+    assert optimal_ratio(0.7, 0.6) == 1.0
+
+
+@given(
+    m=st.floats(0.05, 1.0),
+    v=st.floats(0.05, 1.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_eq4_maximizes_eq2(m, v):
+    """The paper's closed-form k* must beat any other ratio on the
+    continuous relaxation (checked on a fine grid)."""
+    if m + v < 1.0:  # infeasible per the paper's model
+        return
+    k_star = optimal_ratio(m, v)
+    # evaluate U on the continuous relaxation (n_m, n_v) = (10k, 10)
+    # (scaled so both exceed the >=1 engine-count guard)
+    def u_of_k(k):
+        return eu_utilization(m, v, max(k, 1e-6) * 10.0, 10.0)
+
+    u_star = u_of_k(k_star)
+    for k in [0.1, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 4.0, 8.0]:
+        assert u_star >= u_of_k(k) - 1e-6
+
+
+@given(
+    m=st.floats(0.05, 1.0),
+    v=st.floats(0.05, 1.0),
+    total=st.integers(2, 8),
+)
+@settings(max_examples=200, deadline=None)
+def test_integer_allocation_is_exhaustive_optimum(m, v, total):
+    if m + v < 1.0:
+        return
+    core = NPUCoreConfig(n_me=8, n_ve=8)
+    alloc = allocate_eus(m, v, total, core)
+    assert alloc.n_me + alloc.n_ve == total
+    assert alloc.n_me >= 1 and alloc.n_ve >= 1
+    best = max(
+        eu_utilization(m, v, nm, total - nm) for nm in range(1, total))
+    assert alloc.utilization == pytest.approx(best)
+
+
+def test_memory_rounding_to_segments():
+    core = NPUCoreConfig()
+    tr = WorkloadTrace("w", [vector_op("x", 1024, core)],
+                       hbm_footprint=1.5 * core.hbm_segment, core=core)
+    sram, hbm = estimate_memory(tr, 2, core)
+    assert hbm == 2 * core.hbm_segment
+    assert sram % core.sram_segment == 0
+    assert sram == core.sram_bytes // 2  # proportional to 2/4 MEs

@@ -1,0 +1,96 @@
+"""Loop-trip-aware HLO metrics: unit tests on synthetic HLO text and
+an end-to-end check against a live compiled module."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (
+    _split_computations, collective_bytes, hlo_metrics)
+
+SYNTH = """\
+HloModule m
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %dot.1 = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %a = f32[8,16]{1,0} fusion(%p), kind=kLoop, calls=%fc.1
+  %b = f32[16,8]{1,0} fusion(%p), kind=kLoop, calls=%fc.2
+  %ar = f32[8,8]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%sum
+}
+
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %c = s32[] constant(10)
+  %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+ENTRY %main (x: f32[8,16]) -> f32[8,8] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %w = (s32[], f32[8,8]) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %dot.0 = f32[8,8]{1,0} dot(%x, %y), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[64,8]{1,0} all-gather(%dot.0), dimensions={0}
+}
+"""
+
+
+def test_split_computations_nested_tuple_params():
+    comps = _split_computations(SYNTH)
+    assert set(comps) >= {"body.1", "cond.1", "main"}
+    assert any(" dot(" in l for l in comps["body.1"])
+
+
+def test_loop_multiplied_flops():
+    m = hlo_metrics(SYNTH)
+    # entry dot: 2*8*8*16 = 2048; body dot x10 trips = 20480
+    assert m["hlo_flops"] == pytest.approx(2048 + 20480)
+
+
+def test_loop_multiplied_collectives():
+    c = collective_bytes(SYNTH)
+    # all-reduce f32[8,8] = 256B * 2 (factor) * 10 trips = 5120
+    assert c["all-reduce_bytes"] == pytest.approx(5120)
+    # all-gather f32[64,8] = 2048B * 1
+    assert c["all-gather_bytes"] == pytest.approx(2048)
+
+
+def test_live_module_scan_scaling():
+    """A scanned matmul's FLOPs must be counted trip_count times."""
+    w = jnp.ones((32, 32), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ w, None
+
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    hlo = jax.jit(f).lower(jnp.ones((32, 32))).compile().as_text()
+    m = hlo_metrics(hlo)
+    one = 2 * 32 * 32 * 32
+    assert m["hlo_flops"] == pytest.approx(7 * one, rel=0.01)
+
+
+BRANCH_SYNTH = """\
+HloModule b
+
+%br.1 (p: f32[4,4]) -> f32[4,4] {
+  %p = f32[4,4]{1,0} parameter(0)
+  %dot.9 = f32[4,4]{1,0} dot(%p, %p), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%br.2 (p: f32[4,4]) -> f32[4,4] {
+  %p = f32[4,4]{1,0} parameter(0)
+}
+
+ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+  %x = f32[4,4]{1,0} parameter(0)
+  %cc = f32[4,4]{1,0} conditional(%pred, %x, %x), true_computation=%br.1, false_computation=%br.2
+}
+"""
+
+
+def test_branch_scale():
+    full = hlo_metrics(BRANCH_SYNTH, branch_scale=1.0)["hlo_flops"]
+    half = hlo_metrics(BRANCH_SYNTH, branch_scale=0.5)["hlo_flops"]
+    assert full == pytest.approx(2 * 4 * 4 * 4)
+    assert half == pytest.approx(full / 2)

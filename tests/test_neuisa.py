@@ -1,0 +1,98 @@
+"""NeuISA compiler + program structure (§III-D)."""
+import pytest
+
+from repro.core.compiler import compile_neuisa, compile_vliw, neuisa_overhead_terms
+from repro.core.neuisa import ME, VE, MuTOp, MuTOpGroup, NeuISAProgram
+from repro.npu.cost_model import matmul_op, vector_op, WorkloadTrace
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.npu.workloads import get_workload
+
+
+def _trace():
+    core = DEFAULT_CORE
+    return WorkloadTrace("t", [
+        matmul_op("mm1", 512, 1024, 1024, core),
+        vector_op("act", 512 * 1024, core),
+        matmul_op("mm_small", 8, 4096, 8, core),   # reduction split
+    ], core=core)
+
+
+def test_group_structure_constraints():
+    prog = compile_neuisa(_trace())
+    prog.validate()
+    for g in prog.groups:
+        assert len(g.me_utops) <= prog.n_x
+    table = prog.exec_table()
+    assert len(table) == len(prog.groups)
+    assert all(len(row) == prog.n_x + 1 for row in table)
+
+
+def test_work_conservation():
+    tr = _trace()
+    prog = compile_neuisa(tr)
+    me_t, ve_t, hbm_t = tr.totals()
+    me_p, ve_p, hbm_p = prog.total_work()
+    assert me_p == pytest.approx(me_t, rel=1e-9)
+    assert hbm_p == pytest.approx(hbm_t, rel=1e-9)
+    assert ve_p >= ve_t - 1e-9  # reduction split may add VE work
+
+
+def test_reduction_split_adds_trailing_group():
+    tr = _trace()
+    prog = compile_neuisa(tr)
+    names = [g.op_name for g in prog.groups]
+    assert "mm_small:reduce" in names
+    i = names.index("mm_small:reduce")
+    assert prog.groups[i].ve_utop is not None
+    assert not prog.groups[i].me_utops
+
+
+def test_conflicting_next_group_raises():
+    g = MuTOpGroup(me_utops=[
+        MuTOp(ME, 10.0, 0, "a", 0, next_group=0),
+        MuTOp(ME, 10.0, 0, "a", 0, next_group=1),
+    ])
+    prog = NeuISAProgram("bad", [g, MuTOpGroup(ve_utop=MuTOp(VE, 1.0, 0, "b", 1))],
+                         n_x=4, n_y=4)
+    with pytest.raises(ValueError, match="conflicting"):
+        prog.validate()
+
+
+def test_snippet_sharing_bounds_code_size():
+    """μTOps partitioned from one operator share a snippet."""
+    prog = compile_neuisa(get_workload("BERT"))
+    assert prog.code_inflation() > 1.5  # heavy sharing on 24 layers
+    assert prog.n_snippets() < prog.n_utops() / 2
+
+
+def test_vliw_work_conservation():
+    tr = _trace()
+    prog = compile_vliw(tr)
+    me_t, ve_t, hbm_t = tr.totals()
+    me_p, ve_p, hbm_p = prog.total_work()
+    assert me_p == pytest.approx(me_t)
+    assert ve_p == pytest.approx(ve_t)
+    assert hbm_p == pytest.approx(hbm_t)
+
+
+def test_neuisa_overhead_small():
+    """Fig. 16: NeuISA costs <1% on average over VLIW for the paper's
+    workload set (reduction splits are rare in real traces)."""
+    overheads = []
+    for name in ("BERT", "TFMR", "RsNt", "ENet", "DLRM"):
+        t_vliw, t_neu = neuisa_overhead_terms(get_workload(name))
+        overheads.append(t_neu / t_vliw - 1.0)
+        assert t_neu >= t_vliw - 1e-9
+    assert sum(overheads) / len(overheads) < 0.01
+
+
+def test_loop_control_flow():
+    core = DEFAULT_CORE
+    tr = WorkloadTrace("loop", [
+        matmul_op("body", 256, 512, 512, core),
+        vector_op("tail", 1024, core),
+    ], core=core)
+    prog = compile_neuisa(tr)
+    prog.with_loop(0, 0, trips=3)
+    assert prog.loop_trips[0] == 3
+    assert all(u.next_group == 0 for u in prog.groups[0].all_utops())

@@ -1,0 +1,113 @@
+"""Sharding rules: divisibility invariants across all full configs,
+sanitize fallback, and a local-mesh lowering smoke."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SMOKES, TRAIN_4K
+from repro.distributed.sharding import (
+    batch_specs, dp_axes, param_specs, sanitize_spec)
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+class _FakeMesh:
+    """Shape-only stand-in so we can test 16x16 rules without 256
+    devices."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH16 = _FakeMesh({"data": 16, "model": 16})
+MESHPOD = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh", [MESH16, MESHPOD], ids=["single", "multi"])
+def test_param_specs_divisible(arch, mesh):
+    """Every sharded dim must be divisible by its mesh axes — the
+    invariant that makes all 68 dry-run cells lower."""
+    cfg = ARCHS[arch]
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k, jnp.bfloat16), KEY)
+    specs = param_specs(cfg, shapes, mesh)
+
+    def check(path, spec, leaf):
+        for i, entry in enumerate(tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            k = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[i] % k == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(check, specs, shapes)
+
+
+def test_tp_actually_shards_big_matrices():
+    """The rules must not silently replicate everything: for every
+    arch, a majority of FFN/projection bytes are model-sharded."""
+    for arch, cfg in ARCHS.items():
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda k: model.init(k, jnp.bfloat16), KEY)
+        specs = param_specs(cfg, shapes, MESH16)
+        tot = shd = 0
+
+        def acc(spec, leaf):
+            nonlocal tot, shd
+            n = int(np.prod(leaf.shape))
+            tot += n
+            if any(e is not None for e in tuple(spec)):
+                shd += n
+
+        jax.tree_util.tree_map(
+            acc, specs, shapes, is_leaf=lambda x: isinstance(x, P))
+        assert shd / tot > 0.5, f"{arch}: only {shd/tot:.0%} params sharded"
+
+
+class _FakeMeshWrap:
+    shape = {"data": 16, "model": 16}
+    axis_names = ("data", "model")
+
+
+def test_sanitize_spec():
+    sp = sanitize_spec((1, 1), P("data", None), _FakeMeshWrap())
+    assert sp == P(None, None)
+    sp = sanitize_spec((32, 32), P("data", "model"), _FakeMeshWrap())
+    assert sp == P("data", "model")
+    sp = sanitize_spec((32, 17), P("data", "model"), _FakeMeshWrap())
+    assert sp == P("data", None)
+
+
+def test_batch_specs_kinds():
+    cfg = ARCHS["qwen2-0.5b"]
+    bs = batch_specs(cfg, "train", _FakeMeshWrap())
+    assert bs["tokens"] == P("data", None)
+    bs = batch_specs(ARCHS["musicgen-large"], "decode", _FakeMeshWrap())
+    assert bs["tokens"] == P("data", None, None)
+    assert bs["cache_index"] == P()
+
+
+def test_local_mesh_train_step_lowers_and_runs():
+    """End-to-end: sharded train step executes on the local device
+    mesh (1 CPU) — the same code path the production mesh uses."""
+    cfg = SMOKES["qwen3-14b"]
+    mesh = make_local_mesh()
+    model = build_model(cfg)
+    state = init_train_state(model, KEY)
+    shapes = jax.eval_shape(lambda: state)
+    specs = param_specs(cfg, shapes["params"], mesh)
+    step = jax.jit(make_train_step(model, warmup=1))
+    batch = {
+        "tokens": jnp.zeros((2, 32), jnp.int32),
+        "targets": jnp.zeros((2, 32), jnp.int32),
+    }
+    with mesh:
+        state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))

@@ -1,0 +1,77 @@
+"""Vectorized fluid simulator vs the discrete-event oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (TenantSpec, VNPUConfig, VNPUManager, compile_neuisa)
+from repro.core.sim_jax import fleet_sweep, pack_pair, simulate_pair
+from repro.core.simulator import Simulator
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.npu.workloads import get_workload
+
+PAIRS = [("RsNt", "DLRM"), ("BERT", "ENet"), ("ENet", "TFMR")]
+
+
+def _oracle(w1, w2, policy, n_requests=4):
+    core = DEFAULT_CORE
+    mgr = VNPUManager(core=core)
+    specs = []
+    for name in (w1, w2):
+        v = mgr.create(VNPUConfig(2, 2, hbm_bytes=1 << 30))
+        specs.append(TenantSpec(compile_neuisa(get_workload(name, core),
+                                               core), v, n_requests))
+    return Simulator(specs, policy=policy, core=core).run()
+
+
+def _fluid(w1, w2, harvest, n_requests=4):
+    core = DEFAULT_CORE
+    p1 = compile_neuisa(get_workload(w1, core), core)
+    p2 = compile_neuisa(get_workload(w2, core), core)
+    return simulate_pair(pack_pair(p1, p2), jnp.array([2.0, 2.0]),
+                         jnp.array([2.0, 2.0]), n_requests,
+                         harvest=harvest, core=core)
+
+
+@pytest.mark.parametrize("pair", PAIRS)
+def test_fluid_matches_oracle_without_harvest(pair):
+    """With static partitions the fluid group model is EXACT (same
+    group spans, no scheduling friction to approximate)."""
+    oracle = _oracle(*pair, "neu10_nh")
+    fluid = _fluid(*pair, False)
+    ratio = float(fluid["makespan"]) / oracle.makespan
+    assert 0.98 < ratio < 1.02, (pair, ratio)
+
+
+@pytest.mark.parametrize("pair", PAIRS)
+def test_fluid_harvest_is_optimistic_bound(pair):
+    """Fluid harvesting re-partitions engines continuously with zero
+    preemption cost -> a LOWER bound on makespan (upper bound on the
+    collocation benefit), within ~2x of the discrete oracle. That is
+    the intended fleet-screening semantic."""
+    oracle = _oracle(*pair, "neu10")
+    fluid = _fluid(*pair, True)
+    ratio = float(fluid["makespan"]) / oracle.makespan
+    assert 0.45 < ratio <= 1.02, (pair, ratio)
+
+
+def test_fluid_preserves_policy_ordering():
+    for pair in PAIRS:
+        h = float(_fluid(*pair, True)["makespan"])
+        nh = float(_fluid(*pair, False)["makespan"])
+        assert h <= nh * 1.02
+
+
+def test_fleet_sweep_one_program():
+    core = DEFAULT_CORE
+    progs = [
+        (compile_neuisa(get_workload(a, core), core),
+         compile_neuisa(get_workload(b, core), core))
+        for a, b in PAIRS
+    ]
+    out = fleet_sweep(progs, hbm_scales=(0.75, 1.0, 2.0), n_requests=3)
+    assert out["makespan"].shape == (3, 3)   # pairs x scales
+    assert bool(jnp.all(out["makespan"] > 0))
+    assert bool(jnp.all(out["me_util"] <= 1.0 + 1e-6))
+    # more bandwidth never slows a fleet cell down
+    ms = np.asarray(out["makespan"])
+    assert np.all(ms[:, 0] >= ms[:, 2] * 0.999)

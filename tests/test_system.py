@@ -1,0 +1,80 @@
+"""End-to-end behaviour tests for the full Neu10 system: workload ->
+profile -> allocate -> map -> compile -> schedule -> report, plus the
+paper's headline claims as regression gates (qualitative: our traces
+are cost-model derived, not real-TPU profiles — see DESIGN.md §2)."""
+import numpy as np
+import pytest
+
+from repro.core import (TenantSpec, VNPUConfig, VNPUManager,
+                        compile_neuisa, compile_vliw, run_collocation)
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.npu.workloads import PAPER_PAIRS, get_workload
+from repro.serve.vserve import MultiTenantServer
+
+
+def _pair_result(w1, w2, policy, n_requests=5):
+    core = DEFAULT_CORE
+    mgr = VNPUManager(core=core)
+    mapping = "spatial" if policy.startswith("neu10") else "temporal"
+    specs = []
+    for name in (w1, w2):
+        tr = get_workload(name, core)
+        v = mgr.create(VNPUConfig(2, 2, hbm_bytes=min(
+            int(tr.hbm_footprint), core.hbm_bytes // 2)), mapping=mapping)
+        prog = (compile_neuisa(tr, core) if policy.startswith("neu10")
+                else compile_vliw(tr, core))
+        specs.append(TenantSpec(prog, v, n_requests))
+    return run_collocation(specs, policy, core)
+
+
+def test_full_stack_runs_all_pairs_all_policies():
+    for w1, w2, _ in PAPER_PAIRS[:3]:
+        for policy in ("pmt", "v10", "neu10_nh", "neu10"):
+            res = _pair_result(w1, w2, policy, n_requests=3)
+            assert all(t.requests_done >= 3 for t in res.tenants)
+
+
+def test_headline_throughput_claim():
+    """§V-B: Neu10 throughput > PMT on low-contention pairs (paper:
+    1.62x average; we gate at >1.15x geomean)."""
+    speedups = []
+    for w1, w2, c in PAPER_PAIRS:
+        if c != "low":
+            continue
+        pmt = _pair_result(w1, w2, "pmt")
+        neu = _pair_result(w1, w2, "neu10")
+        for i in range(2):
+            speedups.append(neu.throughput(i) / max(pmt.throughput(i), 1e-9))
+    g = float(np.exp(np.mean(np.log(speedups))))
+    assert g > 1.15, f"geomean Neu10/PMT = {g:.2f}"
+
+
+def test_headline_utilization_claim():
+    """§V-C: Neu10 improves ME utilization over PMT (paper: 1.26x)."""
+    ratios = []
+    for w1, w2, _ in PAPER_PAIRS:
+        pmt = _pair_result(w1, w2, "pmt")
+        neu = _pair_result(w1, w2, "neu10")
+        ratios.append(neu.me_utilization() / max(pmt.me_utilization(), 1e-9))
+    assert float(np.mean(ratios)) > 1.1
+
+
+def test_harvest_overhead_bounded():
+    """Table III: blocked-because-harvested overhead is a minor
+    fraction of end-to-end time, never dominant (paper worst 10.63%;
+    our analytic traces have ~100x shorter ops -> more reclaim
+    passes; blocked fraction scales as ctx/op-length. Gate at 25%;
+    the benefit-outweighs-cost claim is gated in the benchmarks)."""
+    for w1, w2, _ in PAPER_PAIRS[:4]:
+        res = _pair_result(w1, w2, "neu10")
+        for t in res.tenants:
+            assert t.reclaim_blocked / res.makespan < 0.25
+
+
+def test_control_plane_e2e():
+    srv = MultiTenantServer(policy="neu10")
+    srv.register("llm", get_workload("LLaMA"), eu_budget=4)
+    srv.register("bert", get_workload("BERT"), eu_budget=4)
+    res, reports = srv.simulate(n_requests=3)
+    assert {r.name for r in reports} == {"llm", "bert"}
+    assert all(np.isfinite(r.p95_ms) and r.p95_ms > 0 for r in reports)

@@ -1,0 +1,144 @@
+"""Training substrate: convergence, checkpoint/resume exactness,
+gradient compression, elastic restart, straggler detection."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (
+    Checkpointer, list_checkpoints, restore_checkpoint, save_checkpoint)
+from repro.checkpoint.elastic import plan_elastic_restart, reshard_state
+from repro.configs import SMOKES
+from repro.distributed.compress import (
+    compress_tree, decompress_tree, init_residuals, quantize_ef)
+from repro.distributed.fault import StragglerMonitor
+from repro.train.loop import TrainConfig, train
+
+CFG = SMOKES["qwen2-0.5b"]
+
+
+def test_loss_decreases():
+    out = train(CFG, TrainConfig(steps=12, batch=4, seq=64, peak_lr=1e-3,
+                                 warmup=2, log_every=100),
+                log_fn=lambda *_: None)
+    first = np.mean(out["losses"][:3])
+    last = np.mean(out["losses"][-3:])
+    assert last < first - 0.1, (first, last)
+
+
+def test_checkpoint_resume_is_exact(tmp_path):
+    """train(6) == train(3) + crash + resume(3): identical losses."""
+    tc = dict(batch=2, seq=32, peak_lr=5e-4, warmup=2, log_every=100)
+    full = train(CFG, TrainConfig(steps=6, **tc), log_fn=lambda *_: None)
+
+    d = str(tmp_path / "ck")
+    train(CFG, TrainConfig(steps=3, ckpt_dir=d, ckpt_every=3, **tc),
+          log_fn=lambda *_: None)
+    resumed = train(CFG, TrainConfig(steps=6, ckpt_dir=d, ckpt_every=3, **tc),
+                    log_fn=lambda *_: None)
+    np.testing.assert_allclose(full["losses"][3:], resumed["losses"],
+                               rtol=1e-5)
+
+
+def test_checkpoint_integrity_and_retention(tmp_path):
+    d = str(tmp_path / "ck")
+    state = {"a": jnp.arange(8, dtype=jnp.float32),
+             "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    ck = Checkpointer(d, keep=2)
+    for s in (1, 2, 3):
+        ck.save(s, state, blocking=True)
+    assert list_checkpoints(d) == [2, 3]
+    restored, step = restore_checkpoint(d, state)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(8, dtype=np.float32))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomic_under_partial_write(tmp_path):
+    d = str(tmp_path / "ck")
+    state = {"w": jnp.ones((4,))}
+    save_checkpoint(d, 1, state)
+    # simulate a crash mid-save: stray tmp dir must be ignored
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    restored, step = restore_checkpoint(d, state)
+    assert step == 1
+
+
+def test_quantize_error_feedback_unbiased():
+    """With error feedback, accumulated dequantized grads converge to
+    the true gradient sum."""
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (256,)) * 0.01
+    resid = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(50):
+        q, scale, resid = quantize_ef(g, resid)
+        acc = acc + q.astype(jnp.float32) * scale
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g),
+                               atol=1e-4)
+
+
+def test_compress_tree_roundtrip_small_error():
+    key = jax.random.PRNGKey(1)
+    grads = {"w": jax.random.normal(key, (32, 32)),
+             "b": jax.random.normal(key, (32,)) * 10}
+    resids = init_residuals(grads)
+    q, s, r = compress_tree(grads, resids)
+    out = decompress_tree(q, s)
+    for k in grads:
+        err = np.abs(np.asarray(out[k]) - np.asarray(grads[k])).max()
+        scale = np.abs(np.asarray(grads[k])).max()
+        assert err <= scale / 127 * 1.01
+
+
+def test_elastic_plan():
+    p = plan_elastic_restart(old_world=512, surviving=384,
+                             model_parallel=16, global_batch=256,
+                             last_step=1000)
+    # 384/16 = 24 data shards, but 256 % 24 != 0 -> shrink to 16
+    assert p.new_data_axis == 16
+    assert p.new_world == 256
+    assert 256 % p.new_data_axis == 0
+    assert p.restart_step == 1000
+    # exact-fit case
+    p2 = plan_elastic_restart(512, 256, 16, 256, 0)
+    assert p2.new_data_axis == 16
+    with pytest.raises(RuntimeError, match="cannot rebuild"):
+        plan_elastic_restart(512, 8, 16, 256, 0)
+
+
+def test_reshard_state_roundtrip():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    state = {"w": np.arange(16, dtype=np.float32).reshape(4, 4)}
+    spec = {"w": P(None, None)}
+    placed = reshard_state(state, mesh, spec)
+    np.testing.assert_array_equal(np.asarray(placed["w"]), state["w"])
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5, grace=2)
+    for step in range(6):
+        for h in range(4):
+            t = 1.0 if h != 3 else 3.0  # host 3 is slow
+            mon.observe(step, h, t)
+        mon.stragglers()
+    assert mon.stragglers() == {3}
+    # host 2 stops heartbeating; host 3 stays slow
+    for step in range(6, 20):
+        for h, t in ((0, 1.0), (1, 1.0), (3, 3.0)):
+            mon.observe(step, h, t)
+        mon.stragglers()
+    assert 2 in mon.failed(19)
+    assert set(mon.healthy_hosts(19)) == {0, 1}
+    # a recovered straggler is healthy again
+    for step in range(20, 30):
+        for h in (0, 1, 3):
+            mon.observe(step, h, 1.0)
+        mon.stragglers()
+    assert 3 in mon.healthy_hosts(29)

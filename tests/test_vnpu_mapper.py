@@ -1,0 +1,80 @@
+"""vNPU lifecycle + vNPU->pNPU mapping + memory isolation (§III-A/C)."""
+import pytest
+
+from repro.core.mapper import VNPUManager
+from repro.core.vnpu import PRESETS, VNPUConfig, VNPUState
+from repro.npu.hw_config import NPUCoreConfig
+
+
+def test_lifecycle_and_release():
+    mgr = VNPUManager()
+    v = mgr.create(VNPUConfig(2, 2, hbm_bytes=2 << 30))
+    assert v.state == VNPUState.MAPPED
+    assert len(v.me_ids) == 2 and len(v.ve_ids) == 2
+    core = mgr.cores[0]
+    assert len(core.free_mes) == 2
+    mgr.destroy(v)
+    assert v.state == VNPUState.DESTROYED
+    assert len(core.free_mes) == 4 and len(core.free_ves) == 4
+    assert len(core.free_hbm_segs) == core.core.hbm_bytes // core.core.hbm_segment
+
+
+def test_validation():
+    with pytest.raises(ValueError, match="at least 1"):
+        VNPUConfig(0, 2).validate()
+    with pytest.raises(ValueError, match="exceeds"):
+        VNPUConfig(8, 8).validate(NPUCoreConfig(n_me=4, n_ve=4))
+
+
+def test_spatial_no_overcommit():
+    mgr = VNPUManager()
+    mgr.create(VNPUConfig(3, 3))
+    with pytest.raises(RuntimeError, match="no pNPU core fits"):
+        mgr.create(VNPUConfig(2, 2))
+
+
+def test_temporal_oversubscription_allowed():
+    mgr = VNPUManager()
+    a = mgr.create(VNPUConfig(4, 4), mapping="temporal")
+    b = mgr.create(VNPUConfig(4, 4), mapping="temporal")
+    assert a.core_id == b.core_id
+    assert mgr.collocated(a) == [b]
+
+
+def test_segment_isolation_and_translation():
+    mgr = VNPUManager()
+    a = mgr.create(VNPUConfig(2, 2, hbm_bytes=2 << 30))
+    b = mgr.create(VNPUConfig(2, 2, hbm_bytes=2 << 30))
+    # disjoint physical segments
+    assert not (set(a.segments.hbm_segments) & set(b.segments.hbm_segments))
+    assert not (set(a.segments.sram_segments) & set(b.segments.sram_segments))
+    # translation: base-plus-offset within the vNPU's own segments
+    pa = a.segments.translate("hbm", 10)
+    pb = b.segments.translate("hbm", 10)
+    assert pa != pb
+    # page fault outside the allocation
+    with pytest.raises(MemoryError, match="page fault"):
+        a.segments.translate("hbm", a.segments.hbm_bytes + 1)
+
+
+def test_greedy_balances_eu_vs_memory():
+    """EU-hungry vNPUs should collocate with memory-hungry ones."""
+    core = NPUCoreConfig()
+    mgr = VNPUManager(n_pnpus=2, core=core)
+    big_mem = mgr.create(VNPUConfig(1, 1, hbm_bytes=32 << 30))
+    big_eu = mgr.create(VNPUConfig(3, 3, hbm_bytes=1 << 30))
+    assert (big_mem.pnpu_id, big_mem.core_id) == (big_eu.pnpu_id, big_eu.core_id)
+
+
+def test_reconfigure_preserves_name():
+    mgr = VNPUManager()
+    v = mgr.create(VNPUConfig(1, 1), name="tenantA")
+    v2 = mgr.reconfigure(v, VNPUConfig(2, 2))
+    assert v2.name == "tenantA"
+    assert v2.config.n_me == 2
+    assert v.state == VNPUState.DESTROYED
+
+
+def test_presets_valid():
+    for name, cfg in PRESETS.items():
+        cfg.validate(NPUCoreConfig(n_me=8, n_ve=8))

@@ -1,0 +1,83 @@
+"""Trace generation + cost model: paper-characterization properties
+(Figs. 2-7) and model-FLOP consistency."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.npu.cost_model import matmul_op, memory_op, vector_op
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.npu.trace import lm_trace, train_trace
+from repro.npu.workloads import PAPER_PAIRS, WORKLOADS, get_workload
+
+
+def test_paper_intensity_characterization():
+    """Fig. 4/5: DLRM/NCF VE-intensive, BERT/ResNet ME-intensive,
+    ENet mixed (the high-contention workload)."""
+    prof = {n: get_workload(n).profile_mv() for n in WORKLOADS}
+    assert prof["DLRM"][1] > prof["DLRM"][0]          # VE-heavy
+    assert prof["NCF"][1] > 0.7
+    assert prof["BERT"][0] > 0.9                      # ME-heavy
+    assert prof["RsNt"][0] > 0.9
+    assert abs(prof["ENet"][0] - prof["ENet"][1]) < 0.25  # contended
+    for name, (m, v) in prof.items():
+        assert m + v >= 1.0 - 1e-6, f"{name}: m+v < 1"
+
+
+def test_pairs_cover_contention_classes():
+    classes = {c for _, _, c in PAPER_PAIRS}
+    assert classes == {"low", "medium", "high"}
+    assert len(PAPER_PAIRS) == 9
+
+
+@given(m=st.integers(1, 512), k=st.integers(1, 4096), n=st.integers(1, 4096))
+@settings(max_examples=60, deadline=None)
+def test_matmul_cycles_at_least_ideal(m, k, n):
+    core = DEFAULT_CORE
+    op = matmul_op("mm", m, k, n, core)
+    ideal = 2.0 * m * k * n / core.me_flops_per_cycle
+    assert op.me_cycles >= ideal * 0.99
+    assert op.n_tiles >= 1
+
+
+def test_decode_is_memory_paced():
+    """Small-row matmuls stream weights at HBM rate (§V-F)."""
+    core = DEFAULT_CORE
+    op = matmul_op("mv", 8, 4096, 4096, core)
+    w_stream_cycles = 4096 * 4096 * 2 / core.hbm_bytes_per_cycle
+    assert op.me_cycles == pytest.approx(w_stream_cycles, rel=0.1)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_traces_well_formed(arch):
+    cfg = ARCHS[arch]
+    tr = lm_trace(cfg, batch=4, seq=256, phase="prefill")
+    me, ve, hbm = tr.totals()
+    assert me > 0 and ve > 0
+    assert tr.hbm_footprint > 0
+    m, v = tr.profile_mv()
+    assert m + v >= 1.0 - 1e-6
+    # decode phase is lighter per call and memory-heavier relatively
+    td = lm_trace(cfg, batch=4, seq=256, phase="decode")
+    assert td.ideal_cycles(4, 4) < tr.ideal_cycles(4, 4)
+
+
+def test_trace_flops_track_param_count():
+    """Prefill ME work should scale with active params: cycles *
+    flops_per_cycle ~ 2 * N_active * tokens (within 2x: attention +
+    drain overheads)."""
+    core = DEFAULT_CORE
+    for arch in ("qwen2-0.5b", "minicpm-2b"):
+        cfg = ARCHS[arch]
+        T = 4 * 512
+        tr = lm_trace(cfg, 4, 512, "prefill", core)
+        me, _, _ = tr.totals()
+        flops = me * core.me_flops_per_cycle
+        model_flops = 2.0 * cfg.active_param_count() * T
+        assert 0.7 <= flops / model_flops <= 2.5, flops / model_flops
+
+
+def test_train_trace_is_3x_forward():
+    cfg = ARCHS["qwen2-0.5b"]
+    fwd = lm_trace(cfg, 2, 128, "prefill")
+    tr = train_trace(cfg, 2, 128)
+    assert tr.totals()[0] == pytest.approx(3 * fwd.totals()[0], rel=0.01)
