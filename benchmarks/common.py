@@ -7,45 +7,44 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import (TenantSpec, VNPUConfig, VNPUManager,
-                        compile_neuisa, compile_vliw)
-from repro.core.simulator import SimResult, Simulator
+from repro.core import VNPUConfig, available_policies
+from repro.core.policies import PolicyLike
+from repro.core.simulator import SimResult
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 from repro.npu.workloads import PAPER_PAIRS, get_workload
+from repro.serve.session import NPUCluster, run_closed_loop
 
+# the paper's four disciplines, in §V-A presentation order (all
+# resolved through the scheduler registry; extra registered policies
+# can be swept by passing an explicit `policies` list to the figures)
 POLICIES = ("pmt", "v10", "neu10_nh", "neu10")
+assert all(p in available_policies() for p in POLICIES)
 
 
 def run_pair(
     w1: str,
     w2: str,
-    policy: str,
+    policy: PolicyLike,
     core: NPUCoreConfig = DEFAULT_CORE,
     n_requests: int = 6,
     hbm_scale: float = 1.0,
     me_ve: Tuple[int, int] = (2, 2),
 ) -> SimResult:
     """Paper §V-A setup: two vNPUs of 2ME/2VE on a 4ME/4VE core,
-    SRAM/HBM split evenly."""
-    mgr = VNPUManager(core=core)
-    mapping = "spatial" if policy.startswith("neu10") else "temporal"
-    specs = []
+    SRAM/HBM split evenly. The policy (any registry entry) picks the
+    mapping scheme and compiler front-end — temporal baselines compile
+    whole VLIW operators for the full physical core; the false
+    contention (Fig. 9) comes from operators whose own tiling can't
+    fill it (n_tiles < n_me)."""
+    cluster = NPUCluster(core=core, policy=policy)
     for name in (w1, w2):
-        tr = get_workload(name, core)
-        v = mgr.create(
+        cluster.register_vnpu(
+            name, get_workload(name, core),
             VNPUConfig(*me_ve, hbm_bytes=core.hbm_bytes // 2,
-                       sram_bytes=core.sram_bytes // 2),
-            name=name, mapping=mapping)
-        if policy.startswith("neu10"):
-            prog = compile_neuisa(tr, core)
-        else:
-            # temporal baselines compile for the full physical core;
-            # the false contention (Fig. 9) comes from operators whose
-            # own tiling can't fill it (n_tiles < n_me).
-            prog = compile_vliw(tr, core)
-        specs.append(TenantSpec(prog, v, n_requests))
-    return Simulator(specs, policy=policy, core=core,
-                     hbm_scale=hbm_scale).run()
+                       sram_bytes=core.sram_bytes // 2))
+    res, _ = run_closed_loop(cluster, n_requests=n_requests,
+                             hbm_scale=hbm_scale)
+    return res
 
 
 def geomean(xs) -> float:

@@ -1,27 +1,33 @@
 """Paper Figs. 19/20/21: p95 tail latency, average latency, and
 throughput for the 9 workload pairs under PMT / V10 / Neu10-NH /
-Neu10 (all normalized to PMT, as in the paper)."""
+Neu10 (all normalized to PMT, as in the paper).
+
+Any policy registered via ``@register_policy`` can join the sweep:
+``run(policies=("pmt", "neu10", "my_policy"))`` — results stay
+normalized to the first (baseline) entry.
+"""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 from benchmarks.common import (BenchRow, PAPER_PAIRS, POLICIES, geomean,
                                run_pair, timed)
 
 
-def run() -> List[BenchRow]:
+def run(policies: Sequence[str] = POLICIES) -> List[BenchRow]:
+    base_policy = policies[0]
     rows: List[BenchRow] = []
     agg: Dict[str, Dict[str, List[float]]] = {
-        p: {"p95": [], "mean": [], "thr": []} for p in POLICIES}
+        p: {"p95": [], "mean": [], "thr": []} for p in policies}
     for w1, w2, contention in PAPER_PAIRS:
         us, results = timed(lambda a=w1, b=w2: {
-            p: run_pair(a, b, p) for p in POLICIES})
-        base = results["pmt"]
-        for p in POLICIES:
+            p: run_pair(a, b, p) for p in policies})
+        base = results[base_policy]
+        for p in policies:
             r = results[p]
             for i in range(2):
-                # normalized to PMT: latency ratios <1 are better;
-                # throughput ratios >1 are better
+                # normalized to the baseline: latency ratios <1 are
+                # better; throughput ratios >1 are better
                 p95 = r.tenants[i].p95() / max(base.tenants[i].p95(), 1e-9)
                 mean = r.tenants[i].mean() / max(base.tenants[i].mean(), 1e-9)
                 thr = r.throughput(i) / max(base.throughput(i), 1e-9)
@@ -29,21 +35,23 @@ def run() -> List[BenchRow]:
                 agg[p]["mean"].append(mean)
                 agg[p]["thr"].append(thr)
             rows.append(BenchRow(
-                f"fig19_21/{w1}+{w2}/{contention}/{p}", us / len(POLICIES),
+                f"fig19_21/{w1}+{w2}/{contention}/{p}", us / len(policies),
                 f"p95x={r.tenants[0].p95()/max(base.tenants[0].p95(),1e-9):.2f}"
                 f"/{r.tenants[1].p95()/max(base.tenants[1].p95(),1e-9):.2f} "
                 f"thrx={r.throughput(0)/max(base.throughput(0),1e-9):.2f}"
                 f"/{r.throughput(1)/max(base.throughput(1),1e-9):.2f}"))
-    for p in POLICIES:
+    for p in policies:
         rows.append(BenchRow(
             f"fig19_21/geomean/{p}", 0.0,
             f"p95={geomean(agg[p]['p95']):.3f} "
             f"mean={geomean(agg[p]['mean']):.3f} "
             f"thr={geomean(agg[p]['thr']):.3f}"))
-    # headline orderings (qualitative reproduction gates)
-    assert geomean(agg["neu10"]["thr"]) > 1.1       # beats PMT
-    assert geomean(agg["neu10"]["p95"]) < 1.0       # better tail than PMT
-    assert geomean(agg["neu10"]["thr"]) > geomean(agg["neu10_nh"]["thr"])
+    # headline orderings (qualitative reproduction gates) — only
+    # meaningful for the paper's own policy set
+    if {"pmt", "neu10", "neu10_nh"} <= set(policies) and base_policy == "pmt":
+        assert geomean(agg["neu10"]["thr"]) > 1.1       # beats PMT
+        assert geomean(agg["neu10"]["p95"]) < 1.0       # better tail than PMT
+        assert geomean(agg["neu10"]["thr"]) > geomean(agg["neu10_nh"]["thr"])
     return rows
 
 

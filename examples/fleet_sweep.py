@@ -17,6 +17,7 @@ from repro.core import compile_neuisa
 from repro.core.sim_jax import fleet_sweep
 from repro.npu.hw_config import DEFAULT_CORE
 from repro.npu.workloads import PAPER_PAIRS, get_workload
+from repro.serve.session import NPUCluster, PoissonArrivals, ServingSession
 
 
 def main() -> None:
@@ -48,9 +49,32 @@ def main() -> None:
                       for j in range(len(scales)))
         print(f"{a+'+'+b:14s}{row}")
     best = np.unravel_index(np.argmax(ms_s / ms_h), ms_h.shape)
-    print(f"\nbest collocation candidate: {pairs[best[0]]} at "
+    best_pair = pairs[best[0]]
+    print(f"\nbest collocation candidate: {best_pair} at "
           f"bw x{scales[best[1]]} "
           f"({(ms_s/ms_h)[best]:.2f}x harvest benefit)")
+    validate_online(best_pair, scales[best[1]])
+
+
+def validate_online(pair, hbm_scale: float) -> None:
+    """Confirm the fluid model's pick with the discrete-event oracle:
+    serve the pair open-loop through a ServingSession and report true
+    per-request tails (the fluid bound has no queueing)."""
+    cluster = NPUCluster(core=DEFAULT_CORE, policy="neu10")
+    sess = ServingSession(cluster, hbm_scale=hbm_scale)
+    handles = [
+        sess.register(name, get_workload(name, DEFAULT_CORE), eu_budget=4)
+        for name in pair
+    ]
+    for i, h in enumerate(handles):
+        sess.submit_arrivals(h, PoissonArrivals(rate_rps=3.0, n=20, seed=i))
+    sess.drain()
+    print("\nonline validation of the pick (open-loop Poisson, "
+          "discrete-event):")
+    for r in sess.report():
+        print(f"  {r.name:8s} {r.requests_done:3d} reqs  "
+              f"p95={r.p95_ms:9.2f}ms  thr={r.throughput_rps:6.2f}/s  "
+              f"harvested={r.harvested_me_ms:8.1f}ms")
 
 
 if __name__ == "__main__":

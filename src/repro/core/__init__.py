@@ -15,6 +15,14 @@ from repro.core.allocator import (
 from repro.core.compiler import compile_neuisa, compile_vliw
 from repro.core.mapper import VNPUManager
 from repro.core.neuisa import MuTOp, MuTOpGroup, NeuISAProgram, VLIWProgram
+from repro.core.policies import (
+    SchedulerPolicy,
+    UnknownPolicyError,
+    available_policies,
+    get_policy,
+    register_policy,
+    resolve_policy,
+)
 from repro.core.simulator import (
     SimResult,
     Simulator,
@@ -37,6 +45,12 @@ __all__ = [
     "MuTOpGroup",
     "NeuISAProgram",
     "VLIWProgram",
+    "SchedulerPolicy",
+    "UnknownPolicyError",
+    "available_policies",
+    "get_policy",
+    "register_policy",
+    "resolve_policy",
     "SimResult",
     "Simulator",
     "TenantSpec",

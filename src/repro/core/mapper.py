@@ -21,6 +21,15 @@ from repro.core.vnpu import MemorySegments, VNPU, VNPUConfig, VNPUState
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
 
+class ReconfigureError(RuntimeError):
+    """A vNPU reconfigure could not be placed; the original mapping
+    was restored and is available as ``.restored``."""
+
+    def __init__(self, msg: str, restored: VNPU):
+        super().__init__(msg)
+        self.restored = restored
+
+
 @dataclass
 class CoreState:
     """Bookkeeping for one physical NPU core."""
@@ -118,11 +127,23 @@ class VNPUManager:
         v.destroy()
 
     def reconfigure(self, v: VNPU, cfg: VNPUConfig) -> VNPU:
-        """Paper hypercall (2): change an existing vNPU's config."""
+        """Paper hypercall (2): change an existing vNPU's config.
+
+        All-or-nothing: if the new config cannot be placed, the old
+        mapping is restored and :class:`ReconfigureError` is raised
+        carrying the restored vNPU (live control planes must keep a
+        valid handle — a failed grow must not kill the tenant)."""
         mapping = v.mapping
+        old_cfg = v.config
         self.destroy(v)
-        nv = self.create(cfg, name=v.name, mapping=mapping)
-        return nv
+        try:
+            return self.create(cfg, name=v.name, mapping=mapping)
+        except RuntimeError as exc:
+            restored = self.create(old_cfg, name=v.name, mapping=mapping)
+            raise ReconfigureError(
+                f"reconfigure of vNPU {v.name!r} to "
+                f"{cfg.n_me}ME/{cfg.n_ve}VE failed ({exc}); "
+                f"previous mapping restored", restored) from exc
 
     # ------------------------------------------------------------------
     def _core_of(self, v: VNPU) -> Optional[CoreState]:

@@ -1,0 +1,329 @@
+"""Pluggable vNPU scheduler policies (§III-E, §V-A).
+
+The simulator in :mod:`repro.core.simulator` is a policy-agnostic
+event loop; everything that decides *which* ready chunk runs on
+*which* engine lives here. A policy is a class implementing
+:class:`SchedulerPolicy` and registered under a name:
+
+    from repro.core.policies import SchedulerPolicy, register_policy
+
+    @register_policy("my_policy")
+    class MyPolicy(SchedulerPolicy):
+        spatial = False           # engines shared, not owned
+        isa = "vliw"              # compile whole operators
+
+        def schedule(self, sim, t):
+            for rt in sim.active_tenants():
+                ...sim.dispatch(chunk, engines, t)...
+
+``Simulator(..., policy="my_policy")`` then resolves it through the
+registry — no changes to ``repro.core`` required. The four paper
+policies (``pmt`` / ``v10`` / ``neu10_nh`` / ``neu10``) are themselves
+registered this way.
+
+Policy API surface on the simulator (stable for third parties):
+
+* ``sim.active_tenants()`` — live tenant runtimes, each with
+  ``ready_me`` / ``ready_ve`` chunk queues, ``active_cycles`` fair-
+  share counters, and ``spec.weight`` priorities.
+* ``sim.mes`` / ``sim.ves`` — engine pools; an engine has ``.free``,
+  ``.owner`` (tenant idx under spatial policies), ``.chunk``,
+  ``.tenant``.
+* ``sim.dispatch(chunk, engines, t, harvested=False)`` — start a
+  chunk on one or more free engines.
+* ``sim.preempt(engine, t, blocked_owner=None)`` — preempt the chunk
+  on an engine (and VLIW siblings); remaining work returns to its
+  tenant's ready queue with the context-switch penalty.
+* ``sim.core`` / ``sim.fair_slice`` — hardware config and the
+  fair-share imbalance threshold.
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from typing import TYPE_CHECKING, Callable, Dict, Tuple, Type, Union
+
+from repro.core.compiler import compile_neuisa, compile_vliw
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.simulator import Simulator
+
+
+class UnknownPolicyError(KeyError):
+    """Raised when a policy name is not in the registry."""
+
+    def __init__(self, name: str):
+        self.name = name
+        super().__init__(
+            f"unknown scheduler policy {name!r}; "
+            f"registered: {', '.join(available_policies())}")
+
+    def __str__(self) -> str:  # KeyError quotes its arg; keep it readable
+        return self.args[0]
+
+
+_REGISTRY: Dict[str, Type["SchedulerPolicy"]] = {}
+
+
+def register_policy(name: str) -> Callable[[Type["SchedulerPolicy"]],
+                                           Type["SchedulerPolicy"]]:
+    """Class decorator: make a :class:`SchedulerPolicy` resolvable by
+    name from ``Simulator`` / ``NPUCluster`` / benchmarks."""
+
+    def deco(cls: Type["SchedulerPolicy"]) -> Type["SchedulerPolicy"]:
+        if not (isinstance(cls, type) and issubclass(cls, SchedulerPolicy)):
+            raise TypeError(f"{cls!r} is not a SchedulerPolicy subclass")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_policy(name: str) -> Type["SchedulerPolicy"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownPolicyError(name) from None
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+PolicyLike = Union[str, "SchedulerPolicy", Type["SchedulerPolicy"]]
+
+
+def resolve_policy(policy: PolicyLike) -> "SchedulerPolicy":
+    """Accept a registry name, a policy class, or an instance; return
+    a fresh (or the given) instance ready to bind to one simulator."""
+    if isinstance(policy, str):
+        return get_policy(policy)()
+    if isinstance(policy, type) and issubclass(policy, SchedulerPolicy):
+        return policy()
+    if isinstance(policy, SchedulerPolicy):
+        return policy
+    raise TypeError(f"cannot resolve scheduler policy from {policy!r}")
+
+
+# ----------------------------------------------------------------------
+class SchedulerPolicy(ABC):
+    """One scheduling discipline for collocated vNPU tenants.
+
+    Class attributes declare the contract the rest of the stack reads:
+
+    * ``spatial`` — engines carry per-tenant ownership (hardware
+      isolation); also selects the ``"spatial"`` vNPU mapping in the
+      control plane (``"temporal"`` otherwise).
+    * ``isa`` — ``"neuisa"`` (μTOp groups, per-engine chunks) or
+      ``"vliw"`` (whole operators); picks the compiler front-end.
+
+    Instances are stateful and bound to ONE simulator at a time
+    (``Simulator`` resolves names to fresh instances).
+    """
+
+    name: str = ""
+    spatial: bool = False
+    isa: str = "vliw"
+
+    @property
+    def mapping(self) -> str:
+        return "spatial" if self.spatial else "temporal"
+
+    @classmethod
+    def compile_program(cls, trace, core):
+        """Compile a :class:`WorkloadTrace` into the program form this
+        policy schedules."""
+        if cls.isa == "neuisa":
+            return compile_neuisa(trace, core)
+        return compile_vliw(trace, core)
+
+    # ---------------- lifecycle hooks ----------------
+    def on_attach(self, sim: "Simulator") -> None:
+        """Called once when the simulator binds this policy."""
+
+    def on_tenant_added(self, sim: "Simulator", rt) -> None:
+        """Called after a tenant runtime joins (possibly mid-run)."""
+
+    def on_tenant_removed(self, sim: "Simulator", rt) -> None:
+        """Called after a tenant runtime is deregistered mid-run."""
+
+    # ---------------- the actual scheduler ----------------
+    @abstractmethod
+    def schedule(self, sim: "Simulator", t: float) -> None:
+        """Dispatch ready chunks onto free engines at time ``t``."""
+
+
+# ----------------------------------------------------------------------
+# Built-in policies — the paper's baselines and Neu10 itself, extracted
+# verbatim from the former Simulator._schedule_* branches.
+# ----------------------------------------------------------------------
+class _SpatialPolicy(SchedulerPolicy):
+    """Spatially-isolated vNPUs (dedicated engines per tenant)."""
+
+    spatial = True
+    isa = "neuisa"
+    harvest = False
+
+    def schedule(self, sim: "Simulator", t: float) -> None:
+        tenants = sim.active_tenants()
+        # 1) owners dispatch on their own engines (MEs then VEs)
+        for pool, ready_attr in ((sim.mes, "ready_me"), (sim.ves, "ready_ve")):
+            for rt in tenants:
+                ready = getattr(rt, ready_attr)
+                if ready_attr == "ready_ve":
+                    # operation scheduler: prioritize drains of ME groups
+                    ready.sort(key=lambda c: not c.from_me_group)
+                own_free = [e for e in pool
+                            if e.owner == rt.idx and e.free]
+                while own_free and ready:
+                    sim.dispatch(ready.pop(0), [own_free.pop(0)], t)
+                # 2) reclaim: preempt harvested μTOps on my engines.
+                # Engines drain in PARALLEL, so the owner is wall-
+                # blocked for ONE ctx window per reclaim pass (what
+                # Table III measures), however many engines it takes
+                # back.
+                if self.harvest and ready:
+                    reclaimed = 0
+                    for e in pool:
+                        if reclaimed >= len(ready):
+                            break
+                        if (e.owner == rt.idx and not e.free
+                                and e.chunk is not None
+                                and e.tenant != rt.idx):
+                            sim.preempt(e, t)
+                            reclaimed += 1
+                    if reclaimed:
+                        ctx = float(sim.core.ctx_switch_cycles
+                                    if pool is sim.mes else 32)
+                        rt.stats.reclaim_blocked += ctx
+        if not self.harvest:
+            return
+        # 3) harvest: leftover ready chunks take others' idle engines.
+        for pool, ready_attr in ((sim.mes, "ready_me"), (sim.ves, "ready_ve")):
+            # only engines whose owner has no pending demand are up for
+            # harvest (§III-E scheduling policy)
+            for rt in sorted(tenants, key=lambda r: r.active_cycles):
+                ready = getattr(rt, ready_attr)
+                if not ready:
+                    continue
+                for e in pool:
+                    if not ready:
+                        break
+                    if not e.free or e.owner == rt.idx:
+                        continue
+                    owner = (sim.tenants[e.owner]
+                             if e.owner is not None else None)
+                    owner_ready = getattr(owner, ready_attr) if owner else []
+                    if owner_ready:
+                        continue  # owner will use it this round
+                    sim.dispatch(ready.pop(0), [e], t, harvested=True)
+
+
+@register_policy("neu10_nh")
+class Neu10NoHarvestPolicy(_SpatialPolicy):
+    """Spatial-isolated vNPUs, no harvesting (MIG-like static
+    partition)."""
+
+    harvest = False
+
+
+@register_policy("neu10")
+class Neu10Policy(_SpatialPolicy):
+    """Spatial-isolated + dynamic μTOp scheduling with ME/VE
+    harvesting and reclaim preemption (the paper's system)."""
+
+    harvest = True
+
+
+@register_policy("v10")
+class V10Policy(SchedulerPolicy):
+    """V10: operator-granular temporal sharing; an ME operator
+    occupies ALL MEs (VLIW control-flow coupling); VE-only operators
+    from other vNPUs may run concurrently; priority-based
+    preemption."""
+
+    spatial = False
+    isa = "vliw"
+
+    def schedule(self, sim: "Simulator", t: float) -> None:
+        order = sorted(sim.active_tenants(),
+                       key=lambda r: r.active_cycles / r.spec.weight)
+        free_mes = [e for e in sim.mes if e.free]
+        all_mes_free = len(free_mes) == len(sim.mes)
+        for rt in order:
+            # ME op: needs the WHOLE ME array (VLIW coupling)
+            if rt.ready_me:
+                if all_mes_free:
+                    chunk = rt.ready_me.pop(0)
+                    sim.dispatch(chunk, list(sim.mes), t)
+                    all_mes_free = False
+                else:
+                    # priority-based preemption of the running op
+                    running = next((e for e in sim.mes if not e.free
+                                    and e.chunk is not None), None)
+                    if running is not None and running.tenant >= 0:
+                        holder = sim.tenants[running.tenant]
+                        deficit = (holder.active_cycles / holder.spec.weight
+                                   - rt.active_cycles / rt.spec.weight)
+                        if deficit > sim.fair_slice:
+                            sim.preempt(running, t)
+            # VE-only ops run on the free VE pool concurrently
+            if rt.ready_ve:
+                free_ves = [e for e in sim.ves if e.free]
+                if free_ves:
+                    chunk = rt.ready_ve.pop(0)
+                    sim.dispatch(chunk, free_ves, t)
+        # note: dispatching a VE op across k free VEs divides its span
+        # (VLIW VE ops address all VE slots).
+
+
+@register_policy("pmt")
+class PMTPolicy(SchedulerPolicy):
+    """PREMA-style whole-core temporal sharing; preemptive fair
+    scheduling at operator boundaries."""
+
+    spatial = False
+    isa = "vliw"
+
+    def __init__(self) -> None:
+        self._last: int = -1  # tenant currently holding the core
+
+    def schedule(self, sim: "Simulator", t: float) -> None:
+        # whole core belongs to one tenant at a time (PREMA-style
+        # task-level sharing): the core changes hands at operator
+        # boundaries only when the fair-share deficit is large —
+        # switches are coarse and expensive.
+        busy = any(not e.free for e in sim.mes + sim.ves)
+        if busy:
+            return
+        order = sorted(
+            (rt for rt in sim.active_tenants()
+             if rt.ready_me or rt.ready_ve),
+            key=lambda r: r.active_cycles / r.spec.weight)
+        if not order:
+            return
+        rt = order[0]
+        if self._last >= 0 and self._last != rt.idx:
+            holder = sim.tenants[self._last]
+            if holder.ready_me or holder.ready_ve:
+                deficit = (holder.active_cycles / holder.spec.weight
+                           - rt.active_cycles / rt.spec.weight)
+                if deficit < 4 * sim.fair_slice:
+                    rt = holder  # keep the core; not worth a switch yet
+        # whole-core context switch cost when the core changes hands
+        penalty = 0.0
+        if self._last not in (-1, rt.idx):
+            penalty = float(sim.core.ctx_switch_cycles * sim.core.n_me)
+        self._last = rt.idx
+        if rt.ready_me:
+            chunk = rt.ready_me.pop(0)
+            chunk.penalty += penalty
+            sim.dispatch(chunk, list(sim.mes), t)
+        elif rt.ready_ve:
+            chunk = rt.ready_ve.pop(0)
+            chunk.penalty += penalty
+            sim.dispatch(chunk, list(sim.ves), t)
+
+    def on_tenant_removed(self, sim: "Simulator", rt) -> None:
+        if self._last == rt.idx:
+            self._last = -1

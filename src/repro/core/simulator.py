@@ -1,5 +1,5 @@
-"""Event-driven NPU simulator (§III-G) with the μTOp / operation
-schedulers (§III-E) and the paper's baselines (§V-A).
+"""Event-driven NPU simulator (§III-G): a policy-agnostic event loop
+over μTOp / operator chunks.
 
 Granularity: μTOp events with cycle-accurate durations. An ME μTOp
 occupies one ME; a VE μTOp is split into n_y slot-chunks served by
@@ -8,31 +8,42 @@ in-flight memory-demanding μTOps (fair sharing, §III-B). The ME
 preemption penalty is the paper's 256 cycles (drain partial sums +
 weights of a 128x128 array).
 
-Policies
---------
-* ``pmt``      — PREMA-style whole-core temporal sharing; preemptive
-                 fair scheduling at operator boundaries.
-* ``v10``      — V10: operator-granular temporal sharing; an ME
-                 operator occupies ALL MEs (VLIW control-flow
-                 coupling); VE-only operators from other vNPUs may run
-                 concurrently; priority-based preemption.
-* ``neu10_nh`` — spatial-isolated vNPUs, no harvesting (MIG-like).
-* ``neu10``    — spatial-isolated + dynamic μTOp scheduling with
-                 ME/VE harvesting and reclaim preemption.
+Scheduling disciplines live in :mod:`repro.core.policies` — the
+simulator resolves a policy name (or class/instance) through the
+registry and delegates every dispatch decision to it. The paper's
+four disciplines (``pmt`` / ``v10`` / ``neu10_nh`` / ``neu10``) ship
+as built-in registry entries; third parties add more with
+``@register_policy``.
+
+Two driving modes:
+
+* **closed loop** (legacy): each tenant re-issues its request the
+  moment the previous one completes, until ``n_requests`` — call
+  :meth:`Simulator.run`.
+* **open loop** (online serving): requests arrive at externally
+  injected timestamps (:meth:`Simulator.inject_request`), queue per
+  tenant, and latency is measured from *arrival*; tenants can be
+  added, removed, and re-sized mid-run — drive with
+  :meth:`Simulator.run_until`. The `repro.serve.session` layer builds
+  the operator-facing API on top of this.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import math
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.neuisa import ME, VE, MuTOpGroup, NeuISAProgram, VLIWProgram
+from repro.core.policies import PolicyLike, resolve_policy
 from repro.core.vnpu import VNPU
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
 EPS = 1e-9
+
+_ARRIVAL = "arr"  # heap event kind for open-loop request arrivals
 
 
 # ----------------------------------------------------------------------
@@ -56,7 +67,7 @@ class Chunk:
 class TenantSpec:
     program: Union[NeuISAProgram, VLIWProgram]
     vnpu: VNPU
-    n_requests: int = 8
+    n_requests: int = 8          # closed-loop target (ignored open loop)
     weight: float = 1.0          # fair-share priority
 
 
@@ -64,6 +75,7 @@ class TenantSpec:
 class TenantStats:
     name: str
     latencies: List[float] = field(default_factory=list)
+    completions: List[float] = field(default_factory=list)  # finish times
     requests_done: int = 0
     me_work: float = 0.0
     ve_work: float = 0.0
@@ -130,12 +142,19 @@ class _Engine:
 
 
 class _TenantRT:
-    """Runtime cursor over a tenant's program (closed-loop requests)."""
+    """Runtime cursor over a tenant's program.
 
-    def __init__(self, idx: int, spec: TenantSpec, core: NPUCoreConfig):
+    Closed loop: a new request starts the instant the previous one
+    completes. Open loop: requests arrive via ``pending_arrivals`` and
+    the cursor idles between them (``in_request`` False)."""
+
+    def __init__(self, idx: int, spec: TenantSpec, core: NPUCoreConfig,
+                 open_loop: bool = False):
         self.idx = idx
         self.spec = spec
         self.core = core
+        self.open_loop = open_loop
+        self.removed = False
         self.is_neuisa = isinstance(spec.program, NeuISAProgram)
         self.me_ids = set(spec.vnpu.me_ids)
         self.ve_ids = set(spec.vnpu.ve_ids)
@@ -144,6 +163,8 @@ class _TenantRT:
         self.req_start = 0.0
         self.cursor = -1                  # group / op index
         self.outstanding = 0              # chunks of current step in flight
+        self.in_request = False
+        self.pending_arrivals: Deque[float] = deque()
         self.ready_me: List[Chunk] = []
         self.ready_ve: List[Chunk] = []
         self.loop_remaining: Dict[int, int] = {}
@@ -151,26 +172,38 @@ class _TenantRT:
         self.finished_at = math.inf
 
     # ---------------- program stepping ----------------
-    def start_request(self, t: float) -> None:
-        self.req_start = t
+    def start_request(self, t: float, arrival: Optional[float] = None) -> None:
+        self.req_start = t if arrival is None else arrival
+        self.in_request = True
         self.cursor = -1
         self.loop_remaining = {}
         self._advance(t)
 
+    def _on_request_complete(self, t: float) -> bool:
+        """Record the finished request; return True if a new one
+        started (ready queues refilled)."""
+        self.stats.latencies.append(t - self.req_start)
+        self.stats.completions.append(t)
+        self.stats.requests_done += 1
+        if self.open_loop:
+            if self.pending_arrivals:
+                self.start_request(t, arrival=self.pending_arrivals.popleft())
+                return True
+            self.in_request = False
+            return False
+        if (self.stats.requests_done >= self.spec.n_requests
+                and not self.done):
+            self.done = True
+            self.finished_at = t
+        self.start_request(t)
+        return True
+
     def _advance(self, t: float) -> None:
         """Move to the next non-empty group/op; refill ready queues."""
-        prog = self.spec.program
         while True:
             nxt = self._next_cursor()
             if nxt is None:
-                # request complete
-                self.stats.latencies.append(t - self.req_start)
-                self.stats.requests_done += 1
-                if (self.stats.requests_done >= self.spec.n_requests
-                        and not self.done):
-                    self.done = True
-                    self.finished_at = t
-                self.start_request(t)
+                self._on_request_complete(t)
                 return
             self.cursor = nxt
             if self._fill_ready():
@@ -241,90 +274,230 @@ class _TenantRT:
         if self.outstanding <= 0 and not self.ready_me and not self.ready_ve:
             self._advance(t)
 
+    def arrive(self, t: float) -> None:
+        """Open-loop request arrival at time t."""
+        if self.removed:
+            return
+        if self.in_request:
+            self.pending_arrivals.append(t)
+        else:
+            self.start_request(t)
+
 
 # ----------------------------------------------------------------------
 class Simulator:
     """Deterministic event-driven simulator for one physical NPU core
-    shared by collocated vNPU tenants."""
+    shared by collocated vNPU tenants, under any registered
+    :class:`~repro.core.policies.SchedulerPolicy`."""
 
     def __init__(
         self,
-        tenants: Sequence[TenantSpec],
-        policy: str = "neu10",
+        tenants: Sequence[TenantSpec] = (),
+        policy: PolicyLike = "neu10",
         core: NPUCoreConfig = DEFAULT_CORE,
         hbm_scale: float = 1.0,
         fair_slice: float = 50_000.0,   # cycles of service imbalance
         max_events: int = 20_000_000,
     ):
-        assert policy in ("pmt", "v10", "neu10_nh", "neu10"), policy
-        self.policy = policy
+        self.policy_obj = resolve_policy(policy)
+        self.policy = self.policy_obj.name or type(self.policy_obj).__name__
         self.core = core
         self.hbm_scale = hbm_scale
         self.fair_slice = fair_slice
         self.max_events = max_events
-        self.tenants = [_TenantRT(i, s, core) for i, s in enumerate(tenants)]
-        spatial = policy in ("neu10", "neu10_nh")
-        self.mes = [
-            _Engine(ME, i, self._owner_of(ME, i) if spatial else None)
-            for i in range(core.n_me)
-        ]
-        self.ves = [
-            _Engine(VE, i, self._owner_of(VE, i) if spatial else None)
-            for i in range(core.n_ve)
-        ]
+        self.now = 0.0
+        self.tenants: List[_TenantRT] = []
+        self.mes = [_Engine(ME, i, None) for i in range(core.n_me)]
+        self.ves = [_Engine(VE, i, None) for i in range(core.n_ve)]
         self._heap: List[Tuple[float, int, str, int, int]] = []
         self._seq = itertools.count()
         self._tok = itertools.count()
-
-    def _owner_of(self, kind: str, eid: int) -> Optional[int]:
-        for t in self.tenants:
-            ids = t.me_ids if kind == ME else t.ve_ids
-            if eid in ids:
-                return t.idx
-        return None
+        self._events = 0
+        self.policy_obj.on_attach(self)
+        for s in tenants:
+            self.add_tenant(s)
 
     # ------------------------------------------------------------------
+    # dynamic tenant control plane
+    # ------------------------------------------------------------------
+    def active_tenants(self) -> List[_TenantRT]:
+        return [rt for rt in self.tenants if not rt.removed]
+
+    def add_tenant(self, spec: TenantSpec, open_loop: bool = False) -> int:
+        """Attach a tenant (possibly mid-run). Closed-loop tenants
+        start their request train immediately; open-loop tenants idle
+        until :meth:`inject_request`. Returns the tenant index."""
+        idx = len(self.tenants)
+        rt = _TenantRT(idx, spec, self.core, open_loop=open_loop)
+        # a late joiner starts from the lowest live fair-share counter,
+        # not zero — otherwise it would starve everyone until it
+        # "caught up" on service it never queued for
+        live = [r.active_cycles for r in self.active_tenants()]
+        if live:
+            rt.active_cycles = min(live)
+        self.tenants.append(rt)
+        if self.policy_obj.spatial:
+            self._claim_engines(rt)
+        if not open_loop:
+            rt.start_request(self.now)
+        self.policy_obj.on_tenant_added(self, rt)
+        return idx
+
+    def remove_tenant(self, idx: int) -> None:
+        """Detach a tenant mid-run: cancel its in-flight chunks (the
+        context is discarded, not drained — vNPU deallocation cleans
+        the engines), release engine ownership, drop queued work."""
+        rt = self.tenants[idx]
+        if rt.removed:
+            return
+        for e in self.mes + self.ves:
+            if not e.free and e.chunk is not None and e.tenant == idx:
+                e.token = -1       # pending completion event goes stale
+                e.chunk = None
+                e.tenant = -1
+                e.harvested = False
+            if e.owner == idx:
+                e.owner = None
+        rt.ready_me.clear()
+        rt.ready_ve.clear()
+        rt.pending_arrivals.clear()
+        rt.in_request = False
+        rt.removed = True
+        rt.done = True
+        rt.finished_at = min(rt.finished_at, self.now)
+        self.policy_obj.on_tenant_removed(self, rt)
+        self._schedule(self.now)
+
+    def update_tenant_vnpu(self, idx: int, vnpu: VNPU) -> None:
+        """Re-size a live tenant onto a reconfigured vNPU (paper
+        hypercall (2) taking effect mid-run). In-flight chunks finish
+        where they run; ownership moves to the new engine set."""
+        rt = self.tenants[idx]
+        if rt.removed:
+            raise ValueError(f"tenant {idx} was deregistered")
+        rt.spec.vnpu = vnpu
+        rt.me_ids = set(vnpu.me_ids)
+        rt.ve_ids = set(vnpu.ve_ids)
+        if self.policy_obj.spatial:
+            for e in self.mes + self.ves:
+                if e.owner == idx:
+                    e.owner = None
+            self._claim_engines(rt)
+        self._schedule(self.now)
+
+    def _claim_engines(self, rt: _TenantRT) -> None:
+        for pool, ids in ((self.mes, rt.me_ids), (self.ves, rt.ve_ids)):
+            for e in pool:
+                if e.eid in ids:
+                    if e.owner is not None and e.owner != rt.idx:
+                        raise ValueError(
+                            f"engine {e.kind}{e.eid} already owned by "
+                            f"tenant {e.owner}; vNPU mapping conflict")
+                    e.owner = rt.idx
+
+    def inject_request(self, idx: int, at: float) -> None:
+        """Open-loop arrival: tenant ``idx`` receives a request at
+        cycle ``at`` (>= now)."""
+        rt = self.tenants[idx]
+        if not rt.open_loop:
+            raise ValueError(f"tenant {idx} is closed-loop")
+        if rt.removed:
+            raise ValueError(f"tenant {idx} was deregistered")
+        if at < self.now - EPS:
+            raise ValueError(f"arrival at {at} is in the past (now={self.now})")
+        heapq.heappush(self._heap,
+                       (max(at, self.now), next(self._seq), _ARRIVAL, idx, 0))
+
+    # ------------------------------------------------------------------
+    # event loop
+    # ------------------------------------------------------------------
     def run(self) -> SimResult:
-        t = 0.0
-        for rt in self.tenants:
-            rt.start_request(0.0)
-        self._schedule(0.0)
-        events = 0
+        """Closed-loop batch run: simulate until every closed-loop
+        tenant has completed its ``n_requests``. Open-loop tenants
+        (which never 'finish') don't gate termination — drive those
+        with :meth:`run_until` instead."""
+        closed = [rt for rt in self.tenants if not rt.open_loop]
+        if not closed:
+            raise ValueError(
+                "run() needs at least one closed-loop tenant; "
+                "open-loop simulations are driven with run_until()")
+        self._schedule(self.now)
         while self._heap:
-            events += 1
-            if events > self.max_events:
-                raise RuntimeError("simulator exceeded max_events")
-            t, _, kind, eid, token = heapq.heappop(self._heap)
-            eng = (self.mes if kind == ME else self.ves)[eid]
-            if eng.token != token:
-                continue  # stale (preempted)
-            self._complete(eng, t)
-            # batch any same-time completions before rescheduling
-            while self._heap and self._heap[0][0] <= t + EPS:
-                t2, _, k2, e2, tok2 = heapq.heappop(self._heap)
-                eng2 = (self.mes if k2 == ME else self.ves)[e2]
-                if eng2.token == tok2:
-                    self._complete(eng2, t2)
-            if all(rt.done for rt in self.tenants):
+            t = self._step()
+            if t is None:
+                continue
+            if all(rt.done for rt in closed):
                 break
             self._schedule(t)
-            if not self._heap:
-                pending = [rt.idx for rt in self.tenants
-                           if rt.ready_me or rt.ready_ve]
+            self._check_liveness(t)
+        makespan = max((rt.finished_at for rt in closed), default=self.now)
+        if not all(rt.done for rt in closed):
+            makespan = self.now
+        return self._result(max(makespan, EPS))
+
+    def run_until(self, t_end: float = math.inf) -> float:
+        """Open-loop driver: process events up to ``t_end`` cycles
+        (inclusive); returns the new simulation time. With no bound,
+        drains every injected arrival and all in-flight work."""
+        self._schedule(self.now)
+        while self._heap and self._heap[0][0] <= t_end + EPS:
+            t = self._step()
+            if t is None:
+                continue
+            self._schedule(t)
+            self._check_liveness(t)
+        if math.isfinite(t_end) and t_end > self.now:
+            self.now = t_end
+        return self.now
+
+    def _step(self) -> Optional[float]:
+        """Pop and apply the next event (plus its same-time batch).
+        Returns the event time, or None for a stale token."""
+        self._events += 1
+        if self._events > self.max_events:
+            raise RuntimeError("simulator exceeded max_events")
+        t, _, kind, eid, token = heapq.heappop(self._heap)
+        if not self._apply(kind, eid, token, t):
+            return None
+        self.now = t
+        # batch any same-time events before rescheduling
+        while self._heap and self._heap[0][0] <= t + EPS:
+            t2, _, k2, e2, tok2 = heapq.heappop(self._heap)
+            self._apply(k2, e2, tok2, t2)
+        return t
+
+    def _apply(self, kind: str, eid: int, token: int, t: float) -> bool:
+        if kind == _ARRIVAL:
+            self.tenants[eid].arrive(t)
+            return True
+        eng = (self.mes if kind == ME else self.ves)[eid]
+        if eng.token != token:
+            return False  # stale (preempted / cancelled)
+        self._complete(eng, t)
+        return True
+
+    def _check_liveness(self, t: float) -> None:
+        if not self._heap:
+            pending = [rt.idx for rt in self.active_tenants()
+                       if rt.ready_me or rt.ready_ve]
+            if pending:
                 raise RuntimeError(
                     f"scheduler deadlock at t={t}: tenants {pending} have "
                     f"ready work but nothing is in flight")
-        makespan = max((rt.finished_at for rt in self.tenants), default=t)
-        if not all(rt.done for rt in self.tenants):
-            makespan = t
+
+    def _result(self, makespan: float) -> SimResult:
         return SimResult(
             policy=self.policy,
-            makespan=max(makespan, EPS),
+            makespan=makespan,
             tenants=[rt.stats for rt in self.tenants],
             n_me=self.core.n_me,
             n_ve=self.core.n_ve,
             freq_hz=self.core.freq_hz,
         )
+
+    def result(self) -> SimResult:
+        """Snapshot of the stats so far (open-loop sessions)."""
+        return self._result(max(self.now, EPS))
 
     # ------------------------------------------------------------------
     def _complete(self, eng: _Engine, t: float) -> None:
@@ -419,8 +592,12 @@ class Simulator:
                 mine += 1
         return len(tenants), mine
 
-    def _dispatch(self, chunk: Chunk, engines: List[_Engine], t: float,
-                  harvested: bool = False) -> None:
+    # ------------------------------------------------------------------
+    # policy-facing dispatch API (stable for third-party policies)
+    # ------------------------------------------------------------------
+    def dispatch(self, chunk: Chunk, engines: List[_Engine], t: float,
+                 harvested: bool = False) -> None:
+        """Start ``chunk`` on one or more free engines at time ``t``."""
         token = next(self._tok)
         dur = self._duration(chunk, len(engines))
         for e in engines:
@@ -434,8 +611,8 @@ class Simulator:
         heapq.heappush(
             self._heap, (t + dur, next(self._seq), lead.kind, lead.eid, token))
 
-    def _preempt(self, eng: _Engine, t: float,
-                 blocked_owner: Optional[int] = None) -> None:
+    def preempt(self, eng: _Engine, t: float,
+                blocked_owner: Optional[int] = None) -> None:
         """Preempt the chunk on `eng` (and sibling engines for VLIW
         ops): remaining work returns to its tenant's ready queue with
         the context-switch penalty; engines drain for ctx cycles.
@@ -483,142 +660,18 @@ class Simulator:
             (t + ctx, next(self._seq), engines[0].kind, engines[0].eid,
              token))
 
-    # ------------------------------------------------------------------
+    # back-compat aliases (pre-registry internal names)
+    _dispatch = dispatch
+    _preempt = preempt
+
     def _schedule(self, t: float) -> None:
-        if self.policy in ("neu10", "neu10_nh"):
-            self._schedule_spatial(t, harvest=self.policy == "neu10")
-        elif self.policy == "v10":
-            self._schedule_v10(t)
-        else:
-            self._schedule_pmt(t)
-
-    # ---------------- Neu10 / Neu10-NH ----------------
-    def _schedule_spatial(self, t: float, harvest: bool) -> None:
-        # 1) owners dispatch on their own engines (MEs then VEs)
-        for pool, ready_attr in ((self.mes, "ready_me"), (self.ves, "ready_ve")):
-            for rt in self.tenants:
-                ready: List[Chunk] = getattr(rt, ready_attr)
-                if ready_attr == "ready_ve":
-                    # operation scheduler: prioritize drains of ME groups
-                    ready.sort(key=lambda c: not c.from_me_group)
-                own_free = [e for e in pool
-                            if e.owner == rt.idx and e.free]
-                while own_free and ready:
-                    self._dispatch(ready.pop(0), [own_free.pop(0)], t)
-                # 2) reclaim: preempt harvested μTOps on my engines.
-                # Engines drain in PARALLEL, so the owner is wall-
-                # blocked for ONE ctx window per reclaim pass (what
-                # Table III measures), however many engines it takes
-                # back.
-                if harvest and ready:
-                    reclaimed = 0
-                    for e in pool:
-                        if reclaimed >= len(ready):
-                            break
-                        if (e.owner == rt.idx and not e.free
-                                and e.chunk is not None
-                                and e.tenant != rt.idx):
-                            self._preempt(e, t)
-                            reclaimed += 1
-                    if reclaimed:
-                        ctx = float(self.core.ctx_switch_cycles
-                                    if pool is self.mes else 32)
-                        rt.stats.reclaim_blocked += ctx
-        if not harvest:
-            return
-        # 3) harvest: leftover ready chunks take others' idle engines.
-        for pool, ready_attr in ((self.mes, "ready_me"), (self.ves, "ready_ve")):
-            # only engines whose owner has no pending demand are up for
-            # harvest (§III-E scheduling policy)
-            for rt in sorted(self.tenants, key=lambda r: r.active_cycles):
-                ready = getattr(rt, ready_attr)
-                if not ready:
-                    continue
-                for e in pool:
-                    if not ready:
-                        break
-                    if not e.free or e.owner == rt.idx:
-                        continue
-                    owner = self.tenants[e.owner] if e.owner is not None else None
-                    owner_ready = getattr(owner, ready_attr) if owner else []
-                    if owner_ready:
-                        continue  # owner will use it this round
-                    self._dispatch(ready.pop(0), [e], t, harvested=True)
-
-    # ---------------- V10 ----------------
-    def _schedule_v10(self, t: float) -> None:
-        order = sorted(self.tenants,
-                       key=lambda r: r.active_cycles / r.spec.weight)
-        free_mes = [e for e in self.mes if e.free]
-        all_mes_free = len(free_mes) == len(self.mes)
-        for rt in order:
-            # ME op: needs the WHOLE ME array (VLIW coupling)
-            if rt.ready_me:
-                if all_mes_free:
-                    chunk = rt.ready_me.pop(0)
-                    self._dispatch(chunk, list(self.mes), t)
-                    all_mes_free = False
-                else:
-                    # priority-based preemption of the running op
-                    running = next((e for e in self.mes if not e.free
-                                    and e.chunk is not None), None)
-                    if running is not None and running.tenant >= 0:
-                        holder = self.tenants[running.tenant]
-                        deficit = (holder.active_cycles / holder.spec.weight
-                                   - rt.active_cycles / rt.spec.weight)
-                        if deficit > self.fair_slice:
-                            self._preempt(running, t)
-            # VE-only ops run on the free VE pool concurrently
-            if rt.ready_ve:
-                free_ves = [e for e in self.ves if e.free]
-                if free_ves:
-                    chunk = rt.ready_ve.pop(0)
-                    self._dispatch(chunk, free_ves, t)
-        # note: dispatching a VE op across k free VEs divides its span
-        # (VLIW VE ops address all VE slots).
-
-    # ---------------- PMT ----------------
-    def _schedule_pmt(self, t: float) -> None:
-        # whole core belongs to one tenant at a time (PREMA-style
-        # task-level sharing): the core changes hands at operator
-        # boundaries only when the fair-share deficit is large —
-        # switches are coarse and expensive.
-        busy = any(not e.free for e in self.mes + self.ves)
-        if busy:
-            return
-        order = sorted(
-            (rt for rt in self.tenants if rt.ready_me or rt.ready_ve),
-            key=lambda r: r.active_cycles / r.spec.weight)
-        if not order:
-            return
-        rt = order[0]
-        last = getattr(self, "_pmt_last", None)
-        if last is not None and last != rt.idx:
-            holder = self.tenants[last]
-            if holder.ready_me or holder.ready_ve:
-                deficit = (holder.active_cycles / holder.spec.weight
-                           - rt.active_cycles / rt.spec.weight)
-                if deficit < 4 * self.fair_slice:
-                    rt = holder  # keep the core; not worth a switch yet
-        # whole-core context switch cost when the core changes hands
-        penalty = 0.0
-        if getattr(self, "_pmt_last", None) not in (None, rt.idx):
-            penalty = float(self.core.ctx_switch_cycles * self.core.n_me)
-        self._pmt_last = rt.idx
-        if rt.ready_me:
-            chunk = rt.ready_me.pop(0)
-            chunk.penalty += penalty
-            self._dispatch(chunk, list(self.mes), t)
-        elif rt.ready_ve:
-            chunk = rt.ready_ve.pop(0)
-            chunk.penalty += penalty
-            self._dispatch(chunk, list(self.ves), t)
+        self.policy_obj.schedule(self, t)
 
 
 # ----------------------------------------------------------------------
 def run_collocation(
     specs: Sequence[TenantSpec],
-    policy: str,
+    policy: PolicyLike,
     core: NPUCoreConfig = DEFAULT_CORE,
     hbm_scale: float = 1.0,
 ) -> SimResult:

@@ -48,9 +48,11 @@ _COLL_RE = re.compile(
     r"(-start)?\(",
 )
 # dot ops: result shape = lhs batch+free x rhs free; flops = 2 * prod
-# (result) * prod(contracted lhs dims)
+# (result) * prod(contracted lhs dims). Operands are captured as one
+# blob and split on top-level commas: live XLA prints inline operand
+# types (`f32[32,32]{1,0} %x`) whose brackets/braces contain commas.
 _DOT_RE = re.compile(
-    r"=\s*(\w+\[[\d,]*\])[^=]*\bdot\(\s*([^,)]+),\s*([^,)]+)\)"
+    r"=\s*(\w+\[[\d,]*\])[^=]*\bdot\(([^)]*)\)"
     r".*?lhs_contracting_dims=\{([\d,]*)\}")
 _DOT_LHS_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 # top-level ops whose results plausibly materialize in HBM
@@ -108,15 +110,39 @@ def _dims(s: str) -> List[int]:
     return [int(d) for d in s.split(",") if d] if s else []
 
 
+def _split_top_level(s: str) -> List[str]:
+    """Split an operand list on commas outside []/{}/()."""
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return [p for p in parts if p]
+
+
 def _dot_flops(line: str, operand_shapes: Dict[str, str]) -> float:
     """FLOPs of one HLO dot line: 2 * |result| * K_contracted."""
     m = _DOT_RE.search(line)
     if not m:
         return 0.0
     result = _shape_elems(m.group(1))
-    lhs_name = m.group(2).strip().split(" ")[-1]
+    operands = _split_top_level(m.group(2))
+    if not operands:
+        return 0.0
+    lhs = operands[0]
+    lhs_name = lhs.split(" ")[-1]
     # lhs shape: prefer inline type annotation, else operand table
-    lm = _DOT_LHS_SHAPE_RE.search(m.group(2))
+    lm = _DOT_LHS_SHAPE_RE.search(lhs)
     lhs_shape = None
     if lm:
         lhs_shape = _dims(lm.group(2))
@@ -127,7 +153,7 @@ def _dot_flops(line: str, operand_shapes: Dict[str, str]) -> float:
     if lhs_shape is None:
         return 0.0
     k = 1
-    for ci in _dims(m.group(4)):
+    for ci in _dims(m.group(3)):
         if ci < len(lhs_shape):
             k *= lhs_shape[ci]
     return 2.0 * result * k

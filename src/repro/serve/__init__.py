@@ -1,4 +1,26 @@
 from repro.serve.engine import ServeEngine
+from repro.serve.session import (
+    NPUCluster,
+    PoissonArrivals,
+    SLOAutoscaler,
+    ServingSession,
+    TenantHandle,
+    TenantReport,
+    TraceArrivals,
+    run_closed_loop,
+)
 from repro.serve.vserve import MultiTenantServer, Tenant
 
-__all__ = ["ServeEngine", "MultiTenantServer", "Tenant"]
+__all__ = [
+    "ServeEngine",
+    "NPUCluster",
+    "ServingSession",
+    "PoissonArrivals",
+    "TraceArrivals",
+    "SLOAutoscaler",
+    "TenantHandle",
+    "TenantReport",
+    "run_closed_loop",
+    "MultiTenantServer",
+    "Tenant",
+]

@@ -87,7 +87,10 @@ class ServeEngine:
                 self.params, cache, {"tokens": nxt_in, "cache_index": idx})
         t_decode = time.time() - t0
         new = np.concatenate(outs, axis=-1)
-        n_tok = new.size
+        # tokens/s counts generated TIMESTEPS per sequence: an audio
+        # model emits K parallel codebook streams per step, which is
+        # still one token of audio — new.size would over-count by K
+        n_tok = new.shape[0] * new.shape[-1]
         return GenerationResult(
             tokens=new,
             prefill_s=t_prefill,

@@ -1,0 +1,542 @@
+"""Online multi-tenant vNPU serving control plane.
+
+Layered request-level API over the policy-agnostic simulator:
+
+* :class:`NPUCluster` — the resource plane: vNPU manager + pay-as-you-
+  go admission (Eq. 1-4 allocator, constrained fallback, §III-B/C),
+  tenant register / deregister / resize. Policy-agnostic: any
+  registered :class:`~repro.core.policies.SchedulerPolicy` name (or
+  class) selects the mapping scheme and compiler front-end.
+* :class:`ServingSession` — the request plane: an *open-loop* run on
+  one pNPU core. Requests arrive from Poisson or trace-driven arrival
+  processes (or one at a time via :meth:`ServingSession.submit`),
+  queue per tenant, and are scheduled at μTOp granularity by the
+  cluster's policy. Tenants can be registered, deregistered, and
+  re-sized **mid-run** — the simulation never restarts, exercising
+  ``VNPUManager.reconfigure`` dynamically. Latency is measured from
+  arrival (queueing included), so the session reports true per-request
+  p95 / mean / throughput.
+* :class:`SLOAutoscaler` — SLO-aware autoscaling as a *hook*: after
+  every ``run_until`` window the session offers each tenant's recent
+  latency tail to the hook, which may grow its EU budget (a resize,
+  not a restart). Operators plug in their own policy by passing any
+  callable with the same signature.
+
+Example::
+
+    cluster = NPUCluster(policy="neu10")
+    sess = ServingSession(cluster)
+    llm = sess.register("llm", lm_trace(cfg, 8, 512, "prefill"), eu_budget=4)
+    sess.submit_arrivals(llm, PoissonArrivals(rate_rps=80.0, n=200, seed=0))
+    sess.drain()
+    print(sess.report()[0].p95_ms)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.allocator import (Allocation, allocate_for_trace,
+                                  estimate_memory, eu_utilization)
+from repro.core.mapper import ReconfigureError, VNPUManager
+from repro.core.policies import PolicyLike, resolve_policy
+from repro.core.simulator import SimResult, Simulator, TenantSpec
+from repro.core.vnpu import VNPU, VNPUConfig
+from repro.npu.cost_model import WorkloadTrace
+from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
+from repro.npu.trace import lm_trace
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class TenantHandle:
+    """A registered tenant, tracked across the cluster and (when
+    serving) the live simulation."""
+
+    name: str
+    trace: WorkloadTrace
+    eu_budget: int
+    priority: float = 1.0
+    slo_p95_ms: Optional[float] = None
+    allocation: Optional[Allocation] = None
+    vnpu: Optional[VNPU] = None
+    sim_idx: int = -1            # index in the live simulator (-1: none)
+    attached_at: float = 0.0     # cycles when the session attached it
+
+
+@dataclass
+class TenantReport:
+    name: str
+    n_me: int
+    n_ve: int
+    p95_ms: float
+    mean_ms: float
+    throughput_rps: float
+    slo_ok: Optional[bool]
+    harvested_me_ms: float
+    blocked_ms: float
+    requests_done: int = 0
+    queued: int = 0              # open loop: arrivals still waiting
+
+
+# ----------------------------------------------------------------------
+# arrival processes (open loop)
+# ----------------------------------------------------------------------
+@dataclass
+class PoissonArrivals:
+    """Memoryless open-loop arrivals: ``n`` requests at ``rate_rps``
+    requests/second from ``start_s``, seeded for determinism."""
+
+    rate_rps: float
+    n: int
+    seed: int = 0
+    start_s: float = 0.0
+
+    def times_s(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        gaps = rng.exponential(1.0 / self.rate_rps, size=self.n)
+        return self.start_s + np.cumsum(gaps)
+
+
+@dataclass
+class TraceArrivals:
+    """Trace-driven arrivals: explicit request timestamps (seconds),
+    e.g. replayed from production logs."""
+
+    times: Sequence[float]
+
+    def times_s(self) -> np.ndarray:
+        return np.asarray(sorted(self.times), dtype=float)
+
+
+ArrivalProcess = object  # anything with .times_s() -> seconds array
+
+
+# ----------------------------------------------------------------------
+class NPUCluster:
+    """Resource plane: admission control + vNPU placement for one or
+    more pNPUs, under a pluggable scheduler policy."""
+
+    def __init__(self, core: NPUCoreConfig = DEFAULT_CORE,
+                 n_pnpus: int = 1, policy: PolicyLike = "neu10"):
+        self.policy_cls = type(resolve_policy(policy))
+        self.core = core
+        self.manager = VNPUManager(n_pnpus=n_pnpus, core=core)
+        self.tenants: List[TenantHandle] = []
+
+    @property
+    def policy_name(self) -> str:
+        return self.policy_cls.name or self.policy_cls.__name__
+
+    @property
+    def mapping(self) -> str:
+        return "spatial" if self.policy_cls.spatial else "temporal"
+
+    def compile(self, trace: WorkloadTrace):
+        """Compile a trace into the program form the policy schedules
+        (NeuISA μTOp groups or whole VLIW operators)."""
+        return self.policy_cls.compile_program(trace, self.core)
+
+    # ------------------------------------------------------------------
+    def register(self, name: str, trace: WorkloadTrace, eu_budget: int,
+                 priority: float = 1.0,
+                 slo_p95_ms: Optional[float] = None) -> TenantHandle:
+        """Pay-as-you-go entry point: the tenant buys `eu_budget` EUs;
+        the allocator picks the ME/VE split from the compile-time
+        profile (§III-B)."""
+        alloc = allocate_for_trace(trace, eu_budget, self.core)
+        sram, hbm = estimate_memory(trace, alloc.n_me, self.core)
+        try:
+            vnpu = self.manager.create(
+                VNPUConfig(n_me=alloc.n_me, n_ve=alloc.n_ve,
+                           sram_bytes=sram, hbm_bytes=hbm,
+                           priority=priority),
+                name=name, mapping=self.mapping)
+        except RuntimeError:
+            # admission control: the unconstrained Eq.-4 pick doesn't
+            # fit next to existing tenants — re-allocate over the
+            # FEASIBLE splits, still maximizing Eq. 2. Harvesting
+            # recovers most of the gap at runtime (§III-B).
+            alloc, vnpu = self._constrained_register(
+                trace, alloc, eu_budget, priority, name)
+        h = TenantHandle(name=name, trace=trace, eu_budget=eu_budget,
+                         priority=priority, slo_p95_ms=slo_p95_ms,
+                         allocation=alloc, vnpu=vnpu)
+        self.tenants.append(h)
+        return h
+
+    def _constrained_register(self, trace, alloc, eu_budget, priority,
+                              name) -> Tuple[Allocation, VNPU]:
+        feasible = set()
+        for cs in self.manager.cores:
+            free_me, free_ve = len(cs.free_mes), len(cs.free_ves)
+            for n_me in range(1, free_me + 1):
+                for n_ve in range(1, free_ve + 1):
+                    if n_me + n_ve <= eu_budget:
+                        feasible.add((n_me, n_ve))
+        if not feasible:
+            raise RuntimeError(
+                f"admission denied for {name}: no free EUs on any pNPU")
+        # deterministic: Eq.-2 utilization first, then the larger
+        # (n_me, n_ve) tuple — never set iteration order
+        n_me, n_ve = max(
+            feasible,
+            key=lambda s: (eu_utilization(alloc.m, alloc.v, *s), s))
+        sram, hbm = estimate_memory(trace, n_me, self.core)
+        # cap the memory ask to what remains (§III-B: oversized models
+        # fall back to tensor swapping / multi-vNPU allocation)
+        free_hbm = max(len(cs.free_hbm_segs) for cs in self.manager.cores)
+        free_sram = max(len(cs.free_sram_segs) for cs in self.manager.cores)
+        hbm = min(hbm, free_hbm * self.core.hbm_segment)
+        sram = min(sram, free_sram * self.core.sram_segment)
+        vnpu = self.manager.create(
+            VNPUConfig(n_me=n_me, n_ve=n_ve, sram_bytes=sram,
+                       hbm_bytes=hbm, priority=priority),
+            name=name, mapping=self.mapping)
+        new_alloc = Allocation(
+            n_me, n_ve, eu_utilization(alloc.m, alloc.v, n_me, n_ve),
+            alloc.k_star, alloc.m, alloc.v)
+        return new_alloc, vnpu
+
+    def register_model(self, cfg: ModelConfig, phase: str = "prefill",
+                       batch: int = 8, seq: int = 512, eu_budget: int = 4,
+                       **kw) -> TenantHandle:
+        trace = lm_trace(cfg, batch, seq, phase, self.core)
+        return self.register(cfg.name, trace, eu_budget, **kw)
+
+    def register_vnpu(self, name: str, trace: WorkloadTrace,
+                      config: VNPUConfig) -> TenantHandle:
+        """Register with an explicit vNPU shape (bypasses the
+        allocator — benchmark/§V-A setups with fixed splits)."""
+        vnpu = self.manager.create(config, name=name, mapping=self.mapping)
+        h = TenantHandle(name=name, trace=trace,
+                         eu_budget=config.n_eus, priority=config.priority,
+                         allocation=None, vnpu=vnpu)
+        self.tenants.append(h)
+        return h
+
+    def deregister(self, handle: TenantHandle) -> None:
+        if handle.vnpu is not None:
+            self.manager.destroy(handle.vnpu)
+        self.tenants.remove(handle)
+
+    def resize(self, handle: TenantHandle, eu_budget: int) -> TenantHandle:
+        """Grow/shrink a tenant's EU budget: re-run the allocator and
+        reconfigure its vNPU in place.
+
+        If the unconstrained Eq.-4 split doesn't fit next to the
+        neighbors, fall back to the best FEASIBLE split over the free
+        EUs plus the ones the tenant already holds (same admission
+        logic as register). Only when no feasible split beats the
+        current shape does :class:`ReconfigureError` propagate — the
+        handle stays valid (old mapping restored) either way."""
+        alloc = allocate_for_trace(handle.trace, eu_budget, self.core)
+        sram, hbm = estimate_memory(handle.trace, alloc.n_me, self.core)
+        try:
+            handle.vnpu = self.manager.reconfigure(
+                handle.vnpu, VNPUConfig(
+                    n_me=alloc.n_me, n_ve=alloc.n_ve,
+                    sram_bytes=sram, hbm_bytes=hbm,
+                    priority=handle.priority))
+        except ReconfigureError as exc:
+            handle.vnpu = exc.restored
+            alloc = self._constrained_resize(handle, eu_budget, alloc, exc)
+        handle.eu_budget = eu_budget
+        handle.allocation = alloc
+        return handle
+
+    def _constrained_resize(self, handle: TenantHandle, eu_budget: int,
+                            alloc: Allocation,
+                            exc: ReconfigureError) -> Allocation:
+        cs = self.manager._core_of(handle.vnpu)
+        cur = handle.vnpu.config
+        avail_me = len(cs.free_mes) + cur.n_me if cs else cur.n_me
+        avail_ve = len(cs.free_ves) + cur.n_ve if cs else cur.n_ve
+        feasible = {
+            (n_me, n_ve)
+            for n_me in range(1, avail_me + 1)
+            for n_ve in range(1, avail_ve + 1)
+            if n_me + n_ve <= eu_budget
+        }
+        feasible.discard((cur.n_me, cur.n_ve))
+        # Eq.-2 utilization is only comparable at a fixed EU total
+        # (fewer EUs always look "efficient"), so rank by total EUs
+        # first — a resize exists to change capacity — then Eq. 2
+        rank = lambda s: (s[0] + s[1],
+                          eu_utilization(alloc.m, alloc.v, *s), s)
+        best = max(feasible, key=rank, default=None)
+        if best is None or rank(best) <= rank((cur.n_me, cur.n_ve)):
+            raise exc  # nothing feasible beats the current shape
+        n_me, n_ve = best
+        sram, hbm = estimate_memory(handle.trace, n_me, self.core)
+        if cs is not None and handle.vnpu.segments is not None:
+            held_s = len(handle.vnpu.segments.sram_segments)
+            held_h = len(handle.vnpu.segments.hbm_segments)
+            sram = min(sram,
+                       (len(cs.free_sram_segs) + held_s) * self.core.sram_segment)
+            hbm = min(hbm,
+                      (len(cs.free_hbm_segs) + held_h) * self.core.hbm_segment)
+        handle.vnpu = self.manager.reconfigure(
+            handle.vnpu, VNPUConfig(n_me=n_me, n_ve=n_ve,
+                                    sram_bytes=sram, hbm_bytes=hbm,
+                                    priority=handle.priority))
+        return Allocation(
+            n_me, n_ve, eu_utilization(alloc.m, alloc.v, n_me, n_ve),
+            alloc.k_star, alloc.m, alloc.v)
+
+
+# ----------------------------------------------------------------------
+# closed-loop helper (paper figures, legacy MultiTenantServer)
+# ----------------------------------------------------------------------
+def run_closed_loop(cluster: NPUCluster, n_requests: int = 8,
+                    hbm_scale: float = 1.0,
+                    ) -> Tuple[SimResult, List[TenantReport]]:
+    """Batch-mode run: every registered tenant replays its program
+    ``n_requests`` times back to back (the paper's §V-A methodology)."""
+    specs = [
+        TenantSpec(cluster.compile(h.trace), h.vnpu, n_requests,
+                   weight=h.priority)
+        for h in cluster.tenants
+    ]
+    res = Simulator(specs, policy=cluster.policy_cls, core=cluster.core,
+                    hbm_scale=hbm_scale).run()
+    return res, reports_from_result(cluster.tenants, res, cluster.core)
+
+
+def reports_from_result(tenants: Sequence[TenantHandle], res: SimResult,
+                        core: NPUCoreConfig) -> List[TenantReport]:
+    ms = 1e3 / core.freq_hz
+    reports = []
+    for i, h in enumerate(tenants):
+        st = res.tenants[i]
+        p95 = st.p95() * ms
+        reports.append(TenantReport(
+            name=h.name,
+            n_me=h.vnpu.config.n_me,
+            n_ve=h.vnpu.config.n_ve,
+            p95_ms=p95,
+            mean_ms=st.mean() * ms,
+            throughput_rps=res.throughput(i),
+            slo_ok=(p95 <= h.slo_p95_ms) if h.slo_p95_ms else None,
+            harvested_me_ms=st.harvested_me_work * ms,
+            blocked_ms=st.reclaim_blocked * ms,
+            requests_done=st.requests_done,
+        ))
+    return reports
+
+
+# ----------------------------------------------------------------------
+class SLOAutoscaler:
+    """SLO-aware autoscaling as a session hook (replaces the ad-hoc
+    ``autoscale_to_slo`` loop): after each window, if a tenant's
+    recent p95 violates its SLO, grow its EU budget by ``step_eus``
+    up to ``max_eus``. Returns the new budget, or None to hold."""
+
+    def __init__(self, step_eus: int = 2, max_eus: int = 8,
+                 window: int = 16, min_samples: int = 4):
+        # window bounds the p95 sample to the newest completions, so a
+        # long-recovered spike can't keep triggering growth
+        self.step_eus = step_eus
+        self.max_eus = max_eus
+        self.window = window
+        self.min_samples = min_samples
+
+    def __call__(self, session: "ServingSession", handle: TenantHandle,
+                 recent_latency_ms: Sequence[float]) -> Optional[int]:
+        if handle.slo_p95_ms is None or handle.eu_budget >= self.max_eus:
+            return None
+        if len(recent_latency_ms) < self.min_samples:
+            return None
+        xs = sorted(recent_latency_ms[-self.window:])
+        i = min(len(xs) - 1, max(0, math.ceil(0.95 * len(xs)) - 1))
+        if xs[i] <= handle.slo_p95_ms:
+            return None
+        return min(handle.eu_budget + self.step_eus, self.max_eus)
+
+
+AutoscaleHook = Callable[["ServingSession", TenantHandle, Sequence[float]],
+                         Optional[int]]
+
+
+# ----------------------------------------------------------------------
+class ServingSession:
+    """Request plane: an open-loop serving run on one pNPU core.
+
+    The session owns a live :class:`Simulator` for the cluster's
+    policy; requests are injected at arrival timestamps and the
+    simulation advances with :meth:`run_until` / :meth:`drain`.
+    Between advances, tenants can be registered, deregistered, and
+    re-sized without restarting — in-flight work continues."""
+
+    def __init__(self, cluster: NPUCluster, hbm_scale: float = 1.0,
+                 fair_slice: float = 50_000.0,
+                 autoscaler: Optional[AutoscaleHook] = None):
+        if len(cluster.manager.cores) != 1:
+            raise ValueError(
+                "ServingSession simulates a single pNPU core; shard "
+                "multi-pNPU fleets into one session per core")
+        self.cluster = cluster
+        self.autoscaler = autoscaler
+        self.sim = Simulator((), policy=cluster.policy_cls,
+                             core=cluster.core, hbm_scale=hbm_scale,
+                             fair_slice=fair_slice)
+        self._autoscale_cursor: Dict[int, int] = {}  # sim_idx -> consumed
+        for h in cluster.tenants:
+            self._attach(h)
+
+    # ------------------------------------------------------------------
+    @property
+    def now_s(self) -> float:
+        return self.sim.now / self.cluster.core.freq_hz
+
+    def _cycles(self, t_s: float) -> float:
+        return t_s * self.cluster.core.freq_hz
+
+    def _attach(self, handle: TenantHandle) -> None:
+        prog = self.cluster.compile(handle.trace)
+        spec = TenantSpec(prog, handle.vnpu, weight=handle.priority)
+        handle.sim_idx = self.sim.add_tenant(spec, open_loop=True)
+        handle.attached_at = self.sim.now
+        self._autoscale_cursor[handle.sim_idx] = 0
+
+    def _rt(self, handle: TenantHandle):
+        if handle.sim_idx < 0:
+            raise ValueError(
+                f"tenant {handle.name!r} is not attached to this session "
+                f"(register it through the session, not the bare cluster)")
+        return self.sim.tenants[handle.sim_idx]
+
+    # ---------------- tenant lifecycle (all legal mid-run) ----------------
+    def register(self, name: str, trace: WorkloadTrace, eu_budget: int,
+                 priority: float = 1.0,
+                 slo_p95_ms: Optional[float] = None) -> TenantHandle:
+        h = self.cluster.register(name, trace, eu_budget,
+                                  priority=priority, slo_p95_ms=slo_p95_ms)
+        self._attach(h)
+        return h
+
+    def register_model(self, cfg: ModelConfig, **kw) -> TenantHandle:
+        h = self.cluster.register_model(cfg, **kw)
+        self._attach(h)
+        return h
+
+    def deregister(self, handle: TenantHandle) -> None:
+        """Remove a tenant mid-run: queued + in-flight requests are
+        dropped, its engines free immediately, its stats survive in
+        the session report."""
+        if handle not in self.cluster.tenants:
+            raise ValueError(f"tenant {handle.name!r} is not registered")
+        if handle.sim_idx >= 0:
+            self.sim.remove_tenant(handle.sim_idx)
+        self.cluster.deregister(handle)
+
+    def resize(self, handle: TenantHandle, eu_budget: int) -> TenantHandle:
+        """Re-size a tenant mid-run (the paper's reconfigure hypercall
+        live): allocator re-splits, the vNPU manager re-places, and
+        the running simulation moves ownership without restarting."""
+        try:
+            self.cluster.resize(handle, eu_budget)
+        finally:
+            # keep the live sim consistent with whatever vNPU the
+            # handle ended up on (new or restored-after-failure)
+            if handle.sim_idx >= 0:
+                self.sim.update_tenant_vnpu(handle.sim_idx, handle.vnpu)
+        return handle
+
+    # ---------------- request admission ----------------
+    def submit(self, handle: TenantHandle, at_s: Optional[float] = None) -> None:
+        """Admit one request for ``handle`` at ``at_s`` seconds
+        (default: now)."""
+        self._rt(handle)
+        at = self.sim.now if at_s is None else self._cycles(at_s)
+        if at < self.sim.now - 1e-9:
+            raise ValueError(
+                f"arrival at t={at_s}s is in the past "
+                f"(session time {self.now_s:.6f}s)")
+        self.sim.inject_request(handle.sim_idx, at)
+
+    def submit_arrivals(self, handle: TenantHandle,
+                        arrivals: "ArrivalProcess") -> int:
+        """Admit a whole arrival process (Poisson / trace-driven);
+        returns the number of requests injected."""
+        self._rt(handle)
+        times = arrivals.times_s()
+        for t_s in times:
+            self.sim.inject_request(handle.sim_idx, self._cycles(float(t_s)))
+        return len(times)
+
+    # ---------------- driving ----------------
+    def run_until(self, t_s: float) -> float:
+        """Advance the simulation to ``t_s`` seconds, then give the
+        autoscale hook a chance to act on each tenant's latency tail.
+        Returns the new session time (seconds)."""
+        self.sim.run_until(self._cycles(t_s))
+        self._autoscale_step()
+        return self.now_s
+
+    def drain(self) -> float:
+        """Process every injected arrival and all in-flight work."""
+        self.sim.run_until(math.inf)
+        return self.now_s
+
+    def _autoscale_step(self) -> None:
+        if self.autoscaler is None:
+            return
+        ms = 1e3 / self.cluster.core.freq_hz
+        for h in list(self.cluster.tenants):
+            if h.sim_idx < 0:
+                continue
+            stats = self.sim.tenants[h.sim_idx].stats
+            cursor = self._autoscale_cursor.get(h.sim_idx, 0)
+            recent = [x * ms for x in stats.latencies[cursor:]]
+            new_budget = self.autoscaler(self, h, recent)
+            if new_budget is not None and new_budget != h.eu_budget:
+                self._autoscale_cursor[h.sim_idx] = len(stats.latencies)
+                try:
+                    self.resize(h, new_budget)
+                except ReconfigureError:
+                    pass  # no room to grow; hold at current size
+
+    # ---------------- accounting ----------------
+    def report(self, handle: Optional[TenantHandle] = None
+               ) -> List[TenantReport]:
+        """Per-request latency accounting for live (and, while their
+        handles are kept, deregistered) tenants."""
+        if handle is not None:
+            handles = [handle]
+        else:  # bare-cluster registrations have no runtime to report on
+            handles = [h for h in self.cluster.tenants if h.sim_idx >= 0]
+        core = self.cluster.core
+        ms = 1e3 / core.freq_hz
+        out = []
+        for h in handles:
+            rt = self._rt(h)
+            st = rt.stats
+            elapsed_s = max(self.sim.now - h.attached_at, 1.0) / core.freq_hz
+            p95 = st.p95() * ms
+            out.append(TenantReport(
+                name=h.name,
+                n_me=h.vnpu.config.n_me,
+                n_ve=h.vnpu.config.n_ve,
+                p95_ms=p95,
+                mean_ms=st.mean() * ms,
+                throughput_rps=st.requests_done / elapsed_s,
+                slo_ok=(p95 <= h.slo_p95_ms) if h.slo_p95_ms else None,
+                harvested_me_ms=st.harvested_me_work * ms,
+                blocked_ms=st.reclaim_blocked * ms,
+                requests_done=st.requests_done,
+                queued=len(rt.pending_arrivals) + (1 if rt.in_request else 0),
+            ))
+        return out
+
+    def latencies_ms(self, handle: TenantHandle) -> List[float]:
+        ms = 1e3 / self.cluster.core.freq_hz
+        return [x * ms for x in self._rt(handle).stats.latencies]
+
+    def result(self) -> SimResult:
+        """Raw simulator snapshot (cycles domain)."""
+        return self.sim.result()

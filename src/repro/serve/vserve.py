@@ -1,173 +1,85 @@
-"""Multi-tenant vNPU serving — the paper's system, end to end:
+"""Deprecated closed-loop facade over the online control plane.
+
+`MultiTenantServer` predates the :mod:`repro.serve.session` API: it
+registers every tenant up front, then runs a closed-loop batch
+(`simulate(n_requests)`). It is kept as a thin shim so existing call
+sites keep working — new code should use
+:class:`~repro.serve.session.NPUCluster` (resource plane) plus
+:class:`~repro.serve.session.ServingSession` (open-loop request
+plane, mid-run register/deregister/resize, SLO autoscale hook).
+
+The pipeline it drives is unchanged:
 
   tenant workload -> compile-time (m, v) profile -> vNPU allocator
   (Eq. 1-4) -> vNPU manager mapping (spatial/temporal) -> NeuISA
   compilation -> μTOp scheduler simulation -> SLO accounting.
-
-`MultiTenantServer` is the control plane a cloud operator would run
-per NPU host. Tenants register with an EU budget (pay-as-you-go) and
-an optional latency SLO; the server picks their ME/VE split, places
-them, and reports per-tenant p95/throughput under any scheduling
-policy (pmt / v10 / neu10_nh / neu10).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.allocator import Allocation, allocate_for_trace, estimate_memory
-from repro.core.compiler import compile_neuisa, compile_vliw
-from repro.core.mapper import VNPUManager
-from repro.core.simulator import SimResult, Simulator, TenantSpec
-from repro.core.vnpu import VNPU, VNPUConfig
+from repro.core.allocator import allocate_for_trace, estimate_memory
+from repro.core.simulator import SimResult
+from repro.core.vnpu import VNPUConfig
 from repro.npu.cost_model import WorkloadTrace
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
-from repro.npu.trace import lm_trace
+from repro.serve.session import (NPUCluster, TenantHandle, TenantReport,
+                                 run_closed_loop)
 
-
-@dataclass
-class Tenant:
-    name: str
-    trace: WorkloadTrace
-    eu_budget: int
-    priority: float = 1.0
-    slo_p95_ms: Optional[float] = None
-    allocation: Optional[Allocation] = None
-    vnpu: Optional[VNPU] = None
-
-
-@dataclass
-class TenantReport:
-    name: str
-    n_me: int
-    n_ve: int
-    p95_ms: float
-    mean_ms: float
-    throughput_rps: float
-    slo_ok: Optional[bool]
-    harvested_me_ms: float
-    blocked_ms: float
+# back-compat names: the old dataclasses are the new ones
+Tenant = TenantHandle
+__all__ = ["MultiTenantServer", "Tenant", "TenantReport"]
 
 
 class MultiTenantServer:
+    """Closed-loop batch server (deprecated shim over NPUCluster)."""
+
     def __init__(self, core: NPUCoreConfig = DEFAULT_CORE,
                  n_pnpus: int = 1, policy: str = "neu10"):
-        assert policy in ("pmt", "v10", "neu10_nh", "neu10")
+        self.cluster = NPUCluster(core=core, n_pnpus=n_pnpus, policy=policy)
         self.core = core
-        self.policy = policy
-        self.manager = VNPUManager(n_pnpus=n_pnpus, core=core)
-        self.tenants: List[Tenant] = []
+        self.policy = self.cluster.policy_name
+
+    @property
+    def manager(self):
+        return self.cluster.manager
+
+    @property
+    def tenants(self) -> List[TenantHandle]:
+        return self.cluster.tenants
 
     # ------------------------------------------------------------------
     def register(self, name: str, trace: WorkloadTrace, eu_budget: int,
                  priority: float = 1.0,
-                 slo_p95_ms: Optional[float] = None) -> Tenant:
-        """Pay-as-you-go entry point: the tenant buys `eu_budget` EUs;
-        the allocator picks the ME/VE split from the compile-time
-        profile (§III-B)."""
-        alloc = allocate_for_trace(trace, eu_budget, self.core)
-        sram, hbm = estimate_memory(trace, alloc.n_me, self.core)
-        mapping = "spatial" if self.policy.startswith("neu10") else "temporal"
-        try:
-            vnpu = self.manager.create(
-                VNPUConfig(n_me=alloc.n_me, n_ve=alloc.n_ve,
-                           sram_bytes=sram, hbm_bytes=hbm,
-                           priority=priority),
-                name=name, mapping=mapping)
-        except RuntimeError:
-            # admission control: the unconstrained Eq.-4 pick doesn't
-            # fit next to existing tenants — re-allocate over the
-            # FEASIBLE splits, still maximizing Eq. 2. Harvesting
-            # recovers most of the gap at runtime (§III-B).
-            alloc, vnpu = self._constrained_register(
-                trace, alloc, eu_budget, priority, name, mapping)
-        t = Tenant(name=name, trace=trace, eu_budget=eu_budget,
-                   priority=priority, slo_p95_ms=slo_p95_ms,
-                   allocation=alloc, vnpu=vnpu)
-        self.tenants.append(t)
-        return t
-
-    def _constrained_register(self, trace, alloc, eu_budget, priority,
-                              name, mapping):
-        from repro.core.allocator import Allocation, eu_utilization
-
-        feasible = []
-        for cs in self.manager.cores:
-            free_me, free_ve = len(cs.free_mes), len(cs.free_ves)
-            for n_me in range(1, free_me + 1):
-                for n_ve in range(1, free_ve + 1):
-                    if n_me + n_ve <= eu_budget:
-                        feasible.append((n_me, n_ve))
-        if not feasible:
-            raise RuntimeError(
-                f"admission denied for {name}: no free EUs on any pNPU")
-        n_me, n_ve = max(
-            set(feasible),
-            key=lambda s: eu_utilization(alloc.m, alloc.v, *s))
-        sram, hbm = estimate_memory(trace, n_me, self.core)
-        # cap the memory ask to what remains (§III-B: oversized models
-        # fall back to tensor swapping / multi-vNPU allocation)
-        free_hbm = max(len(cs.free_hbm_segs) for cs in self.manager.cores)
-        free_sram = max(len(cs.free_sram_segs) for cs in self.manager.cores)
-        hbm = min(hbm, free_hbm * self.core.hbm_segment)
-        sram = min(sram, free_sram * self.core.sram_segment)
-        vnpu = self.manager.create(
-            VNPUConfig(n_me=n_me, n_ve=n_ve, sram_bytes=sram,
-                       hbm_bytes=hbm, priority=priority),
-            name=name, mapping=mapping)
-        new_alloc = Allocation(
-            n_me, n_ve, eu_utilization(alloc.m, alloc.v, n_me, n_ve),
-            alloc.k_star, alloc.m, alloc.v)
-        return new_alloc, vnpu
+                 slo_p95_ms: Optional[float] = None) -> TenantHandle:
+        return self.cluster.register(name, trace, eu_budget,
+                                     priority=priority,
+                                     slo_p95_ms=slo_p95_ms)
 
     def register_model(self, cfg: ModelConfig, phase: str = "prefill",
                        batch: int = 8, seq: int = 512, eu_budget: int = 4,
-                       **kw) -> Tenant:
-        trace = lm_trace(cfg, batch, seq, phase, self.core)
-        return self.register(cfg.name, trace, eu_budget, **kw)
+                       **kw) -> TenantHandle:
+        return self.cluster.register_model(cfg, phase=phase, batch=batch,
+                                           seq=seq, eu_budget=eu_budget, **kw)
 
-    def deregister(self, tenant: Tenant) -> None:
-        if tenant.vnpu is not None:
-            self.manager.destroy(tenant.vnpu)
-        self.tenants.remove(tenant)
+    def deregister(self, tenant: TenantHandle) -> None:
+        self.cluster.deregister(tenant)
 
     # ------------------------------------------------------------------
-    def simulate(self, n_requests: int = 8,
-                 hbm_scale: float = 1.0) -> Tuple[SimResult, List[TenantReport]]:
+    def simulate(self, n_requests: int = 8, hbm_scale: float = 1.0,
+                 ) -> Tuple[SimResult, List[TenantReport]]:
         """Run the multi-tenant schedule; returns per-tenant SLO report."""
-        specs = []
-        for t in self.tenants:
-            if self.policy.startswith("neu10"):
-                prog = compile_neuisa(t.trace, self.core)
-            else:
-                prog = compile_vliw(t.trace, self.core)
-            specs.append(TenantSpec(prog, t.vnpu, n_requests,
-                                    weight=t.priority))
-        res = Simulator(specs, policy=self.policy, core=self.core,
-                        hbm_scale=hbm_scale).run()
-        ms = 1e3 / self.core.freq_hz
-        reports = []
-        for i, t in enumerate(self.tenants):
-            st = res.tenants[i]
-            p95 = st.p95() * ms
-            reports.append(TenantReport(
-                name=t.name,
-                n_me=t.vnpu.config.n_me,
-                n_ve=t.vnpu.config.n_ve,
-                p95_ms=p95,
-                mean_ms=st.mean() * ms,
-                throughput_rps=res.throughput(i),
-                slo_ok=(p95 <= t.slo_p95_ms) if t.slo_p95_ms else None,
-                harvested_me_ms=st.harvested_me_work * ms,
-                blocked_ms=st.reclaim_blocked * ms,
-            ))
-        return res, reports
+        return run_closed_loop(self.cluster, n_requests=n_requests,
+                               hbm_scale=hbm_scale)
 
     def autoscale_to_slo(self, n_requests: int = 6,
                          max_eus: int = 8) -> List[TenantReport]:
-        """Grow a tenant's EU budget until its SLO holds (or cap) —
-        the pay-as-you-go loop a cloud operator automates."""
+        """Grow a tenant's EU budget until its SLO holds (or cap).
+
+        Deprecated: online sessions do this with an
+        :class:`~repro.serve.session.SLOAutoscaler` hook instead of
+        re-running the whole batch."""
         while True:
             _, reports = self.simulate(n_requests)
             violators = [

@@ -1,0 +1,218 @@
+"""Online control plane: open-loop ServingSession — request-level
+admission, mid-run tenant lifecycle, SLO autoscale hook."""
+import pytest
+
+from repro.core.mapper import ReconfigureError
+from repro.npu.cost_model import Operator, WorkloadTrace
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.serve.session import (NPUCluster, PoissonArrivals, SLOAutoscaler,
+                                 ServingSession, TraceArrivals,
+                                 run_closed_loop)
+
+
+def _trace(name="w", me=200_000.0, ve=50_000.0, n_ops=8):
+    return WorkloadTrace(name, [
+        Operator(f"{name}_mm{i}", me_cycles=me / n_ops,
+                 ve_cycles=ve / n_ops, n_tiles=8)
+        for i in range(n_ops)
+    ], core=DEFAULT_CORE)
+
+
+def _session(policy="neu10", **kw):
+    return ServingSession(NPUCluster(policy=policy), **kw)
+
+
+# ----------------------------------------------------------------------
+def test_open_loop_poisson_reports_p95_and_throughput():
+    sess = _session()
+    h = sess.register("a", _trace(), eu_budget=4)
+    n = sess.submit_arrivals(h, PoissonArrivals(rate_rps=2000.0, n=40, seed=7))
+    assert n == 40
+    sess.drain()
+    r = sess.report(h)[0]
+    assert r.requests_done == 40
+    assert r.queued == 0
+    assert r.p95_ms > 0 and r.mean_ms > 0
+    assert r.p95_ms >= r.mean_ms * 0.5
+    assert r.throughput_rps > 0
+    # all 40 arrivals are accounted per-request
+    assert len(sess.latencies_ms(h)) == 40
+
+
+def test_open_loop_deterministic():
+    def go():
+        sess = _session()
+        h = sess.register("a", _trace(), eu_budget=4)
+        sess.submit_arrivals(h, PoissonArrivals(rate_rps=1000.0, n=25, seed=3))
+        sess.drain()
+        return sess.latencies_ms(h)
+
+    assert go() == go()
+
+
+def test_queueing_latency_grows_with_load():
+    """Latency is measured from ARRIVAL: an overloaded tenant's tail
+    includes queueing delay, a lightly loaded one's does not."""
+    def p95_at(rate):
+        sess = _session()
+        h = sess.register("a", _trace(me=2_000_000.0), eu_budget=4)
+        sess.submit_arrivals(h, PoissonArrivals(rate_rps=rate, n=30, seed=0))
+        sess.drain()
+        return sess.report(h)[0].p95_ms
+
+    assert p95_at(100_000.0) > 2.0 * p95_at(10.0)
+
+
+def test_trace_arrivals_and_single_submit():
+    sess = _session()
+    h = sess.register("a", _trace(), eu_budget=4)
+    sess.submit_arrivals(h, TraceArrivals([0.002, 0.001, 0.003]))
+    sess.submit(h, at_s=0.004)
+    sess.drain()
+    assert sess.report(h)[0].requests_done == 4
+
+
+def test_midrun_register_and_deregister():
+    """Acceptance gate: a tenant joins and leaves mid-run without the
+    simulation restarting."""
+    sess = _session()
+    a = sess.register("a", _trace("a"), eu_budget=4)
+    sess.submit_arrivals(a, PoissonArrivals(rate_rps=1000.0, n=50, seed=1))
+    sess.run_until(0.01)
+    done_at_pause = sess.report(a)[0].requests_done
+    assert 0 < done_at_pause < 50
+    t_pause = sess.sim.now  # proof we never restart
+
+    b = sess.register("b", _trace("b", me=50_000.0), eu_budget=2)
+    sess.submit_arrivals(b, PoissonArrivals(
+        rate_rps=2000.0, n=40, seed=2, start_s=sess.now_s))
+    sess.run_until(0.03)
+    rb = sess.report(b)[0]
+    assert rb.requests_done > 0
+    assert sess.sim.now >= t_pause  # same simulation, time kept flowing
+
+    sess.deregister(b)
+    assert b not in sess.cluster.tenants
+    sess.drain()
+    ra = sess.report(a)[0]
+    assert ra.requests_done == 50  # a unaffected by b's life cycle
+    # b's engines were released back: a freshly registered tenant fits
+    c = sess.register("c", _trace("c"), eu_budget=2)
+    sess.submit(c)
+    sess.drain()
+    assert sess.report(c)[0].requests_done == 1
+
+
+def test_midrun_resize_grows_allocation():
+    sess = _session()
+    a = sess.register("a", _trace("a"), eu_budget=2)
+    sess.submit_arrivals(a, PoissonArrivals(rate_rps=1000.0, n=30, seed=4))
+    sess.run_until(0.005)
+    before = a.vnpu.config.n_eus
+    sess.resize(a, 6)
+    assert a.vnpu.config.n_eus > before
+    assert a.eu_budget == 6
+    sess.drain()
+    assert sess.report(a)[0].requests_done == 30
+
+
+def test_resize_failure_restores_and_keeps_serving():
+    sess = _session()
+    a = sess.register("a", _trace("a"), eu_budget=4)
+    b = sess.register("b", _trace("b"), eu_budget=4)
+    sess.submit_arrivals(a, PoissonArrivals(rate_rps=1000.0, n=10, seed=5))
+    sess.run_until(0.002)
+    with pytest.raises(ReconfigureError):
+        sess.resize(a, 8)  # no room next to b
+    assert a.vnpu is not None and a.vnpu.config.n_eus >= 2
+    sess.drain()
+    assert sess.report(a)[0].requests_done == 10
+
+
+def test_slo_autoscaler_hook_grows_budget():
+    sess = _session(autoscaler=SLOAutoscaler(step_eus=2, max_eus=8,
+                                             min_samples=3))
+    # slow tenant with a tight SLO under sustained load
+    a = sess.register("a", _trace("a", me=2_000_000.0), eu_budget=2,
+                      slo_p95_ms=0.5)
+    sess.submit_arrivals(a, PoissonArrivals(rate_rps=2000.0, n=60, seed=6))
+    t = 0.0
+    for _ in range(6):
+        t += 0.01
+        sess.run_until(t)
+    assert a.eu_budget > 2  # the hook resized it mid-run
+    sess.drain()
+    assert sess.report(a)[0].requests_done == 60
+
+
+def test_closed_loop_helper_matches_server_shim():
+    from repro.serve.vserve import MultiTenantServer
+
+    cluster = NPUCluster(policy="neu10")
+    cluster.register("a", _trace("a"), eu_budget=4)
+    cluster.register("b", _trace("b", me=400_000.0), eu_budget=4)
+    res, reports = run_closed_loop(cluster, n_requests=3)
+
+    srv = MultiTenantServer(policy="neu10")
+    srv.register("a", _trace("a"), eu_budget=4)
+    srv.register("b", _trace("b", me=400_000.0), eu_budget=4)
+    res2, reports2 = srv.simulate(n_requests=3)
+
+    assert res.makespan == pytest.approx(res2.makespan, rel=1e-9)
+    assert [r.p95_ms for r in reports] == pytest.approx(
+        [r.p95_ms for r in reports2], rel=1e-9)
+
+
+def test_bare_cluster_registration_is_not_silently_misrouted():
+    """A tenant registered on the CLUSTER after the session exists has
+    no runtime; session calls must refuse it, not hit tenants[-1]."""
+    sess = _session()
+    a = sess.register("a", _trace("a"), eu_budget=4)
+    stray = sess.cluster.register("stray", _trace("s"), eu_budget=2)
+    with pytest.raises(ValueError, match="not attached"):
+        sess.submit(stray)
+    with pytest.raises(ValueError, match="not attached"):
+        sess.latencies_ms(stray)
+    # the aggregate report covers only attached tenants
+    assert [r.name for r in sess.report()] == ["a"]
+
+
+def test_run_requires_closed_loop_tenants():
+    """Simulator.run() terminates on closed-loop completion even with
+    an open-loop tenant attached, and refuses an all-open-loop setup."""
+    from repro.core.simulator import Simulator, TenantSpec
+    from repro.core.policies import get_policy
+
+    cluster = NPUCluster(policy="neu10")
+    ha = cluster.register("a", _trace("a"), eu_budget=4)
+    hb = cluster.register("b", _trace("b"), eu_budget=2)
+    compile_ = get_policy("neu10").compile_program
+    sim = Simulator(
+        [TenantSpec(compile_(ha.trace, DEFAULT_CORE), ha.vnpu, n_requests=2)],
+        policy="neu10")
+    sim.add_tenant(
+        TenantSpec(compile_(hb.trace, DEFAULT_CORE), hb.vnpu),
+        open_loop=True)
+    res = sim.run()  # must not spin to max_events on the open tenant
+    assert res.tenants[0].requests_done >= 2
+
+    sim2 = Simulator((), policy="neu10")
+    with pytest.raises(ValueError, match="closed-loop"):
+        sim2.run()
+
+
+def test_session_rejects_multi_core_cluster():
+    with pytest.raises(ValueError):
+        ServingSession(NPUCluster(n_pnpus=2))
+
+
+def test_inject_guards():
+    sess = _session()
+    a = sess.register("a", _trace("a"), eu_budget=4)
+    sess.submit(a, at_s=0.001)
+    sess.drain()
+    with pytest.raises(ValueError):
+        sess.submit(a, at_s=sess.now_s - 0.001)  # arrival in the past
+    sess.deregister(a)
+    with pytest.raises(ValueError):
+        sess.sim.inject_request(0, sess.sim.now)  # deregistered tenant

@@ -1,7 +1,7 @@
 """Event-driven simulator: conservation, isolation, harvesting, and
 policy-ordering properties (§III-E / §V)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.compiler import compile_neuisa, compile_vliw
 from repro.core.mapper import VNPUManager

@@ -1,7 +1,7 @@
 """Trace generation + cost model: paper-characterization properties
 (Figs. 2-7) and model-FLOP consistency."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs import ARCHS
 from repro.npu.cost_model import matmul_op, memory_op, vector_op
