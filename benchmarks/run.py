@@ -17,6 +17,7 @@ from benchmarks import (
     fig22_utilization,
     fig25_scaling,
     fig26_hbm,
+    fig_colocation,
     table3_harvest_overhead,
 )
 
@@ -28,6 +29,7 @@ SUITES = {
     "table3": table3_harvest_overhead,
     "fig25": fig25_scaling,
     "fig26": fig26_hbm,
+    "fig_colocation": fig_colocation,
 }
 
 

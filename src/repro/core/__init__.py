@@ -12,8 +12,16 @@ from repro.core.allocator import (
     normalized_exec_time,
     optimal_ratio,
 )
-from repro.core.compiler import compile_neuisa, compile_vliw
+from repro.core.compiler import (
+    CompiledPhase,
+    CompiledRequestPlan,
+    ProgramCache,
+    compile_neuisa,
+    compile_request_plan,
+    compile_vliw,
+)
 from repro.core.mapper import VNPUManager
+from repro.core.stats import mean, p50, p95, p99, percentile
 from repro.core.neuisa import MuTOp, MuTOpGroup, NeuISAProgram, VLIWProgram
 from repro.core.policies import (
     SchedulerPolicy,
@@ -38,8 +46,17 @@ __all__ = [
     "eu_utilization",
     "normalized_exec_time",
     "optimal_ratio",
+    "CompiledPhase",
+    "CompiledRequestPlan",
+    "ProgramCache",
     "compile_neuisa",
+    "compile_request_plan",
     "compile_vliw",
+    "percentile",
+    "mean",
+    "p50",
+    "p95",
+    "p99",
     "VNPUManager",
     "MuTOp",
     "MuTOpGroup",

@@ -18,7 +18,8 @@ Lowers a WorkloadTrace (operator list) into
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.neuisa import (
     ME,
@@ -29,7 +30,7 @@ from repro.core.neuisa import (
     VLIWOp,
     VLIWProgram,
 )
-from repro.npu.cost_model import Operator, WorkloadTrace
+from repro.npu.cost_model import Operator, RequestPlan, WorkloadTrace
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
 
@@ -149,6 +150,105 @@ def compile_vliw(
         else:
             ops.append(VLIWOp(op.name, 0, 0.0, op.ve_cycles, op.hbm_bytes))
     return VLIWProgram(name=trace.name, ops=ops, n_x=n_x, n_y=n_y)
+
+
+# ----------------------------------------------------------------------
+# phase-aware compilation: one program per (phase, context bucket)
+# ----------------------------------------------------------------------
+AnyProgram = Union[NeuISAProgram, VLIWProgram]
+
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+@dataclass
+class CompiledPhase:
+    """One phase of a compiled request: the program the scheduler
+    replays for it, plus the context bucket it was compiled at."""
+
+    kind: str                    # "prefill" | "decode" | "" (legacy)
+    program: AnyProgram
+    context: int = 0
+
+
+@dataclass
+class CompiledRequestPlan:
+    """Compiled :class:`~repro.npu.cost_model.RequestPlan`: the prefill
+    program plus one decode program per context bucket. The simulator
+    walks a request's phase chain through these; a plan without decode
+    phases is the degenerate single-phase case (seed behavior)."""
+
+    name: str
+    prefill: CompiledPhase
+    decode: List[CompiledPhase] = field(default_factory=list)
+    prompt_len: int = 0
+    gen_len: int = 1
+
+    @property
+    def has_decode(self) -> bool:
+        return bool(self.decode)
+
+    def decode_phase_for(self, context: int) -> CompiledPhase:
+        if not self.decode:
+            raise ValueError(
+                f"plan {self.name!r} has no decode phases")
+        for ph in self.decode:
+            if context <= ph.context:
+                return ph
+        return self.decode[-1]   # clamp: out-of-coverage contexts
+
+
+class ProgramCache:
+    """Per-(phase, context-bucket) compiled-program cache (§III-D).
+
+    Decode programs at context 512 / 1k / 2k / ... are identical for
+    every request — and for every tenant serving the same model shape —
+    so they compile once. Keyed by (isa, trace name, op count, work
+    totals, core): trace names embed model:phase:bNsM, and the ME/VE/
+    HBM totals fingerprint the content so a rebuilt or hand-scaled
+    trace that reuses a name cannot collide with another shape's
+    program.
+    """
+
+    def __init__(self) -> None:
+        self._cache: Dict[Tuple, AnyProgram] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def compile(self, trace: WorkloadTrace, core: NPUCoreConfig,
+                isa: str = "neuisa") -> AnyProgram:
+        key = (isa, trace.name, len(trace.ops), trace.totals(), core)
+        prog = self._cache.get(key)
+        if prog is not None:
+            self.hits += 1
+            return prog
+        self.misses += 1
+        prog = (compile_neuisa(trace, core) if isa == "neuisa"
+                else compile_vliw(trace, core))
+        self._cache[key] = prog
+        return prog
+
+
+def compile_request_plan(
+    plan: RequestPlan,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    isa: str = "neuisa",
+    cache: Optional[ProgramCache] = None,
+) -> CompiledRequestPlan:
+    """Lower a phase-structured request into per-phase programs,
+    reusing ``cache`` across buckets / requests / tenants."""
+    cache = cache if cache is not None else ProgramCache()
+    prefill = CompiledPhase(PREFILL, cache.compile(plan.prefill, core, isa),
+                            context=plan.prompt_len)
+    decode = [CompiledPhase(DECODE, cache.compile(tr, core, isa), context=ctx)
+              for ctx, tr in plan.decode]
+    return CompiledRequestPlan(
+        name=plan.name, prefill=prefill, decode=decode,
+        prompt_len=plan.prompt_len, gen_len=plan.gen_len,
+    )
 
 
 def neuisa_overhead_terms(trace: WorkloadTrace,

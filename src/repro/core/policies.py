@@ -40,9 +40,10 @@ Policy API surface on the simulator (stable for third parties):
 from __future__ import annotations
 
 from abc import ABC, abstractmethod
-from typing import TYPE_CHECKING, Callable, Dict, Tuple, Type, Union
+from typing import TYPE_CHECKING, Callable, Dict, Optional, Tuple, Type, Union
 
-from repro.core.compiler import compile_neuisa, compile_vliw
+from repro.core.compiler import (ProgramCache, compile_neuisa,
+                                 compile_request_plan, compile_vliw)
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.simulator import Simulator
@@ -137,6 +138,14 @@ class SchedulerPolicy(ABC):
             return compile_neuisa(trace, core)
         return compile_vliw(trace, core)
 
+    @classmethod
+    def compile_plan(cls, plan, core, cache: Optional[ProgramCache] = None):
+        """Compile a phase-structured
+        :class:`~repro.npu.cost_model.RequestPlan` into per-phase
+        programs, sharing ``cache`` so decode programs at each context
+        bucket compile once per (model shape, policy ISA)."""
+        return compile_request_plan(plan, core, isa=cls.isa, cache=cache)
+
     # ---------------- lifecycle hooks ----------------
     def on_attach(self, sim: "Simulator") -> None:
         """Called once when the simulator binds this policy."""
@@ -201,8 +210,18 @@ class _SpatialPolicy(SchedulerPolicy):
         # 3) harvest: leftover ready chunks take others' idle engines.
         for pool, ready_attr in ((sim.mes, "ready_me"), (sim.ves, "ready_ve")):
             # only engines whose owner has no pending demand are up for
-            # harvest (§III-E scheduling policy)
-            for rt in sorted(tenants, key=lambda r: r.active_cycles):
+            # harvest (§III-E scheduling policy). Phase-aware ordering:
+            # decode μTOps (tiny, latency-critical) harvest first, so a
+            # decoding tenant interleaves into the VE-idle window under
+            # a co-located tenant's prefill (Fig. 2/6); ties fall back
+            # to the fair-share counter. Single-phase tenants all rank
+            # equal on the first key — seed ordering is unchanged.
+            def _order(r):
+                has_decode = any(c.phase == "decode"
+                                 for c in getattr(r, ready_attr))
+                return (not has_decode, r.active_cycles)
+
+            for rt in sorted(tenants, key=_order):
                 ready = getattr(rt, ready_attr)
                 if not ready:
                     continue

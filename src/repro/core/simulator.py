@@ -26,6 +26,16 @@ Two driving modes:
   added, removed, and re-sized mid-run — drive with
   :meth:`Simulator.run_until`. The `repro.serve.session` layer builds
   the operator-facing API on top of this.
+
+Requests are *phase chains*: a :class:`TenantSpec` may carry a
+:class:`~repro.core.compiler.CompiledRequestPlan` (prefill program +
+context-bucketed decode programs). Finishing a phase enqueues the
+request's next phase instead of completing it; decode steps from a
+tenant's in-flight requests coalesce into shared decode iterations
+(continuous batching), and :class:`TenantStats` tracks TTFT / TBT /
+end-to-end latency series. A plain single-program spec is the
+degenerate one-phase plan — its event sequence is bit-identical to the
+pre-phase simulator.
 """
 from __future__ import annotations
 
@@ -36,8 +46,11 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core.compiler import DECODE, CompiledPhase, CompiledRequestPlan
 from repro.core.neuisa import ME, VE, MuTOpGroup, NeuISAProgram, VLIWProgram
 from repro.core.policies import PolicyLike, resolve_policy
+from repro.core.stats import mean as _mean
+from repro.core.stats import percentile
 from repro.core.vnpu import VNPU
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
@@ -61,22 +74,51 @@ class Chunk:
     penalty: float = 0.0         # context-switch cycles to add (resume)
     group_key: int = -1          # group (NeuISA) or op (VLIW) index
     from_me_group: bool = False  # VE chunk draining an ME group
+    phase: str = ""              # "prefill" | "decode" | "" — visible to
+                                 # SchedulerPolicy dispatch decisions
 
 
 @dataclass
 class TenantSpec:
-    program: Union[NeuISAProgram, VLIWProgram]
-    vnpu: VNPU
+    program: Union[NeuISAProgram, VLIWProgram, None] = None
+    vnpu: Optional[VNPU] = None
     n_requests: int = 8          # closed-loop target (ignored open loop)
     weight: float = 1.0          # fair-share priority
+    # phase-structured requests (prefill -> decode chain); when None,
+    # ``program`` runs as a degenerate single-phase plan
+    plan: Optional[CompiledRequestPlan] = None
+
+    def __post_init__(self) -> None:
+        if self.program is None and self.plan is None:
+            raise ValueError("TenantSpec needs a program or a plan")
+        if self.vnpu is None:
+            raise ValueError("TenantSpec needs a vnpu")
+
+
+class _Request:
+    """One in-flight generation request: its arrival time, target
+    token count, and token-emission cursor."""
+
+    __slots__ = ("arrival", "gen_len", "tokens_done", "last_token_t")
+
+    def __init__(self, arrival: float, gen_len: int = 1):
+        self.arrival = arrival
+        self.gen_len = max(int(gen_len), 1)
+        self.tokens_done = 0
+        self.last_token_t = arrival
 
 
 @dataclass
 class TenantStats:
     name: str
-    latencies: List[float] = field(default_factory=list)
+    latencies: List[float] = field(default_factory=list)  # e2e, from arrival
     completions: List[float] = field(default_factory=list)  # finish times
+    ttft: List[float] = field(default_factory=list)  # time to first token
+    tbt: List[float] = field(default_factory=list)   # time between tokens
     requests_done: int = 0
+    tokens: int = 0                  # tokens emitted (1/req + decode steps)
+    decode_iterations: int = 0       # shared decode steps executed
+    max_decode_batch: int = 0        # peak requests coalesced per step
     me_work: float = 0.0
     ve_work: float = 0.0
     harvested_me_work: float = 0.0   # work done on non-owned MEs
@@ -86,14 +128,16 @@ class TenantStats:
     preemptions: int = 0
 
     def p95(self) -> float:
-        if not self.latencies:
-            return 0.0
-        xs = sorted(self.latencies)
-        i = min(len(xs) - 1, max(0, math.ceil(0.95 * len(xs)) - 1))
-        return xs[i]
+        return percentile(self.latencies, 0.95)
 
     def mean(self) -> float:
-        return sum(self.latencies) / len(self.latencies) if self.latencies else 0.0
+        return _mean(self.latencies)
+
+    def ttft_p95(self) -> float:
+        return percentile(self.ttft, 0.95)
+
+    def tbt_p95(self) -> float:
+        return percentile(self.tbt, 0.95)
 
 
 @dataclass
@@ -106,13 +150,21 @@ class SimResult:
     freq_hz: float
 
     def me_utilization(self) -> float:
-        return sum(t.me_work for t in self.tenants) / (self.n_me * self.makespan)
+        denom = self.n_me * self.makespan
+        if denom <= 0:
+            return 0.0           # empty open-loop run: no work, no span
+        return sum(t.me_work for t in self.tenants) / denom
 
     def ve_utilization(self) -> float:
-        return sum(t.ve_work for t in self.tenants) / (self.n_ve * self.makespan)
+        denom = self.n_ve * self.makespan
+        if denom <= 0:
+            return 0.0
+        return sum(t.ve_work for t in self.tenants) / denom
 
     def throughput(self, idx: int) -> float:
         """requests/sec for tenant idx over the makespan."""
+        if self.makespan <= 0 or self.freq_hz <= 0:
+            return 0.0
         t = self.tenants[idx]
         return t.requests_done / (self.makespan / self.freq_hz)
 
@@ -142,11 +194,16 @@ class _Engine:
 
 
 class _TenantRT:
-    """Runtime cursor over a tenant's program.
+    """Runtime over a tenant's request plan.
 
-    Closed loop: a new request starts the instant the previous one
-    completes. Open loop: requests arrive via ``pending_arrivals`` and
-    the cursor idles between them (``in_request`` False)."""
+    Requests move waiting -> (prefill iteration) -> decoding ->
+    (shared decode iterations) -> done. One *iteration* (a phase
+    program execution) is in flight at a time per tenant; decode
+    iterations coalesce every in-flight decoding request (continuous
+    batching). Closed loop: a new request arrives the instant the
+    previous one completes. Open loop: requests arrive via
+    :meth:`arrive` and the tenant idles between iterations
+    (``in_request`` False)."""
 
     def __init__(self, idx: int, spec: TenantSpec, core: NPUCoreConfig,
                  open_loop: bool = False):
@@ -155,62 +212,135 @@ class _TenantRT:
         self.core = core
         self.open_loop = open_loop
         self.removed = False
-        self.is_neuisa = isinstance(spec.program, NeuISAProgram)
+        if spec.plan is not None:
+            self.plan = spec.plan
+        else:  # degenerate one-phase plan: seed-identical behavior
+            self.plan = CompiledRequestPlan(
+                name=spec.program.name,
+                prefill=CompiledPhase("", spec.program), gen_len=1)
+        self.cur_program = self.plan.prefill.program
+        self.is_neuisa = isinstance(self.cur_program, NeuISAProgram)
         self.me_ids = set(spec.vnpu.me_ids)
         self.ve_ids = set(spec.vnpu.ve_ids)
-        self.stats = TenantStats(name=spec.program.name)
+        self.stats = TenantStats(name=self.plan.name)
         self.active_cycles = 0.0          # fair-share bookkeeping
-        self.req_start = 0.0
         self.cursor = -1                  # group / op index
         self.outstanding = 0              # chunks of current step in flight
-        self.in_request = False
-        self.pending_arrivals: Deque[float] = deque()
+        self.in_request = False           # an iteration is in flight
+        self.waiting: Deque[_Request] = deque()   # arrived, not prefilled
+        self.decoding: List[_Request] = []        # mid-generation
+        self.active: List[_Request] = []          # served by the iteration
+        self.active_kind = ""                     # phase of the iteration
         self.ready_me: List[Chunk] = []
         self.ready_ve: List[Chunk] = []
         self.loop_remaining: Dict[int, int] = {}
         self.done = False                 # reached n_requests (keeps running)
         self.finished_at = math.inf
 
-    # ---------------- program stepping ----------------
-    def start_request(self, t: float, arrival: Optional[float] = None) -> None:
-        self.req_start = t if arrival is None else arrival
+    # ---------------- request / phase lifecycle ----------------
+    @property
+    def in_flight(self) -> int:
+        """Requests admitted but not completed."""
+        n = len(self.waiting) + len(self.decoding)
+        if self.in_request and self.active_kind != DECODE:
+            n += len(self.active)
+        return n
+
+    def _context_of(self, req: _Request) -> int:
+        """KV context of the request's NEXT decode step."""
+        return self.plan.prompt_len + req.tokens_done + 1
+
+    def start_request(self, t: float, arrival: Optional[float] = None,
+                      gen_len: Optional[int] = None) -> None:
+        """Admit one request (closed-loop kick / legacy entry point)."""
+        self.waiting.append(_Request(
+            t if arrival is None else arrival,
+            self.plan.gen_len if gen_len is None else gen_len))
+        if not self.in_request:
+            self._start_iteration(t)
+
+    def _start_iteration(self, t: float) -> None:
+        """Pick the tenant's next unit of work: a waiting request's
+        prefill, else one shared decode step over every in-flight
+        decoding request (prefill-prioritized continuous batching)."""
+        if self.waiting:
+            req = self.waiting.popleft()
+            self.active = [req]
+            self.active_kind = self.plan.prefill.kind
+            self.cur_program = self.plan.prefill.program
+        elif self.decoding:
+            # the step's cost is the largest live context bucket: the
+            # batched KV stream is paced by the longest sequence
+            ctx = max(self._context_of(r) for r in self.decoding)
+            phase = self.plan.decode_phase_for(ctx)
+            self.active = list(self.decoding)
+            self.active_kind = DECODE
+            self.cur_program = phase.program
+        else:
+            return
         self.in_request = True
         self.cursor = -1
         self.loop_remaining = {}
         self._advance(t)
 
-    def _on_request_complete(self, t: float) -> bool:
-        """Record the finished request; return True if a new one
-        started (ready queues refilled)."""
-        self.stats.latencies.append(t - self.req_start)
+    def _on_iteration_complete(self, t: float) -> None:
+        """A phase program finished: emit tokens, advance each served
+        request's phase chain, then start the next iteration."""
+        if self.active_kind == DECODE:
+            self.stats.decode_iterations += 1
+            self.stats.max_decode_batch = max(
+                self.stats.max_decode_batch, len(self.active))
+            finished = []
+            for req in self.active:
+                req.tokens_done += 1
+                self.stats.tokens += 1
+                self.stats.tbt.append(t - req.last_token_t)
+                req.last_token_t = t
+                if req.tokens_done >= req.gen_len:
+                    finished.append(req)
+            for req in finished:
+                self.decoding.remove(req)
+                self._complete_request(req, t)
+        else:
+            req = self.active[0]
+            self.stats.ttft.append(t - req.arrival)
+            self.stats.tokens += 1
+            req.tokens_done = 1           # prefill emits the first token
+            req.last_token_t = t
+            if req.gen_len > 1 and self.plan.has_decode:
+                self.decoding.append(req)
+            else:
+                self._complete_request(req, t)
+        self.active = []
+        self.in_request = False
+        self._start_iteration(t)
+
+    def _complete_request(self, req: _Request, t: float) -> None:
+        self.stats.latencies.append(t - req.arrival)
         self.stats.completions.append(t)
         self.stats.requests_done += 1
-        if self.open_loop:
-            if self.pending_arrivals:
-                self.start_request(t, arrival=self.pending_arrivals.popleft())
-                return True
-            self.in_request = False
-            return False
-        if (self.stats.requests_done >= self.spec.n_requests
-                and not self.done):
-            self.done = True
-            self.finished_at = t
-        self.start_request(t)
-        return True
+        if not self.open_loop:
+            if (self.stats.requests_done >= self.spec.n_requests
+                    and not self.done):
+                self.done = True
+                self.finished_at = t
+            # closed loop: the next request arrives immediately
+            self.waiting.append(_Request(t, self.plan.gen_len))
 
+    # ---------------- program stepping ----------------
     def _advance(self, t: float) -> None:
         """Move to the next non-empty group/op; refill ready queues."""
         while True:
             nxt = self._next_cursor()
             if nxt is None:
-                self._on_request_complete(t)
+                self._on_iteration_complete(t)
                 return
             self.cursor = nxt
             if self._fill_ready():
                 return
 
     def _next_cursor(self) -> Optional[int]:
-        prog = self.spec.program
+        prog = self.cur_program
         if self.is_neuisa:
             n = len(prog.groups)
             if self.cursor < 0:
@@ -233,7 +363,8 @@ class _TenantRT:
 
     def _fill_ready(self) -> bool:
         """Expand current group/op into ready chunks. False if empty."""
-        prog = self.spec.program
+        prog = self.cur_program
+        phase = self.active_kind
         made = 0
         if self.is_neuisa:
             g: MuTOpGroup = prog.groups[self.cursor]
@@ -241,7 +372,7 @@ class _TenantRT:
                 if u.cycles > EPS or u.hbm_bytes > EPS:
                     self.ready_me.append(Chunk(
                         self.idx, ME, u.cycles, u.hbm_bytes, u.op_name,
-                        group_key=self.cursor))
+                        group_key=self.cursor, phase=phase))
                     made += 1
             if g.ve_utop is not None and (
                     g.ve_utop.cycles > EPS or g.ve_utop.hbm_bytes > EPS):
@@ -251,20 +382,21 @@ class _TenantRT:
                         self.idx, VE, g.ve_utop.cycles / n_y,
                         g.ve_utop.hbm_bytes / n_y, g.ve_utop.op_name,
                         group_key=self.cursor,
-                        from_me_group=bool(g.me_utops)))
+                        from_me_group=bool(g.me_utops), phase=phase))
                     made += 1
         else:
             op = prog.ops[self.cursor]
             if op.n_me_static > 0 and (op.me_cycles > EPS or op.hbm_bytes > EPS):
                 self.ready_me.append(Chunk(
                     self.idx, ME, op.me_cycles, op.hbm_bytes, op.op_name,
-                    n_engines=op.n_me_static, group_key=self.cursor))
+                    n_engines=op.n_me_static, group_key=self.cursor,
+                    phase=phase))
                 made += 1
                 # drain VE work is folded into the op span (pipelined)
             elif op.ve_cycles > EPS or op.hbm_bytes > EPS:
                 self.ready_ve.append(Chunk(
                     self.idx, VE, op.ve_cycles, op.hbm_bytes, op.op_name,
-                    group_key=self.cursor))
+                    group_key=self.cursor, phase=phase))
                 made += 1
         self.outstanding = made
         return made > 0
@@ -274,14 +406,12 @@ class _TenantRT:
         if self.outstanding <= 0 and not self.ready_me and not self.ready_ve:
             self._advance(t)
 
-    def arrive(self, t: float) -> None:
-        """Open-loop request arrival at time t."""
+    def arrive(self, t: float, gen_len: Optional[int] = None) -> None:
+        """Open-loop request arrival at time t; ``gen_len`` overrides
+        the plan's default generation length for this request."""
         if self.removed:
             return
-        if self.in_request:
-            self.pending_arrivals.append(t)
-        else:
-            self.start_request(t)
+        self.start_request(t, arrival=t, gen_len=gen_len)
 
 
 # ----------------------------------------------------------------------
@@ -360,7 +490,9 @@ class Simulator:
                 e.owner = None
         rt.ready_me.clear()
         rt.ready_ve.clear()
-        rt.pending_arrivals.clear()
+        rt.waiting.clear()
+        rt.decoding.clear()
+        rt.active = []
         rt.in_request = False
         rt.removed = True
         rt.done = True
@@ -395,9 +527,12 @@ class Simulator:
                             f"tenant {e.owner}; vNPU mapping conflict")
                     e.owner = rt.idx
 
-    def inject_request(self, idx: int, at: float) -> None:
+    def inject_request(self, idx: int, at: float,
+                       gen_len: Optional[int] = None) -> None:
         """Open-loop arrival: tenant ``idx`` receives a request at
-        cycle ``at`` (>= now)."""
+        cycle ``at`` (>= now). ``gen_len`` overrides the tenant plan's
+        default generation length for this request (generation-length
+        distributions sample it per request at the serving layer)."""
         rt = self.tenants[idx]
         if not rt.open_loop:
             raise ValueError(f"tenant {idx} is closed-loop")
@@ -405,8 +540,15 @@ class Simulator:
             raise ValueError(f"tenant {idx} was deregistered")
         if at < self.now - EPS:
             raise ValueError(f"arrival at {at} is in the past (now={self.now})")
+        if gen_len is not None and gen_len < 1:
+            raise ValueError(f"gen_len must be >= 1, got {gen_len}")
+        if gen_len is not None and gen_len > 1 and not rt.plan.has_decode:
+            raise ValueError(
+                f"tenant {idx} has no decode phases; gen_len={gen_len} "
+                f"would be silently truncated to 1 token")
         heapq.heappush(self._heap,
-                       (max(at, self.now), next(self._seq), _ARRIVAL, idx, 0))
+                       (max(at, self.now), next(self._seq), _ARRIVAL, idx,
+                        -1 if gen_len is None else int(gen_len)))
 
     # ------------------------------------------------------------------
     # event loop
@@ -468,7 +610,8 @@ class Simulator:
 
     def _apply(self, kind: str, eid: int, token: int, t: float) -> bool:
         if kind == _ARRIVAL:
-            self.tenants[eid].arrive(t)
+            # the token slot carries the per-request gen_len (-1: default)
+            self.tenants[eid].arrive(t, gen_len=None if token < 0 else token)
             return True
         eng = (self.mes if kind == ME else self.ves)[eid]
         if eng.token != token:
@@ -549,9 +692,9 @@ class Simulator:
             # extra engines seized but unusable); drain VE work is
             # pipelined inside the op span.
             span = chunk.cycles / max(chunk.n_engines, 1)
-            op = rt.spec.program.ops[chunk.group_key]
+            op = rt.cur_program.ops[chunk.group_key]
             frac = min(chunk.cycles / max(op.me_cycles, EPS), 1.0)
-            span = max(span, op.ve_cycles * frac / max(rt.spec.program.n_y, 1))
+            span = max(span, op.ve_cycles * frac / max(rt.cur_program.n_y, 1))
         else:
             # VLIW VE op addresses every VE slot granted at dispatch
             span = chunk.cycles / max(n_dispatched, 1)
@@ -633,7 +776,8 @@ class Simulator:
             chunk.tenant, chunk.kind, chunk.cycles * (1 - frac_done),
             chunk.hbm_bytes * (1 - frac_done), chunk.op_name,
             n_engines=chunk.n_engines, penalty=ctx,
-            group_key=chunk.group_key, from_me_group=chunk.from_me_group)
+            group_key=chunk.group_key, from_me_group=chunk.from_me_group,
+            phase=chunk.phase)
         (rt.ready_me if chunk.kind == ME else rt.ready_ve).insert(0, remaining)
         rt.stats.preemptions += 1
         if blocked_owner is not None:

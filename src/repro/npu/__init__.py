@@ -7,13 +7,16 @@ HBM bytes, tensor shapes, tiling) but are derived analytically from
 the model-zoo configs. See DESIGN.md §2.
 """
 from repro.npu.hw_config import NPUCoreConfig, TPUv5eRoofline, DEFAULT_CORE
-from repro.npu.cost_model import Operator, matmul_op, vector_op, memory_op
+from repro.npu.cost_model import (Operator, RequestPlan, decode_bucket,
+                                  matmul_op, memory_op, vector_op)
 
 __all__ = [
     "NPUCoreConfig",
     "TPUv5eRoofline",
     "DEFAULT_CORE",
     "Operator",
+    "RequestPlan",
+    "decode_bucket",
     "matmul_op",
     "vector_op",
     "memory_op",

@@ -218,3 +218,103 @@ class WorkloadTrace:
         """Lower bound: perfectly parallel + overlapped execution."""
         me, ve, hbm = self.totals()
         return max(me / n_me, ve / n_ve, hbm / self.core.hbm_bytes_per_cycle)
+
+
+# ----------------------------------------------------------------------
+# phase-structured request IR
+# ----------------------------------------------------------------------
+def decode_bucket(context: int, base: int = 512) -> int:
+    """Context bucket a decode step at ``context`` falls into: the
+    smallest ``base * 2**k`` >= context. Decode cost (KV stream, score
+    matmul K-dim) is bucketed so the compiler emits one program per
+    bucket instead of one per context length."""
+    b = base
+    while b < context:
+        b <<= 1
+    return b
+
+
+@dataclass
+class RequestPlan:
+    """Phase-structured request IR: one generation request = a prefill
+    phase (prompt ingestion, emits the first token) followed by up to
+    ``gen_len - 1`` decode steps against a growing KV cache.
+
+    Decode cost is *context-bucketed*: ``decode`` holds one
+    (bucket_context, trace) pair per power-of-two bucket covering
+    ``prompt_len + 1 .. prompt_len + max_gen``; a decode step at
+    context c uses the smallest bucket >= c. A single-phase workload
+    (the seed's fixed-phase traces) is the degenerate plan with
+    ``gen_len <= 1`` and no decode entries.
+    """
+
+    name: str
+    prefill: WorkloadTrace
+    decode: List[Tuple[int, WorkloadTrace]] = field(default_factory=list)
+    prompt_len: int = 0
+    gen_len: int = 1             # default generated tokens per request
+    max_gen: int = 0             # bucket coverage (>= any sampled gen len)
+    bucket_base: int = 512
+    hbm_footprint: float = 0.0
+
+    def __post_init__(self) -> None:
+        self.decode = sorted(self.decode, key=lambda p: p[0])
+        if not self.max_gen:
+            self.max_gen = self.gen_len
+        if not self.hbm_footprint:
+            traces = [self.prefill] + [t for _, t in self.decode]
+            self.hbm_footprint = max(t.hbm_footprint for t in traces)
+
+    @property
+    def has_decode(self) -> bool:
+        return bool(self.decode)
+
+    def decode_trace_for(self, context: int) -> Tuple[int, WorkloadTrace]:
+        """(bucket, trace) for a decode step at ``context``; clamps to
+        the largest precompiled bucket for out-of-coverage requests."""
+        if not self.decode:
+            raise ValueError(f"plan {self.name!r} has no decode phases")
+        for ctx, tr in self.decode:
+            if context <= ctx:
+                return ctx, tr
+        return self.decode[-1]
+
+    def decode_steps(self, gen_len: Optional[int] = None) -> int:
+        """Decode iterations a request needs: the prefill emits token 1,
+        each decode step one more."""
+        n = self.gen_len if gen_len is None else gen_len
+        return max(n - 1, 0)
+
+    def profile_trace(self) -> WorkloadTrace:
+        """Flatten into one WorkloadTrace weighted by the default
+        generation length — feeds the compile-time (m, v) profile the
+        Eq. 1-4 allocator consumes, so a decode-heavy tenant's vNPU
+        split reflects its decode:prefill cycle mix."""
+        tr = WorkloadTrace(name=f"{self.name}:profile",
+                           core=self.prefill.core)
+        tr.ops.extend(self.prefill.ops)
+        steps = self.decode_steps()
+        if steps and self.decode:
+            # distribute the default request's steps over its buckets;
+            # scaling an op by k is profile-equivalent to repeating it
+            per_bucket = self._steps_per_bucket(steps)
+            for (_, dtr), n in zip(self.decode, per_bucket):
+                if n <= 0:
+                    continue
+                tr.ops.extend(op.scaled(float(n)) for op in dtr.ops)
+        tr.hbm_footprint = self.hbm_footprint
+        return tr
+
+    def _steps_per_bucket(self, steps: int) -> List[int]:
+        out = []
+        done = 0
+        for ctx, _ in self.decode:
+            # steps whose context (prompt + tokens emitted so far + 1)
+            # fits under this bucket's ceiling
+            hi = min(ctx - self.prompt_len - 1, steps)
+            n = max(hi - done, 0)
+            out.append(n)
+            done += n
+        if out and done < steps:
+            out[-1] += steps - done  # clamp tail to the largest bucket
+        return out

@@ -19,7 +19,9 @@ from typing import List
 from repro.configs.base import ModelConfig
 from repro.npu.cost_model import (
     Operator,
+    RequestPlan,
     WorkloadTrace,
+    decode_bucket,
     matmul_op,
     memory_op,
     vector_op,
@@ -287,6 +289,47 @@ def lm_trace(
         kv += B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * cfg.n_layers * DTYPE
     tr.hbm_footprint = cfg.param_count() * DTYPE + kv
     return tr
+
+
+def request_plan(
+    cfg: ModelConfig,
+    batch: int,
+    prompt_len: int,
+    gen_len: int,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    max_gen: int = 0,
+    bucket: int = 512,
+    include_head: bool = True,
+) -> RequestPlan:
+    """Phase-structured generation request: prefill over ``prompt_len``
+    tokens (emits token 1) + decode steps against a growing KV cache.
+
+    Decode traces are emitted once per power-of-two context bucket
+    (``bucket``, 2x, 4x, ...) covering ``prompt_len + max_gen`` — the
+    compiler caches one program per bucket, and the simulator picks a
+    step's bucket from its live context. ``gen_len`` is the default
+    tokens-per-request; per-request lengths (a generation-length
+    distribution) are supplied at injection time and may use any
+    length up to ``max_gen`` (defaults to ``gen_len``).
+    """
+    max_gen = max(max_gen, gen_len, 1)
+    prefill = lm_trace(cfg, batch, prompt_len, "prefill", core,
+                       include_head=include_head)
+    decode = []
+    if max_gen > 1:
+        ctx = decode_bucket(prompt_len + 2, bucket)
+        last = decode_bucket(prompt_len + max_gen, bucket)
+        while True:
+            decode.append((ctx, lm_trace(cfg, batch, ctx, "decode", core,
+                                         include_head=include_head)))
+            if ctx >= last:
+                break
+            ctx <<= 1
+    return RequestPlan(
+        name=f"{cfg.name}:gen:b{batch}p{prompt_len}g{gen_len}",
+        prefill=prefill, decode=decode, prompt_len=prompt_len,
+        gen_len=gen_len, max_gen=max_gen, bucket_base=bucket,
+    )
 
 
 def train_trace(

@@ -1,5 +1,6 @@
 from repro.serve.engine import ServeEngine
 from repro.serve.session import (
+    GenLenDistribution,
     NPUCluster,
     PoissonArrivals,
     SLOAutoscaler,
@@ -13,6 +14,7 @@ from repro.serve.vserve import MultiTenantServer, Tenant
 
 __all__ = [
     "ServeEngine",
+    "GenLenDistribution",
     "NPUCluster",
     "ServingSession",
     "PoissonArrivals",

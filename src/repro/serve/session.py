@@ -35,20 +35,50 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.allocator import (Allocation, allocate_for_trace,
                                   estimate_memory, eu_utilization)
+from repro.core.compiler import CompiledRequestPlan, ProgramCache
 from repro.core.mapper import ReconfigureError, VNPUManager
 from repro.core.policies import PolicyLike, resolve_policy
 from repro.core.simulator import SimResult, Simulator, TenantSpec
+from repro.core.stats import percentile
 from repro.core.vnpu import VNPU, VNPUConfig
-from repro.npu.cost_model import WorkloadTrace
+from repro.npu.cost_model import RequestPlan, WorkloadTrace
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
-from repro.npu.trace import lm_trace
+from repro.npu.trace import lm_trace, request_plan
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class GenLenDistribution:
+    """Generation-length distribution for a generative tenant: each
+    injected request samples its token count (deterministically — the
+    rng is seeded per (seed, stream), where the session advances the
+    stream with every submission batch)."""
+
+    mean: float = 64.0
+    max_len: int = 512
+    seed: int = 0
+    kind: str = "geometric"      # "geometric" | "lognormal" | "fixed"
+
+    def sample(self, n: int, stream: int = 0) -> np.ndarray:
+        rng = np.random.default_rng([self.seed, stream])
+        if self.kind == "fixed":
+            xs = np.full(n, self.mean)
+        elif self.kind == "geometric":
+            xs = rng.geometric(1.0 / max(self.mean, 1.0), size=n)
+        elif self.kind == "lognormal":
+            sigma = 0.6
+            mu = math.log(max(self.mean, 1.0)) - sigma * sigma / 2.0
+            xs = rng.lognormal(mu, sigma, size=n)
+        else:
+            raise ValueError(f"unknown gen-length distribution {self.kind!r}")
+        return np.clip(np.round(xs).astype(int), 1, self.max_len)
 
 
 # ----------------------------------------------------------------------
@@ -66,6 +96,16 @@ class TenantHandle:
     vnpu: Optional[VNPU] = None
     sim_idx: int = -1            # index in the live simulator (-1: none)
     attached_at: float = 0.0     # cycles when the session attached it
+    # ---- generative tenants (phase-structured requests) ----
+    plan: Optional[RequestPlan] = None
+    gen_lens: Optional[GenLenDistribution] = None
+    slo_ttft_ms: Optional[float] = None   # time-to-first-token SLO
+    slo_tbt_ms: Optional[float] = None    # time-between-tokens SLO
+    submitted: int = 0           # gen-length sampling stream cursor
+
+    @property
+    def generative(self) -> bool:
+        return self.plan is not None
 
 
 @dataclass
@@ -80,7 +120,14 @@ class TenantReport:
     harvested_me_ms: float
     blocked_ms: float
     requests_done: int = 0
-    queued: int = 0              # open loop: arrivals still waiting
+    queued: int = 0              # open loop: requests admitted, not done
+    # ---- phase-aware serving (single-phase tenants: TTFT == e2e
+    #      latency, TBT series empty) ----
+    ttft_p95_ms: float = 0.0     # time-to-first-token tail
+    tbt_p95_ms: float = 0.0      # time-between-tokens tail
+    tokens_done: int = 0
+    slo_ttft_ok: Optional[bool] = None
+    slo_tbt_ok: Optional[bool] = None
 
 
 # ----------------------------------------------------------------------
@@ -127,6 +174,9 @@ class NPUCluster:
         self.core = core
         self.manager = VNPUManager(n_pnpus=n_pnpus, core=core)
         self.tenants: List[TenantHandle] = []
+        # per-(phase, context-bucket) compiled programs, shared across
+        # every tenant of this cluster (§III-D)
+        self.programs = ProgramCache()
 
     @property
     def policy_name(self) -> str:
@@ -141,13 +191,25 @@ class NPUCluster:
         (NeuISA μTOp groups or whole VLIW operators)."""
         return self.policy_cls.compile_program(trace, self.core)
 
+    def compile_plan(self, plan: RequestPlan) -> CompiledRequestPlan:
+        """Compile a phase-structured request plan through the shared
+        program cache — decode programs at context 512/1k/2k/... are
+        built once per model shape, however many tenants serve it."""
+        return self.policy_cls.compile_plan(plan, self.core,
+                                            cache=self.programs)
+
     # ------------------------------------------------------------------
     def register(self, name: str, trace: WorkloadTrace, eu_budget: int,
                  priority: float = 1.0,
-                 slo_p95_ms: Optional[float] = None) -> TenantHandle:
+                 slo_p95_ms: Optional[float] = None,
+                 plan: Optional[RequestPlan] = None,
+                 gen_lens: Optional[GenLenDistribution] = None,
+                 slo_ttft_ms: Optional[float] = None,
+                 slo_tbt_ms: Optional[float] = None) -> TenantHandle:
         """Pay-as-you-go entry point: the tenant buys `eu_budget` EUs;
         the allocator picks the ME/VE split from the compile-time
-        profile (§III-B)."""
+        profile (§III-B). Generative tenants pass ``plan`` (the trace
+        argument should then be the plan's profile trace)."""
         alloc = allocate_for_trace(trace, eu_budget, self.core)
         sram, hbm = estimate_memory(trace, alloc.n_me, self.core)
         try:
@@ -165,9 +227,37 @@ class NPUCluster:
                 trace, alloc, eu_budget, priority, name)
         h = TenantHandle(name=name, trace=trace, eu_budget=eu_budget,
                          priority=priority, slo_p95_ms=slo_p95_ms,
-                         allocation=alloc, vnpu=vnpu)
+                         allocation=alloc, vnpu=vnpu, plan=plan,
+                         gen_lens=gen_lens, slo_ttft_ms=slo_ttft_ms,
+                         slo_tbt_ms=slo_tbt_ms)
         self.tenants.append(h)
         return h
+
+    def register_generative(
+        self, name: str, cfg: ModelConfig,
+        prompt_len: int = 512,
+        gen_lens: Union[int, GenLenDistribution] = 64,
+        batch: int = 1, eu_budget: int = 4,
+        bucket: int = 512, **kw,
+    ) -> TenantHandle:
+        """Register an LLM serving tenant with a phase-structured
+        request lifecycle: prefill over ``prompt_len`` tokens, then a
+        generation-length-distributed decode chain with context-
+        bucketed cost. ``gen_lens`` is either a fixed token count or a
+        :class:`GenLenDistribution` sampled per request. The allocator
+        profile reflects the full prefill+decode cycle mix."""
+        if isinstance(gen_lens, GenLenDistribution):
+            dist: Optional[GenLenDistribution] = gen_lens
+            gen_len = max(int(round(gen_lens.mean)), 1)
+            max_gen = gen_lens.max_len
+        else:
+            dist = None
+            gen_len = max(int(gen_lens), 1)
+            max_gen = gen_len
+        plan = request_plan(cfg, batch, prompt_len, gen_len,
+                            core=self.core, max_gen=max_gen, bucket=bucket)
+        return self.register(name, plan.profile_trace(), eu_budget,
+                             plan=plan, gen_lens=dist, **kw)
 
     def _constrained_register(self, trace, alloc, eu_budget, priority,
                               name) -> Tuple[Allocation, VNPU]:
@@ -254,8 +344,12 @@ class NPUCluster:
                             exc: ReconfigureError) -> Allocation:
         cs = self.manager._core_of(handle.vnpu)
         cur = handle.vnpu.config
-        avail_me = len(cs.free_mes) + cur.n_me if cs else cur.n_me
-        avail_ve = len(cs.free_ves) + cur.n_ve if cs else cur.n_ve
+        # temporal mappings don't own engines exclusively, so the free
+        # list stays at core width — cap free+held at the physical core
+        avail_me = min(len(cs.free_mes) + cur.n_me if cs else cur.n_me,
+                       self.core.n_me)
+        avail_ve = min(len(cs.free_ves) + cur.n_ve if cs else cur.n_ve,
+                       self.core.n_ve)
         feasible = {
             (n_me, n_ve)
             for n_me in range(1, avail_me + 1)
@@ -296,12 +390,19 @@ def run_closed_loop(cluster: NPUCluster, n_requests: int = 8,
                     hbm_scale: float = 1.0,
                     ) -> Tuple[SimResult, List[TenantReport]]:
     """Batch-mode run: every registered tenant replays its program
-    ``n_requests`` times back to back (the paper's §V-A methodology)."""
-    specs = [
-        TenantSpec(cluster.compile(h.trace), h.vnpu, n_requests,
-                   weight=h.priority)
-        for h in cluster.tenants
-    ]
+    ``n_requests`` times back to back (the paper's §V-A methodology).
+    Generative tenants replay their full phase chain (prefill + the
+    default generation length of decode steps) per request."""
+    specs = []
+    for h in cluster.tenants:
+        if h.plan is not None:
+            cplan = cluster.compile_plan(h.plan)
+            specs.append(TenantSpec(cplan.prefill.program, h.vnpu,
+                                    n_requests, weight=h.priority,
+                                    plan=cplan))
+        else:
+            specs.append(TenantSpec(cluster.compile(h.trace), h.vnpu,
+                                    n_requests, weight=h.priority))
     res = Simulator(specs, policy=cluster.policy_cls, core=cluster.core,
                     hbm_scale=hbm_scale).run()
     return res, reports_from_result(cluster.tenants, res, cluster.core)
@@ -310,23 +411,40 @@ def run_closed_loop(cluster: NPUCluster, n_requests: int = 8,
 def reports_from_result(tenants: Sequence[TenantHandle], res: SimResult,
                         core: NPUCoreConfig) -> List[TenantReport]:
     ms = 1e3 / core.freq_hz
-    reports = []
-    for i, h in enumerate(tenants):
-        st = res.tenants[i]
-        p95 = st.p95() * ms
-        reports.append(TenantReport(
-            name=h.name,
-            n_me=h.vnpu.config.n_me,
-            n_ve=h.vnpu.config.n_ve,
-            p95_ms=p95,
-            mean_ms=st.mean() * ms,
-            throughput_rps=res.throughput(i),
-            slo_ok=(p95 <= h.slo_p95_ms) if h.slo_p95_ms else None,
-            harvested_me_ms=st.harvested_me_work * ms,
-            blocked_ms=st.reclaim_blocked * ms,
-            requests_done=st.requests_done,
-        ))
-    return reports
+    return [
+        _tenant_report(h, res.tenants[i], ms, res.throughput(i))
+        for i, h in enumerate(tenants)
+    ]
+
+
+def _tenant_report(h: TenantHandle, st, ms: float,
+                   throughput_rps: float, queued: int = 0) -> TenantReport:
+    """One TenantReport from a handle + its simulator stats — the
+    single place where SLO verdicts (e2e / TTFT / TBT) are computed,
+    shared by the open- and closed-loop reporters."""
+    p95 = st.p95() * ms
+    ttft_p95 = st.ttft_p95() * ms
+    tbt_p95 = st.tbt_p95() * ms
+    return TenantReport(
+        name=h.name,
+        n_me=h.vnpu.config.n_me,
+        n_ve=h.vnpu.config.n_ve,
+        p95_ms=p95,
+        mean_ms=st.mean() * ms,
+        throughput_rps=throughput_rps,
+        slo_ok=(p95 <= h.slo_p95_ms) if h.slo_p95_ms else None,
+        harvested_me_ms=st.harvested_me_work * ms,
+        blocked_ms=st.reclaim_blocked * ms,
+        requests_done=st.requests_done,
+        queued=queued,
+        ttft_p95_ms=ttft_p95,
+        tbt_p95_ms=tbt_p95,
+        tokens_done=st.tokens,
+        slo_ttft_ok=((ttft_p95 <= h.slo_ttft_ms)
+                     if h.slo_ttft_ms and st.ttft else None),
+        slo_tbt_ok=((tbt_p95 <= h.slo_tbt_ms)
+                    if h.slo_tbt_ms and st.tbt else None),
+    )
 
 
 # ----------------------------------------------------------------------
@@ -351,9 +469,8 @@ class SLOAutoscaler:
             return None
         if len(recent_latency_ms) < self.min_samples:
             return None
-        xs = sorted(recent_latency_ms[-self.window:])
-        i = min(len(xs) - 1, max(0, math.ceil(0.95 * len(xs)) - 1))
-        if xs[i] <= handle.slo_p95_ms:
+        if percentile(recent_latency_ms[-self.window:],
+                      0.95) <= handle.slo_p95_ms:
             return None
         return min(handle.eu_budget + self.step_eus, self.max_eus)
 
@@ -397,8 +514,13 @@ class ServingSession:
         return t_s * self.cluster.core.freq_hz
 
     def _attach(self, handle: TenantHandle) -> None:
-        prog = self.cluster.compile(handle.trace)
-        spec = TenantSpec(prog, handle.vnpu, weight=handle.priority)
+        if handle.plan is not None:
+            cplan = self.cluster.compile_plan(handle.plan)
+            spec = TenantSpec(cplan.prefill.program, handle.vnpu,
+                              weight=handle.priority, plan=cplan)
+        else:
+            prog = self.cluster.compile(handle.trace)
+            spec = TenantSpec(prog, handle.vnpu, weight=handle.priority)
         handle.sim_idx = self.sim.add_tenant(spec, open_loop=True)
         handle.attached_at = self.sim.now
         self._autoscale_cursor[handle.sim_idx] = 0
@@ -412,15 +534,22 @@ class ServingSession:
 
     # ---------------- tenant lifecycle (all legal mid-run) ----------------
     def register(self, name: str, trace: WorkloadTrace, eu_budget: int,
-                 priority: float = 1.0,
-                 slo_p95_ms: Optional[float] = None) -> TenantHandle:
-        h = self.cluster.register(name, trace, eu_budget,
-                                  priority=priority, slo_p95_ms=slo_p95_ms)
+                 **kw) -> TenantHandle:
+        h = self.cluster.register(name, trace, eu_budget, **kw)
         self._attach(h)
         return h
 
     def register_model(self, cfg: ModelConfig, **kw) -> TenantHandle:
         h = self.cluster.register_model(cfg, **kw)
+        self._attach(h)
+        return h
+
+    def register_generative(self, name: str, cfg: ModelConfig,
+                            **kw) -> TenantHandle:
+        """Register a phase-structured LLM tenant mid-run (prefill +
+        gen-length-distributed decode chain; see
+        :meth:`NPUCluster.register_generative`)."""
+        h = self.cluster.register_generative(name, cfg, **kw)
         self._attach(h)
         return h
 
@@ -448,16 +577,32 @@ class ServingSession:
         return handle
 
     # ---------------- request admission ----------------
-    def submit(self, handle: TenantHandle, at_s: Optional[float] = None) -> None:
+    def _gen_lens_for(self, handle: TenantHandle,
+                      n: int) -> List[Optional[int]]:
+        """Per-request generation lengths: sampled from the handle's
+        distribution on a deterministic stream, or the plan default."""
+        if handle.gen_lens is None:
+            lens: List[Optional[int]] = [None] * n
+        else:
+            lens = [int(x) for x in
+                    handle.gen_lens.sample(n, stream=handle.submitted)]
+        handle.submitted += 1
+        return lens
+
+    def submit(self, handle: TenantHandle, at_s: Optional[float] = None,
+               gen_len: Optional[int] = None) -> None:
         """Admit one request for ``handle`` at ``at_s`` seconds
-        (default: now)."""
+        (default: now). ``gen_len`` pins this request's token count;
+        otherwise the handle's distribution (or plan default) rules."""
         self._rt(handle)
         at = self.sim.now if at_s is None else self._cycles(at_s)
         if at < self.sim.now - 1e-9:
             raise ValueError(
                 f"arrival at t={at_s}s is in the past "
                 f"(session time {self.now_s:.6f}s)")
-        self.sim.inject_request(handle.sim_idx, at)
+        if gen_len is None:
+            gen_len = self._gen_lens_for(handle, 1)[0]
+        self.sim.inject_request(handle.sim_idx, at, gen_len=gen_len)
 
     def submit_arrivals(self, handle: TenantHandle,
                         arrivals: "ArrivalProcess") -> int:
@@ -465,8 +610,10 @@ class ServingSession:
         returns the number of requests injected."""
         self._rt(handle)
         times = arrivals.times_s()
-        for t_s in times:
-            self.sim.inject_request(handle.sim_idx, self._cycles(float(t_s)))
+        lens = self._gen_lens_for(handle, len(times))
+        for t_s, g in zip(times, lens):
+            self.sim.inject_request(handle.sim_idx, self._cycles(float(t_s)),
+                                    gen_len=g)
         return len(times)
 
     # ---------------- driving ----------------
@@ -515,22 +662,10 @@ class ServingSession:
         out = []
         for h in handles:
             rt = self._rt(h)
-            st = rt.stats
             elapsed_s = max(self.sim.now - h.attached_at, 1.0) / core.freq_hz
-            p95 = st.p95() * ms
-            out.append(TenantReport(
-                name=h.name,
-                n_me=h.vnpu.config.n_me,
-                n_ve=h.vnpu.config.n_ve,
-                p95_ms=p95,
-                mean_ms=st.mean() * ms,
-                throughput_rps=st.requests_done / elapsed_s,
-                slo_ok=(p95 <= h.slo_p95_ms) if h.slo_p95_ms else None,
-                harvested_me_ms=st.harvested_me_work * ms,
-                blocked_ms=st.reclaim_blocked * ms,
-                requests_done=st.requests_done,
-                queued=len(rt.pending_arrivals) + (1 if rt.in_request else 0),
-            ))
+            out.append(_tenant_report(
+                h, rt.stats, ms, rt.stats.requests_done / elapsed_s,
+                queued=rt.in_flight))
         return out
 
     def latencies_ms(self, handle: TenantHandle) -> List[float]:

@@ -63,6 +63,14 @@ class MultiTenantServer:
         return self.cluster.register_model(cfg, phase=phase, batch=batch,
                                            seq=seq, eu_budget=eu_budget, **kw)
 
+    def register_generative(self, name: str, cfg: ModelConfig,
+                            **kw) -> TenantHandle:
+        """Phase-structured LLM tenant (prefill -> decode chain). The
+        closed loop replays whole requests back to back; continuous
+        batching across arrivals needs the open-loop
+        :class:`~repro.serve.session.ServingSession`."""
+        return self.cluster.register_generative(name, cfg, **kw)
+
     def deregister(self, tenant: TenantHandle) -> None:
         self.cluster.deregister(tenant)
 

@@ -1,0 +1,338 @@
+"""Phase-aware request lifecycle: RequestPlan IR, the per-(phase,
+context-bucket) program cache, phase chains + continuous batching in
+the simulator, TTFT/TBT accounting, determinism under live
+reconfigure, and the shared percentile helper."""
+import math
+
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.compiler import ProgramCache, compile_request_plan
+from repro.core.stats import mean, p50, p95, p99, percentile
+from repro.core.simulator import SimResult, Simulator, TenantStats
+from repro.npu.cost_model import (Operator, RequestPlan, WorkloadTrace,
+                                  decode_bucket)
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.npu.trace import lm_trace, request_plan
+from repro.serve.session import (GenLenDistribution, NPUCluster,
+                                 PoissonArrivals, ServingSession)
+
+CFG = SMOKES["qwen2-0.5b"]
+
+
+def _session(policy="neu10", **kw):
+    return ServingSession(NPUCluster(policy=policy), **kw)
+
+
+def _gen_tenant(sess, name="g", prompt_len=128, gen=8, max_gen=0, **kw):
+    gl = (GenLenDistribution(mean=gen, max_len=max_gen, seed=5)
+          if max_gen else gen)
+    return sess.register_generative(name, CFG, prompt_len=prompt_len,
+                                    gen_lens=gl, eu_budget=4, **kw)
+
+
+# ----------------------------------------------------------------------
+# RequestPlan IR (trace / cost-model layer)
+# ----------------------------------------------------------------------
+def test_decode_bucket_powers_of_two():
+    assert decode_bucket(1) == 512
+    assert decode_bucket(512) == 512
+    assert decode_bucket(513) == 1024
+    assert decode_bucket(2049) == 4096
+    assert decode_bucket(300, base=256) == 512
+
+
+def test_request_plan_buckets_cover_generation():
+    plan = request_plan(CFG, batch=1, prompt_len=500, gen_len=64,
+                        max_gen=2048)
+    assert plan.prefill.name.endswith(":prefill:b1s500")
+    ctxs = [c for c, _ in plan.decode]
+    # buckets double from the first decode context to prompt+max_gen
+    assert ctxs[0] == decode_bucket(502)
+    assert ctxs[-1] >= 500 + 2048
+    assert all(b == a * 2 for a, b in zip(ctxs, ctxs[1:]))
+    # each bucket's trace is a decode trace at the bucket ceiling
+    for ctx, tr in plan.decode:
+        assert f":decode:b1s{ctx}" in tr.name
+    # a step at any live context resolves to a covering bucket
+    ctx, _ = plan.decode_trace_for(501)
+    assert ctx == ctxs[0]
+    ctx, _ = plan.decode_trace_for(10 ** 9)   # clamps to largest
+    assert ctx == ctxs[-1]
+
+
+def test_request_plan_decode_steps_and_profile():
+    plan = request_plan(CFG, batch=1, prompt_len=128, gen_len=16)
+    assert plan.decode_steps() == 15          # prefill emits token 1
+    assert plan.decode_steps(1) == 0
+    prof = plan.profile_trace()
+    # profile = prefill ops + gen-weighted decode ops: its ME/VE totals
+    # must dominate the bare prefill's
+    me_p, ve_p, _ = plan.prefill.totals()
+    me, ve, _ = prof.totals()
+    assert me > me_p and ve > ve_p
+    m, v = prof.profile_mv()
+    assert 0 < m <= 1 and 0 < v <= 1
+
+
+def test_single_phase_plan_is_degenerate():
+    tr = lm_trace(CFG, 4, 256, "prefill")
+    plan = RequestPlan(name="p", prefill=tr, prompt_len=256, gen_len=1)
+    assert not plan.has_decode
+    assert plan.decode_steps() == 0
+    assert plan.hbm_footprint == tr.hbm_footprint
+    with pytest.raises(ValueError, match="no decode phases"):
+        plan.decode_trace_for(300)
+
+
+def test_lifecycle_guards():
+    """Misuse fails loudly: a multi-token request on a tenant without
+    decode phases, and half-built TenantSpecs."""
+    from repro.core.simulator import TenantSpec
+
+    sess = _session()
+    h = sess.register("w", lm_trace(CFG, 2, 256, "prefill"), eu_budget=4)
+    with pytest.raises(ValueError, match="no decode phases"):
+        sess.submit(h, gen_len=8)
+    with pytest.raises(ValueError, match="gen_len"):
+        sess.sim.inject_request(h.sim_idx, sess.sim.now, gen_len=0)
+    with pytest.raises(ValueError, match="program or a plan"):
+        TenantSpec(vnpu=h.vnpu)
+    with pytest.raises(ValueError, match="vnpu"):
+        TenantSpec(program=sess.cluster.compile(h.trace))
+
+
+# ----------------------------------------------------------------------
+# compiler: per-(phase, bucket) program cache
+# ----------------------------------------------------------------------
+def test_program_cache_shares_decode_buckets():
+    cache = ProgramCache()
+    plan = request_plan(CFG, batch=1, prompt_len=128, gen_len=32,
+                        max_gen=1024)
+    c1 = compile_request_plan(plan, DEFAULT_CORE, isa="neuisa", cache=cache)
+    misses = cache.misses
+    assert misses == 1 + len(plan.decode)
+    # a second tenant with the same shape compiles NOTHING new
+    c2 = compile_request_plan(plan, DEFAULT_CORE, isa="neuisa", cache=cache)
+    assert cache.misses == misses
+    assert cache.hits == misses
+    for a, b in zip(c1.decode, c2.decode):
+        assert a.program is b.program        # shared, not re-built
+    # ... but a different ISA (policy front-end) does
+    compile_request_plan(plan, DEFAULT_CORE, isa="vliw", cache=cache)
+    assert cache.misses == 2 * misses
+
+
+def test_program_cache_fingerprints_trace_content():
+    """Two traces sharing a name but with different op costs must not
+    collide in the cache."""
+    cache = ProgramCache()
+    a = WorkloadTrace("same", [Operator("mm", me_cycles=1000.0, n_tiles=4)],
+                      core=DEFAULT_CORE)
+    b = WorkloadTrace("same", [Operator("mm", me_cycles=9000.0, n_tiles=4)],
+                      core=DEFAULT_CORE)
+    pa = cache.compile(a, DEFAULT_CORE, "neuisa")
+    pb = cache.compile(b, DEFAULT_CORE, "neuisa")
+    assert pa is not pb
+    assert cache.misses == 2 and cache.hits == 0
+
+
+def test_cluster_program_cache_shared_across_tenants():
+    cluster = NPUCluster(policy="neu10")
+    sess = ServingSession(cluster)
+    sess.register_generative("a", CFG, prompt_len=128, gen_lens=8,
+                             eu_budget=2)
+    baseline = len(cluster.programs)
+    sess.register_generative("b", CFG, prompt_len=128, gen_lens=8,
+                             eu_budget=2)
+    assert len(cluster.programs) == baseline  # all programs reused
+    assert cluster.programs.hits >= baseline
+
+
+# ----------------------------------------------------------------------
+# simulator: phase chains + continuous batching
+# ----------------------------------------------------------------------
+def test_phase_chain_token_accounting():
+    sess = _session()
+    h = _gen_tenant(sess, gen=8)
+    sess.submit(h, at_s=0.0)
+    sess.drain()
+    st = sess.sim.tenants[h.sim_idx].stats
+    assert st.requests_done == 1
+    assert st.tokens == 8                      # 1 prefill + 7 decode
+    assert len(st.ttft) == 1 and len(st.tbt) == 7
+    assert st.decode_iterations == 7
+    # TTFT < e2e, and e2e == TTFT + sum(TBT) for a lone request
+    assert st.ttft[0] < st.latencies[0]
+    assert st.latencies[0] == pytest.approx(st.ttft[0] + sum(st.tbt))
+
+
+def test_continuous_batching_coalesces_decodes():
+    sess = _session()
+    h = _gen_tenant(sess, gen=12)
+    for _ in range(3):
+        sess.submit(h, at_s=0.0)               # 3 simultaneous arrivals
+    sess.drain()
+    st = sess.sim.tenants[h.sim_idx].stats
+    assert st.requests_done == 3
+    assert st.max_decode_batch >= 2            # shared decode iterations
+    # coalescing means far fewer iterations than per-request steps
+    assert st.decode_iterations < 3 * 11
+    assert st.tokens == 3 * 12
+
+
+def test_gen_len_distribution_varies_requests():
+    sess = _session()
+    h = _gen_tenant(sess, gen=16, max_gen=64)
+    sess.submit_arrivals(h, PoissonArrivals(rate_rps=500.0, n=12, seed=2))
+    sess.drain()
+    st = sess.sim.tenants[h.sim_idx].stats
+    assert st.requests_done == 12
+    # geometric lengths: not all requests emitted the same token count
+    assert st.tokens != 12 * 16
+    r = sess.report(h)[0]
+    assert r.tokens_done == st.tokens
+    assert r.ttft_p95_ms > 0 and r.tbt_p95_ms > 0
+
+
+def test_single_phase_tenants_unchanged_by_lifecycle():
+    """A plain trace registration is the degenerate one-phase plan:
+    per-request latencies equal the seed semantics (TTFT == e2e, no
+    decode iterations)."""
+    tr = WorkloadTrace("w", [
+        Operator(f"mm{i}", me_cycles=20_000.0, ve_cycles=5_000.0, n_tiles=8)
+        for i in range(6)
+    ], core=DEFAULT_CORE)
+    sess = _session()
+    h = sess.register("w", tr, eu_budget=4)
+    sess.submit_arrivals(h, PoissonArrivals(rate_rps=1000.0, n=10, seed=1))
+    sess.drain()
+    st = sess.sim.tenants[h.sim_idx].stats
+    assert st.requests_done == 10
+    assert st.decode_iterations == 0
+    assert st.ttft == st.latencies
+    assert st.tbt == []
+
+
+def test_phase_kind_reaches_policy_chunks():
+    """SchedulerPolicy dispatch sees the phase kind on every chunk."""
+    seen = set()
+
+    sess = _session()
+    h = _gen_tenant(sess, gen=4)
+    sim = sess.sim
+    orig = sim.dispatch
+
+    def spy(chunk, engines, t, harvested=False):
+        seen.add(chunk.phase)
+        return orig(chunk, engines, t, harvested)
+
+    sim.dispatch = spy
+    sess.submit(h, at_s=0.0)
+    sess.drain()
+    assert {"prefill", "decode"} <= seen
+
+
+def test_closed_loop_replays_full_phase_chain():
+    """run_closed_loop (and the MultiTenantServer shim) replay a
+    generative tenant's prefill+decode chain per request — with
+    request concurrency 1, decode steps never coalesce."""
+    from repro.serve.session import run_closed_loop
+
+    cluster = NPUCluster(policy="neu10")
+    cluster.register_generative("chat", CFG, prompt_len=128, gen_lens=8,
+                                eu_budget=4)
+    res, reports = run_closed_loop(cluster, n_requests=3)
+    st = res.tenants[0]
+    assert st.requests_done >= 3
+    assert st.tokens == st.requests_done * 8
+    assert st.max_decode_batch == 1
+    assert reports[0].ttft_p95_ms > 0 and reports[0].tbt_p95_ms > 0
+    assert reports[0].ttft_p95_ms < reports[0].p95_ms
+
+
+# ----------------------------------------------------------------------
+# satellite: open-loop determinism incl. live reconfigure mid-decode
+# ----------------------------------------------------------------------
+def _lifecycle_run():
+    sess = _session()
+    a = _gen_tenant(sess, "a", gen=16, max_gen=48)
+    b = sess.register("b", lm_trace(CFG, 2, 256, "prefill"), eu_budget=2)
+    sess.submit_arrivals(a, PoissonArrivals(rate_rps=3000.0, n=20, seed=7))
+    sess.submit_arrivals(b, PoissonArrivals(rate_rps=2000.0, n=10, seed=8))
+    sess.run_until(0.002)
+    st = sess.sim.tenants[a.sim_idx].stats
+    assert st.decode_iterations > 0            # resize lands mid-decode
+    sess.resize(a, 6)
+    sess.run_until(0.004)
+    sess.drain()
+    out = []
+    for h in (a, b):
+        s = sess.sim.tenants[h.sim_idx].stats
+        out.append((s.latencies, s.completions, s.ttft, s.tbt,
+                    s.requests_done, s.tokens, s.max_decode_batch,
+                    s.preemptions))
+    return out
+
+
+def test_open_loop_determinism_with_reconfigure():
+    """Same arrivals + seed => identical completion order and stats
+    across two runs, including a live resize mid-decode."""
+    assert _lifecycle_run() == _lifecycle_run()
+
+
+# ----------------------------------------------------------------------
+# satellite: zero-makespan / empty-run guards
+# ----------------------------------------------------------------------
+def test_zero_makespan_division_guards():
+    res = SimResult(policy="neu10", makespan=0.0, tenants=[],
+                    n_me=4, n_ve=4, freq_hz=1e9)
+    assert res.me_utilization() == 0.0
+    assert res.ve_utilization() == 0.0
+    assert res.total_throughput() == 0.0
+    res2 = SimResult(policy="neu10", makespan=0.0,
+                     tenants=[TenantStats(name="t")],
+                     n_me=4, n_ve=4, freq_hz=1e9)
+    assert res2.throughput(0) == 0.0
+
+
+def test_empty_open_loop_run_reports_cleanly():
+    sim = Simulator((), policy="neu10")
+    sim.run_until(1000.0)
+    res = sim.result()
+    assert res.me_utilization() == 0.0
+    assert res.ve_utilization() == 0.0
+    sess = _session()
+    h = _gen_tenant(sess, gen=4)
+    r = sess.report(h)[0]                      # no traffic yet
+    assert r.p95_ms == 0.0 and r.throughput_rps == 0.0
+    assert r.ttft_p95_ms == 0.0 and r.tbt_p95_ms == 0.0
+
+
+# ----------------------------------------------------------------------
+# satellite: shared percentile helper
+# ----------------------------------------------------------------------
+def test_percentile_matches_seed_convention():
+    """percentile() reproduces the seed's TenantStats.p95 nearest-rank
+    index arithmetic exactly."""
+    for n in (1, 2, 5, 19, 20, 100):
+        xs = [float((7 * i) % n) for i in range(n)]
+        ys = sorted(xs)
+        i = min(len(ys) - 1, max(0, math.ceil(0.95 * len(ys)) - 1))
+        assert percentile(xs, 0.95) == ys[i]
+    assert percentile([], 0.95) == 0.0
+    assert p50([1.0, 2.0, 3.0]) == 2.0
+    assert p95(list(map(float, range(1, 101)))) == 95.0
+    assert p99(list(map(float, range(1, 101)))) == 99.0
+    assert mean([2.0, 4.0]) == 3.0
+    assert mean([]) == 0.0
+    with pytest.raises(ValueError):
+        percentile([1.0], 1.5)
+
+
+def test_tenant_stats_use_shared_percentile():
+    st = TenantStats(name="t", latencies=[5.0, 1.0, 3.0],
+                     ttft=[2.0, 4.0], tbt=[0.5, 0.25])
+    assert st.p95() == percentile(st.latencies, 0.95)
+    assert st.ttft_p95() == percentile(st.ttft, 0.95)
+    assert st.tbt_p95() == percentile(st.tbt, 0.95)
