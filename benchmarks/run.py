@@ -17,6 +17,7 @@ from benchmarks import (
     fig22_utilization,
     fig25_scaling,
     fig26_hbm,
+    fig_chunked_prefill,
     fig_colocation,
     table3_harvest_overhead,
 )
@@ -30,6 +31,7 @@ SUITES = {
     "fig25": fig25_scaling,
     "fig26": fig26_hbm,
     "fig_colocation": fig_colocation,
+    "fig_chunked_prefill": fig_chunked_prefill,
 }
 
 

@@ -164,7 +164,9 @@ DECODE = "decode"
 @dataclass
 class CompiledPhase:
     """One phase of a compiled request: the program the scheduler
-    replays for it, plus the context bucket it was compiled at."""
+    replays for it, plus the context it was compiled at (``context``
+    is in TOKENS: the decode bucket ceiling, or — for a prefill chunk
+    — the prompt tokens ingested once this chunk completes)."""
 
     kind: str                    # "prefill" | "decode" | "" (legacy)
     program: AnyProgram
@@ -173,22 +175,46 @@ class CompiledPhase:
 
 @dataclass
 class CompiledRequestPlan:
-    """Compiled :class:`~repro.npu.cost_model.RequestPlan`: the prefill
-    program plus one decode program per context bucket. The simulator
-    walks a request's phase chain through these; a plan without decode
-    phases is the degenerate single-phase case (seed behavior)."""
+    """Compiled :class:`~repro.npu.cost_model.RequestPlan`: the
+    prefill program(s) plus one decode program per context bucket.
+    The simulator walks a request's phase chain through these; a plan
+    without decode phases is the degenerate single-phase case (seed
+    behavior).
+
+    Chunked prefill (``RequestPlan.prefill_chunk_tokens``) compiles
+    one program per chunk into ``prefill_chunks`` (ingestion order);
+    ``prefill`` is then the first chunk. Monolithic plans leave
+    ``prefill_chunks`` empty — :meth:`prefill_phases` abstracts over
+    both shapes."""
 
     name: str
     prefill: CompiledPhase
     decode: List[CompiledPhase] = field(default_factory=list)
-    prompt_len: int = 0
-    gen_len: int = 1
+    prompt_len: int = 0          # tokens
+    gen_len: int = 1             # default tokens generated per request
+    prefill_chunks: List[CompiledPhase] = field(default_factory=list)
 
     @property
     def has_decode(self) -> bool:
         return bool(self.decode)
 
+    @property
+    def chunked(self) -> bool:
+        return bool(self.prefill_chunks)
+
+    @property
+    def n_prefill_chunks(self) -> int:
+        """Prefill phases per request (1 when monolithic)."""
+        return len(self.prefill_chunks) or 1
+
+    def prefill_phases(self) -> List[CompiledPhase]:
+        """The prefill phase chain a request walks, in order."""
+        return list(self.prefill_chunks) or [self.prefill]
+
     def decode_phase_for(self, context: int) -> CompiledPhase:
+        """Decode phase covering a step at ``context`` tokens; clamps
+        to the largest precompiled bucket for out-of-coverage
+        requests."""
         if not self.decode:
             raise ValueError(
                 f"plan {self.name!r} has no decode phases")
@@ -205,9 +231,12 @@ class ProgramCache:
     every request — and for every tenant serving the same model shape —
     so they compile once. Keyed by (isa, trace name, op count, work
     totals, core): trace names embed model:phase:bNsM, and the ME/VE/
-    HBM totals fingerprint the content so a rebuilt or hand-scaled
-    trace that reuses a name cannot collide with another shape's
-    program.
+    HBM totals (cycles, cycles, bytes) fingerprint the content so a
+    rebuilt or hand-scaled trace that reuses a name cannot collide
+    with another shape's program. Prefill chunk traces embed their
+    prior-context offset (…:bNkP+C), so a chunk program likewise
+    compiles once per (model shape, chunk size, position, ISA) and is
+    shared by every request and tenant with that shape.
     """
 
     def __init__(self) -> None:
@@ -220,6 +249,10 @@ class ProgramCache:
 
     def compile(self, trace: WorkloadTrace, core: NPUCoreConfig,
                 isa: str = "neuisa") -> AnyProgram:
+        """Compile ``trace`` for ``isa`` (``"neuisa"`` μTOp groups or
+        ``"vliw"`` whole operators), returning the cached program when
+        an identical (name, op count, cycle/byte totals, core) build
+        exists."""
         key = (isa, trace.name, len(trace.ops), trace.totals(), core)
         prog = self._cache.get(key)
         if prog is not None:
@@ -241,13 +274,28 @@ def compile_request_plan(
     """Lower a phase-structured request into per-phase programs,
     reusing ``cache`` across buckets / requests / tenants."""
     cache = cache if cache is not None else ProgramCache()
-    prefill = CompiledPhase(PREFILL, cache.compile(plan.prefill, core, isa),
-                            context=plan.prompt_len)
+    chunks: List[CompiledPhase] = []
+    if plan.prefill_chunks:
+        # one program per chunk position — the cache collapses these
+        # across requests/tenants of the same (shape, chunk size, ISA)
+        ingested = 0
+        step = plan.prefill_chunk_tokens or plan.prompt_len
+        for tr in plan.prefill_chunks:
+            ingested = min(ingested + step, plan.prompt_len)
+            chunks.append(CompiledPhase(PREFILL,
+                                        cache.compile(tr, core, isa),
+                                        context=ingested))
+        prefill = chunks[0]
+    else:
+        prefill = CompiledPhase(PREFILL,
+                                cache.compile(plan.prefill, core, isa),
+                                context=plan.prompt_len)
     decode = [CompiledPhase(DECODE, cache.compile(tr, core, isa), context=ctx)
               for ctx, tr in plan.decode]
     return CompiledRequestPlan(
         name=plan.name, prefill=prefill, decode=decode,
         prompt_len=plan.prompt_len, gen_len=plan.gen_len,
+        prefill_chunks=chunks,
     )
 
 

@@ -144,6 +144,51 @@ class NeuISAProgram:
 
 
 @dataclass
+class FusedIssueGroup:
+    """A cross-tenant issue group (Fig. 6 co-scheduling).
+
+    While one tenant's prefill(-chunk) ME μTOps grind through the
+    systolic arrays, its VE slots are mostly idle (the drain work is
+    pipelined into the ME span). A fused issue group co-issues
+    co-tenant *decode* VE μTOps into that window: the ME μTOps keep
+    their engines, the decode μTOps ride the idle VE slots, and —
+    like μTOps of one compile-time group — members run to completion
+    without preempting each other (the scheduler's reclaim pass skips
+    fused members). This is purely an issue-time pairing formed by the
+    scheduler; it adds no instructions to either program."""
+
+    me_tenant: int                       # tenant whose prefill MEs anchor
+    op_name: str                         # the anchoring ME operator
+    ve_members: List[Tuple[int, str]] = field(default_factory=list)
+                                         # (tenant idx, op name) co-issued
+
+    @property
+    def fused(self) -> bool:
+        return bool(self.ve_members)
+
+
+def form_fused_group(
+    me_tenant: int,
+    op_name: str,
+    candidates: Sequence[Tuple[int, str, str]],
+    max_ve: int = 1,
+) -> FusedIssueGroup:
+    """Form a fused issue group under a tenant's in-flight prefill ME
+    μTOps. ``candidates`` are (tenant idx, op name, phase) tuples of
+    ready VE μTOps; only *decode*-phase μTOps from OTHER tenants fuse
+    (same-tenant VE work already shares the compile-time group, and
+    non-decode work has no latency claim on the window). At most
+    ``max_ve`` members join — one per donated VE slot."""
+    g = FusedIssueGroup(me_tenant=me_tenant, op_name=op_name)
+    for tenant, op, phase in candidates:
+        if len(g.ve_members) >= max_ve:
+            break
+        if phase == "decode" and tenant != me_tenant:
+            g.ve_members.append((tenant, op))
+    return g
+
+
+@dataclass
 class VLIWOp:
     """Baseline ISA unit (Fig. 8 left): one tensor operator whose
     VLIW instruction stream couples the control flow of all

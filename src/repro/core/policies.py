@@ -40,10 +40,13 @@ Policy API surface on the simulator (stable for third parties):
 from __future__ import annotations
 
 from abc import ABC, abstractmethod
-from typing import TYPE_CHECKING, Callable, Dict, Optional, Tuple, Type, Union
+from collections import deque
+from typing import (TYPE_CHECKING, Callable, Deque, Dict, Optional, Tuple,
+                    Type, Union)
 
 from repro.core.compiler import (ProgramCache, compile_neuisa,
                                  compile_request_plan, compile_vliw)
+from repro.core.neuisa import ME, FusedIssueGroup, form_fused_group
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.simulator import Simulator
@@ -128,6 +131,8 @@ class SchedulerPolicy(ABC):
 
     @property
     def mapping(self) -> str:
+        """vNPU mapping scheme this policy implies (``"spatial"`` =
+        engines owned per tenant, ``"temporal"`` = shared)."""
         return "spatial" if self.spatial else "temporal"
 
     @classmethod
@@ -167,11 +172,26 @@ class SchedulerPolicy(ABC):
 # verbatim from the former Simulator._schedule_* branches.
 # ----------------------------------------------------------------------
 class _SpatialPolicy(SchedulerPolicy):
-    """Spatially-isolated vNPUs (dedicated engines per tenant)."""
+    """Spatially-isolated vNPUs (dedicated engines per tenant).
+
+    ``harvest``: idle engines may run co-tenant μTOps (reclaimed by
+    preemption when the owner needs them back). ``fuse``: harvested
+    decode VE μTOps landing under a co-tenant's in-flight prefill ME
+    μTOps form a :class:`~repro.core.neuisa.FusedIssueGroup` — the
+    paper's Fig. 6 ISA-level co-scheduling — and run to completion
+    (the reclaim pass skips fused members, so neither side pays a
+    preemption drain for the shared window)."""
 
     spatial = True
     isa = "neuisa"
     harvest = False
+    fuse = False
+
+    def __init__(self) -> None:
+        # the most recent fused issue groups formed, newest last —
+        # observability for tests/operators (who anchored, who rode):
+        # inspect via ``sim.policy_obj.recent_fused``
+        self.recent_fused: Deque[FusedIssueGroup] = deque(maxlen=64)
 
     def schedule(self, sim: "Simulator", t: float) -> None:
         tenants = sim.active_tenants()
@@ -190,7 +210,9 @@ class _SpatialPolicy(SchedulerPolicy):
                 # Engines drain in PARALLEL, so the owner is wall-
                 # blocked for ONE ctx window per reclaim pass (what
                 # Table III measures), however many engines it takes
-                # back.
+                # back. Fused issue-group members are exempt: they
+                # were co-issued INTO the owner's prefill window and
+                # complete with it (Fig. 6).
                 if self.harvest and ready:
                     reclaimed = 0
                     for e in pool:
@@ -199,6 +221,8 @@ class _SpatialPolicy(SchedulerPolicy):
                         if (e.owner == rt.idx and not e.free
                                 and e.chunk is not None
                                 and e.tenant != rt.idx):
+                            if e.chunk.fused:
+                                continue
                             sim.preempt(e, t)
                             reclaimed += 1
                     if reclaimed:
@@ -235,7 +259,31 @@ class _SpatialPolicy(SchedulerPolicy):
                     owner_ready = getattr(owner, ready_attr) if owner else []
                     if owner_ready:
                         continue  # owner will use it this round
-                    sim.dispatch(ready.pop(0), [e], t, harvested=True)
+                    chunk = ready.pop(0)
+                    if (self.fuse and pool is sim.ves and owner is not None
+                            and chunk.phase == "decode"):
+                        self._try_fuse(sim, chunk, e.owner, rt)
+                    sim.dispatch(chunk, [e], t, harvested=True)
+
+    def _try_fuse(self, sim: "Simulator", chunk, owner_idx: int, rt) -> None:
+        """Fuse a harvested decode VE μTOp into the engine owner's
+        in-flight prefill ME group, if it has one (Fig. 6): the μTOp
+        becomes a fused issue-group member and is exempt from reclaim
+        until it completes."""
+        anchor = next(
+            (m.chunk for m in sim.mes
+             if m.chunk is not None and m.tenant == owner_idx
+             and m.chunk.kind == ME and m.chunk.phase == "prefill"),
+            None)
+        if anchor is None:
+            return
+        group = form_fused_group(
+            owner_idx, anchor.op_name,
+            [(chunk.tenant, chunk.op_name, chunk.phase)], max_ve=1)
+        if group.fused:
+            chunk.fused = True
+            rt.stats.fused_groups += 1
+            self.recent_fused.append(group)
 
 
 @register_policy("neu10_nh")
@@ -249,9 +297,13 @@ class Neu10NoHarvestPolicy(_SpatialPolicy):
 @register_policy("neu10")
 class Neu10Policy(_SpatialPolicy):
     """Spatial-isolated + dynamic μTOp scheduling with ME/VE
-    harvesting and reclaim preemption (the paper's system)."""
+    harvesting, reclaim preemption, and fused prefill+decode issue
+    groups (the paper's system; fusion is the Fig. 6 co-scheduling of
+    a prefill chunk's MU-heavy μTOps with co-tenant decode VE
+    μTOps)."""
 
     harvest = True
+    fuse = True
 
 
 @register_policy("v10")

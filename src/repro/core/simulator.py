@@ -63,7 +63,9 @@ _ARRIVAL = "arr"  # heap event kind for open-loop request arrivals
 @dataclass
 class Chunk:
     """A schedulable unit: one ME μTOp, one VE μTOp slot-chunk, or a
-    whole VLIW operator (multi-engine)."""
+    whole VLIW operator (multi-engine). ``cycles`` is engine cycles of
+    work; ``hbm_bytes`` is bytes of HBM traffic; ``penalty`` is
+    context-switch cycles added on resume."""
 
     tenant: int
     kind: str                    # "me" | "ve"
@@ -76,10 +78,18 @@ class Chunk:
     from_me_group: bool = False  # VE chunk draining an ME group
     phase: str = ""              # "prefill" | "decode" | "" — visible to
                                  # SchedulerPolicy dispatch decisions
+    fused: bool = False          # member of a cross-tenant fused issue
+                                 # group (Fig. 6): exempt from reclaim
+                                 # preemption while it completes
 
 
 @dataclass
 class TenantSpec:
+    """One collocated tenant handed to the :class:`Simulator`: a
+    compiled program (or a phase-structured ``plan``), the vNPU whose
+    engines it owns/targets, the closed-loop request count, and its
+    fair-share ``weight`` (dimensionless priority)."""
+
     program: Union[NeuISAProgram, VLIWProgram, None] = None
     vnpu: Optional[VNPU] = None
     n_requests: int = 8          # closed-loop target (ignored open loop)
@@ -96,20 +106,32 @@ class TenantSpec:
 
 
 class _Request:
-    """One in-flight generation request: its arrival time, target
-    token count, and token-emission cursor."""
+    """One in-flight generation request: its arrival time (cycles),
+    target token count, token-emission cursor, and — under chunked
+    prefill — how many prefill chunk phases have completed."""
 
-    __slots__ = ("arrival", "gen_len", "tokens_done", "last_token_t")
+    __slots__ = ("arrival", "gen_len", "tokens_done", "last_token_t",
+                 "chunks_done")
 
     def __init__(self, arrival: float, gen_len: int = 1):
         self.arrival = arrival
         self.gen_len = max(int(gen_len), 1)
         self.tokens_done = 0
         self.last_token_t = arrival
+        self.chunks_done = 0
 
 
 @dataclass
 class TenantStats:
+    """Per-tenant simulation counters.
+
+    Units: every time-valued field (``latencies``, ``completions``,
+    ``ttft``, ``tbt``, ``*_work``, ``reclaim_blocked``) is in CYCLES
+    of the simulated core clock — divide by ``NPUCoreConfig.freq_hz``
+    for seconds (the serve layer's :class:`TenantReport` does this
+    once, reporting milliseconds). Token/iteration fields are plain
+    counts."""
+
     name: str
     latencies: List[float] = field(default_factory=list)  # e2e, from arrival
     completions: List[float] = field(default_factory=list)  # finish times
@@ -119,6 +141,13 @@ class TenantStats:
     tokens: int = 0                  # tokens emitted (1/req + decode steps)
     decode_iterations: int = 0       # shared decode steps executed
     max_decode_batch: int = 0        # peak requests coalesced per step
+    prefill_chunks: int = 0          # prefill chunk phases executed
+                                     # (0 under monolithic prefill)
+    chunk_interleaved_decodes: int = 0  # decode iterations run while a
+                                     # same-tenant request sat between
+                                     # prefill chunks (SARATHI interleave)
+    fused_groups: int = 0            # decode μTOps this tenant co-issued
+                                     # into a neighbor's prefill group
     me_work: float = 0.0
     ve_work: float = 0.0
     harvested_me_work: float = 0.0   # work done on non-owned MEs
@@ -128,20 +157,29 @@ class TenantStats:
     preemptions: int = 0
 
     def p95(self) -> float:
+        """p95 of end-to-end request latency, in cycles."""
         return percentile(self.latencies, 0.95)
 
     def mean(self) -> float:
+        """Mean end-to-end request latency, in cycles."""
         return _mean(self.latencies)
 
     def ttft_p95(self) -> float:
+        """p95 time-to-first-token, in cycles."""
         return percentile(self.ttft, 0.95)
 
     def tbt_p95(self) -> float:
+        """p95 time-between-tokens, in cycles."""
         return percentile(self.tbt, 0.95)
 
 
 @dataclass
 class SimResult:
+    """Simulation outcome. ``makespan`` is in CYCLES (like every
+    TenantStats series); ``freq_hz`` is the core clock, carried so
+    reporting layers convert to wall time exactly once
+    (:func:`throughput` already returns requests/SECOND)."""
+
     policy: str
     makespan: float              # cycles until every tenant hit N reqs
     tenants: List[TenantStats]
@@ -196,14 +234,18 @@ class _Engine:
 class _TenantRT:
     """Runtime over a tenant's request plan.
 
-    Requests move waiting -> (prefill iteration) -> decoding ->
+    Requests move waiting -> (prefill iteration(s)) -> decoding ->
     (shared decode iterations) -> done. One *iteration* (a phase
     program execution) is in flight at a time per tenant; decode
     iterations coalesce every in-flight decoding request (continuous
-    batching). Closed loop: a new request arrives the instant the
-    previous one completes. Open loop: requests arrive via
-    :meth:`arrive` and the tenant idles between iterations
-    (``in_request`` False)."""
+    batching). Under chunked prefill a request's prefill is a CHAIN of
+    chunk iterations: after each non-final chunk the request parks in
+    ``prefilling`` and, if decodes are live, the tenant yields one
+    decode iteration before the next chunk — so a long prompt no
+    longer head-of-line blocks the tenant's own token cadence. Closed
+    loop: a new request arrives the instant the previous one
+    completes. Open loop: requests arrive via :meth:`arrive` and the
+    tenant idles between iterations (``in_request`` False)."""
 
     def __init__(self, idx: int, spec: TenantSpec, core: NPUCoreConfig,
                  open_loop: bool = False):
@@ -228,9 +270,12 @@ class _TenantRT:
         self.outstanding = 0              # chunks of current step in flight
         self.in_request = False           # an iteration is in flight
         self.waiting: Deque[_Request] = deque()   # arrived, not prefilled
+        self.prefilling: List[_Request] = []      # between prefill chunks
         self.decoding: List[_Request] = []        # mid-generation
         self.active: List[_Request] = []          # served by the iteration
         self.active_kind = ""                     # phase of the iteration
+        self.yield_to_decode = False      # chunk boundary: run one decode
+                                          # iteration before the next chunk
         self.ready_me: List[Chunk] = []
         self.ready_ve: List[Chunk] = []
         self.loop_remaining: Dict[int, int] = {}
@@ -241,7 +286,7 @@ class _TenantRT:
     @property
     def in_flight(self) -> int:
         """Requests admitted but not completed."""
-        n = len(self.waiting) + len(self.decoding)
+        n = len(self.waiting) + len(self.prefilling) + len(self.decoding)
         if self.in_request and self.active_kind != DECODE:
             n += len(self.active)
         return n
@@ -260,14 +305,26 @@ class _TenantRT:
             self._start_iteration(t)
 
     def _start_iteration(self, t: float) -> None:
-        """Pick the tenant's next unit of work: a waiting request's
+        """Pick the tenant's next unit of work: a decode iteration if
+        a prefill chunk just yielded, else the next prefill chunk of
+        the request mid-prefill, else a waiting request's (first)
         prefill, else one shared decode step over every in-flight
-        decoding request (prefill-prioritized continuous batching)."""
-        if self.waiting:
-            req = self.waiting.popleft()
+        decoding request. With monolithic prefill this degenerates to
+        the original prefill-prioritized continuous batching."""
+        if not self.decoding:
+            self.yield_to_decode = False   # nothing to yield to
+        pick_decode = self.decoding and (
+            self.yield_to_decode or not (self.prefilling or self.waiting))
+        if not pick_decode and (self.prefilling or self.waiting):
+            if self.prefilling:
+                req = self.prefilling.pop(0)
+            else:
+                req = self.waiting.popleft()
             self.active = [req]
-            self.active_kind = self.plan.prefill.kind
-            self.cur_program = self.plan.prefill.program
+            phases = self.plan.prefill_phases()
+            ph = phases[min(req.chunks_done, len(phases) - 1)]
+            self.active_kind = ph.kind
+            self.cur_program = ph.program
         elif self.decoding:
             # the step's cost is the largest live context bucket: the
             # batched KV stream is paced by the longest sequence
@@ -276,6 +333,7 @@ class _TenantRT:
             self.active = list(self.decoding)
             self.active_kind = DECODE
             self.cur_program = phase.program
+            self.yield_to_decode = False
         else:
             return
         self.in_request = True
@@ -285,11 +343,17 @@ class _TenantRT:
 
     def _on_iteration_complete(self, t: float) -> None:
         """A phase program finished: emit tokens, advance each served
-        request's phase chain, then start the next iteration."""
+        request's phase chain, then start the next iteration. A
+        non-final prefill chunk emits no token — the request parks in
+        ``prefilling`` and live decodes get one iteration first."""
         if self.active_kind == DECODE:
             self.stats.decode_iterations += 1
             self.stats.max_decode_batch = max(
                 self.stats.max_decode_batch, len(self.active))
+            if self.prefilling:
+                # a same-tenant request is sitting between prefill
+                # chunks: this decode interleaved into its prefill
+                self.stats.chunk_interleaved_decodes += 1
             finished = []
             for req in self.active:
                 req.tokens_done += 1
@@ -303,14 +367,23 @@ class _TenantRT:
                 self._complete_request(req, t)
         else:
             req = self.active[0]
-            self.stats.ttft.append(t - req.arrival)
-            self.stats.tokens += 1
-            req.tokens_done = 1           # prefill emits the first token
-            req.last_token_t = t
-            if req.gen_len > 1 and self.plan.has_decode:
-                self.decoding.append(req)
+            req.chunks_done += 1
+            if self.plan.chunked:
+                self.stats.prefill_chunks += 1
+            if req.chunks_done < self.plan.n_prefill_chunks:
+                # chunk hand-off: prompt not fully ingested, no token
+                self.prefilling.append(req)
+                if self.decoding:
+                    self.yield_to_decode = True
             else:
-                self._complete_request(req, t)
+                self.stats.ttft.append(t - req.arrival)
+                self.stats.tokens += 1
+                req.tokens_done = 1       # prefill emits the first token
+                req.last_token_t = t
+                if req.gen_len > 1 and self.plan.has_decode:
+                    self.decoding.append(req)
+                else:
+                    self._complete_request(req, t)
         self.active = []
         self.in_request = False
         self._start_iteration(t)
@@ -491,6 +564,7 @@ class Simulator:
         rt.ready_me.clear()
         rt.ready_ve.clear()
         rt.waiting.clear()
+        rt.prefilling.clear()
         rt.decoding.clear()
         rt.active = []
         rt.in_request = False

@@ -5,6 +5,12 @@ serve-layer reports, autoscaler hooks): the nearest-rank method,
 ``x[ceil(q * n) - 1]`` on the sorted series. This is the exact index
 arithmetic the seed ``TenantStats.p95`` used, extracted so every layer
 agrees bit-for-bit on what "p95" means.
+
+These helpers are unit-agnostic: they return a value in whatever unit
+the input series carries. By convention the simulator feeds them
+CYCLES and the serve layer feeds them MILLISECONDS — callers must not
+mix series from the two domains (convert with ``1e3 / freq_hz`` at
+the TenantReport boundary, nowhere else).
 """
 from __future__ import annotations
 

@@ -31,7 +31,12 @@ from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
 @dataclass
 class Operator:
-    """One tensor operator in a workload trace (paper §III-G schema)."""
+    """One tensor operator in a workload trace (paper §III-G schema).
+
+    Units: ``me_cycles`` / ``ve_cycles`` are engine cycles of total
+    work on ONE engine (see the module conventions above);
+    ``hbm_bytes`` is bytes moved over HBM; ``out_elems`` is output
+    elements (not bytes)."""
 
     name: str
     me_cycles: float = 0.0
@@ -53,6 +58,9 @@ class Operator:
         return "me"
 
     def scaled(self, factor: float) -> "Operator":
+        """Copy with cycle/byte costs multiplied by ``factor`` (tiling
+        metadata unchanged) — scaling by k is profile-equivalent to
+        repeating the op k times."""
         return Operator(
             self.name,
             me_cycles=self.me_cycles * factor,
@@ -208,6 +216,7 @@ class WorkloadTrace:
         return me_t / t_total, ve_t / t_total
 
     def totals(self) -> Tuple[float, float, float]:
+        """(ME cycles, VE cycles, HBM bytes) summed over the trace."""
         return (
             sum(o.me_cycles for o in self.ops),
             sum(o.ve_cycles for o in self.ops),
@@ -215,7 +224,8 @@ class WorkloadTrace:
         )
 
     def ideal_cycles(self, n_me: int, n_ve: int) -> float:
-        """Lower bound: perfectly parallel + overlapped execution."""
+        """Lower bound in cycles: perfectly parallel + overlapped
+        execution on ``n_me`` MEs / ``n_ve`` VEs."""
         me, ve, hbm = self.totals()
         return max(me / n_me, ve / n_ve, hbm / self.core.hbm_bytes_per_cycle)
 
@@ -246,6 +256,23 @@ class RequestPlan:
     context c uses the smallest bucket >= c. A single-phase workload
     (the seed's fixed-phase traces) is the degenerate plan with
     ``gen_len <= 1`` and no decode entries.
+
+    Prefill may additionally be *chunked* (SARATHI-style): when
+    ``prefill_chunk_tokens > 0`` and the prompt is longer than one
+    chunk, ``prefill_chunks`` holds one partial-context trace per
+    chunk of the prompt. Each chunk ingests up to
+    ``prefill_chunk_tokens`` prompt tokens against the KV written by
+    the chunks before it; only the final chunk emits the first token.
+    The simulator treats each chunk as its own phase, so a tenant's
+    in-flight decode iterations interleave *between* its prefill
+    chunks instead of head-of-line blocking behind the whole prompt.
+    With the knob unset (0), ``prefill_chunks`` is empty and the plan
+    is bit-identical to the monolithic-prefill IR.
+
+    Units: trace costs are engine cycles / HBM bytes (see
+    :class:`Operator`); ``prompt_len`` / ``gen_len`` / ``max_gen`` /
+    ``prefill_chunk_tokens`` are token counts; ``hbm_footprint`` is
+    resident bytes.
     """
 
     name: str
@@ -256,18 +283,38 @@ class RequestPlan:
     max_gen: int = 0             # bucket coverage (>= any sampled gen len)
     bucket_base: int = 512
     hbm_footprint: float = 0.0
+    # SARATHI-style chunked prefill: tokens per chunk (0 = monolithic)
+    prefill_chunk_tokens: int = 0
+    prefill_chunks: List[WorkloadTrace] = field(default_factory=list)
 
     def __post_init__(self) -> None:
         self.decode = sorted(self.decode, key=lambda p: p[0])
         if not self.max_gen:
             self.max_gen = self.gen_len
         if not self.hbm_footprint:
-            traces = [self.prefill] + [t for _, t in self.decode]
+            traces = ([self.prefill] + list(self.prefill_chunks)
+                      + [t for _, t in self.decode])
             self.hbm_footprint = max(t.hbm_footprint for t in traces)
 
     @property
     def has_decode(self) -> bool:
+        """True when the plan carries context-bucketed decode phases."""
         return bool(self.decode)
+
+    @property
+    def chunked(self) -> bool:
+        """True when prefill runs as a chain of chunk phases."""
+        return bool(self.prefill_chunks)
+
+    @property
+    def n_prefill_chunks(self) -> int:
+        """Prefill phases per request (1 when monolithic)."""
+        return len(self.prefill_chunks) or 1
+
+    def prefill_phases(self) -> List[WorkloadTrace]:
+        """The prefill phase chain: the chunk traces in ingestion
+        order, or the single monolithic trace."""
+        return list(self.prefill_chunks) or [self.prefill]
 
     def decode_trace_for(self, context: int) -> Tuple[int, WorkloadTrace]:
         """(bucket, trace) for a decode step at ``context``; clamps to
@@ -289,10 +336,15 @@ class RequestPlan:
         """Flatten into one WorkloadTrace weighted by the default
         generation length — feeds the compile-time (m, v) profile the
         Eq. 1-4 allocator consumes, so a decode-heavy tenant's vNPU
-        split reflects its decode:prefill cycle mix."""
+        split reflects its decode:prefill cycle mix. A chunked plan
+        blends the chunk traces (which carry the real per-chunk KV
+        re-read and fill/drain overhead) instead of the monolithic
+        prefill, so the allocator sees the cost of what will actually
+        execute."""
         tr = WorkloadTrace(name=f"{self.name}:profile",
                            core=self.prefill.core)
-        tr.ops.extend(self.prefill.ops)
+        for ptr in self.prefill_phases():
+            tr.ops.extend(ptr.ops)
         steps = self.decode_steps()
         if steps and self.decode:
             # distribute the default request's steps over its buckets;

@@ -35,8 +35,15 @@ DTYPE = 2  # bf16
 # per-block builders. T = tokens processed this call.
 # ----------------------------------------------------------------------
 def _attention_ops(
-    cfg: ModelConfig, B: int, S: int, T: int, phase: str, core: NPUCoreConfig
+    cfg: ModelConfig, B: int, S: int, T: int, phase: str, core: NPUCoreConfig,
+    kv_prior: int = 0,
 ) -> List[Operator]:
+    """Attention block ops. ``kv_prior`` > 0 makes a prefill call a
+    *chunk*: the S new tokens attend to ``kv_prior`` already-ingested
+    keys (streamed back from HBM) plus themselves. ``kv_prior == 0``
+    is the monolithic prefill and emits bit-identical operators to the
+    pre-chunking builder (the causal 0.5 factor is the kv_prior=0 case
+    of the general chunk fraction)."""
     d, dq, dkv, hd = cfg.d_model, cfg.d_q, cfg.d_kv, cfg.d_head
     H = cfg.n_heads
     ops: List[Operator] = [
@@ -50,12 +57,26 @@ def _attention_ops(
     if cfg.qk_norm:
         ops.append(vector_op("qk_norm", T * (dq + dkv), core, flops_per_elem=4.0))
     if phase == "prefill":
-        # scores: (B*H*S, hd) @ (hd, S) ; causal halves the work
+        # scores: (B*H*S, hd) @ (hd, K) over K = prior + new keys;
+        # causal masking keeps frac of the score matrix (exactly 0.5
+        # for a monolithic prefill, approaching 1.0 for a late chunk
+        # whose rows attend to nearly the whole context)
+        K = kv_prior + S
+        frac = (kv_prior + 0.5 * S) / K
         ops.append(
-            matmul_op("attn_scores", B * H * S, hd, S, core).scaled(0.5)
+            matmul_op("attn_scores", B * H * S, hd, K, core).scaled(frac)
         )
-        ops.append(vector_op("softmax", 0.5 * B * H * S * S, core, flops_per_elem=5.0))
-        ops.append(matmul_op("attn_ctx", B * H * S, S, hd, core).scaled(0.5))
+        ops.append(vector_op("softmax", frac * B * H * S * K, core, flops_per_elem=5.0))
+        ops.append(matmul_op("attn_ctx", B * H * S, K, hd, core).scaled(frac))
+        if kv_prior:
+            # chunked prefill re-reads the earlier chunks' KV from HBM
+            # — the per-chunk overhead that bounds how small a chunk
+            # is worth making
+            ops.append(
+                memory_op(
+                    "kv_chunk_read",
+                    2.0 * B * cfg.n_kv_heads * kv_prior * hd * DTYPE, core)
+            )
     else:
         # decode: stream the KV cache from HBM; MXU sees tiny row counts
         kv_bytes = 2.0 * B * cfg.n_kv_heads * S * hd * DTYPE
@@ -226,16 +247,28 @@ def lm_trace(
     phase: str = "prefill",
     core: NPUCoreConfig = DEFAULT_CORE,
     include_head: bool = True,
+    kv_prior: int = 0,
 ) -> WorkloadTrace:
     """Operator trace of ONE forward pass (one request batch).
 
     phase: "prefill" (T = batch*seq tokens) | "decode" (T = batch
     tokens against a cache of length `seq`).
+
+    ``kv_prior`` (prefill only): tokens of context already ingested by
+    earlier prefill *chunks* — the new ``seq`` tokens attend to the
+    prior KV (streamed from HBM) plus themselves, turning this trace
+    into one SARATHI-style prefill chunk. SSM/recurrent families carry
+    their state in SRAM between chunks, so only attention layers see a
+    kv_prior cost. ``kv_prior=0`` (the default) is the monolithic
+    prefill, bit-identical to the pre-chunking trace.
     """
     assert phase in ("prefill", "decode"), phase
+    assert kv_prior == 0 or phase == "prefill", "kv_prior is prefill-only"
     B, S = batch, seq
     T = B * S if phase == "prefill" else B
-    tr = WorkloadTrace(name=f"{cfg.name}:{phase}:b{B}s{S}", core=core)
+    name = (f"{cfg.name}:{phase}:b{B}s{S}" if not kv_prior
+            else f"{cfg.name}:{phase}:b{B}k{kv_prior}+{S}")
+    tr = WorkloadTrace(name=name, core=core)
 
     d = cfg.d_model
     n_streams = max(cfg.n_codebooks, 1)
@@ -243,7 +276,8 @@ def lm_trace(
         memory_op("embed", hbm_bytes=float(T * n_streams * d * DTYPE),
                   core=core, ve_elems=T * d * n_streams)
     )
-    if cfg.frontend == "vit_stub" and phase == "prefill":
+    if cfg.frontend == "vit_stub" and phase == "prefill" and not kv_prior:
+        # vision patches ride in the first chunk only
         tr.ops.append(
             memory_op("patch_embeds", hbm_bytes=float(B * cfg.n_patches * d * DTYPE),
                       core=core)
@@ -251,7 +285,7 @@ def lm_trace(
 
     for layer in range(cfg.n_layers):
         if cfg.family in ("dense", "moe", "vlm", "audio"):
-            tr.extend(_attention_ops(cfg, B, S, T, phase, core))
+            tr.extend(_attention_ops(cfg, B, S, T, phase, core, kv_prior))
             if cfg.family == "moe":
                 tr.extend(_moe_ops(cfg, T, core))
             else:
@@ -266,7 +300,7 @@ def lm_trace(
                 and cfg.hybrid_attn_every
                 and (layer + 1) % cfg.hybrid_attn_every == 0
             ):
-                tr.extend(_attention_ops(cfg, B, S, T, phase, core))
+                tr.extend(_attention_ops(cfg, B, S, T, phase, core, kv_prior))
                 tr.extend(_dense_mlp_ops(cfg, T, core))
         else:  # pragma: no cover
             raise ValueError(f"unknown family {cfg.family}")
@@ -279,13 +313,15 @@ def lm_trace(
             matmul_op("lm_head", T, d, cfg.vocab_size * n_streams, core)
         )
 
-    # resident footprint: weights + KV/state cache
+    # resident footprint: weights + KV/state cache (a chunk's cache
+    # covers the full context ingested so far, not just its tokens)
+    ctx = kv_prior + S
     kv = 0.0
     if cfg.family in ("dense", "moe", "vlm", "audio"):
-        kv = 2.0 * B * cfg.n_kv_heads * cfg.d_head * S * cfg.n_layers * DTYPE
+        kv = 2.0 * B * cfg.n_kv_heads * cfg.d_head * ctx * cfg.n_layers * DTYPE
     elif cfg.family == "hybrid":
         n_attn = cfg.n_layers // max(cfg.hybrid_attn_every, 1)
-        kv = 2.0 * B * cfg.n_kv_heads * cfg.d_head * S * n_attn * DTYPE
+        kv = 2.0 * B * cfg.n_kv_heads * cfg.d_head * ctx * n_attn * DTYPE
         kv += B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * cfg.n_layers * DTYPE
     tr.hbm_footprint = cfg.param_count() * DTYPE + kv
     return tr
@@ -300,6 +336,7 @@ def request_plan(
     max_gen: int = 0,
     bucket: int = 512,
     include_head: bool = True,
+    prefill_chunk_tokens: int = 0,
 ) -> RequestPlan:
     """Phase-structured generation request: prefill over ``prompt_len``
     tokens (emits token 1) + decode steps against a growing KV cache.
@@ -311,10 +348,30 @@ def request_plan(
     tokens-per-request; per-request lengths (a generation-length
     distribution) are supplied at injection time and may use any
     length up to ``max_gen`` (defaults to ``gen_len``).
+
+    ``prefill_chunk_tokens`` > 0 splits the prefill into SARATHI-style
+    chunk phases of that many prompt tokens (the last chunk takes the
+    remainder and carries the lm_head that emits token 1). Each chunk
+    attends to the KV of the chunks before it, so chunk traces differ
+    per position — the compiler still builds each one exactly once per
+    (model shape, chunk size, ISA) through the shared ProgramCache.
+    Prompts no longer than one chunk stay monolithic.
     """
     max_gen = max(max_gen, gen_len, 1)
     prefill = lm_trace(cfg, batch, prompt_len, "prefill", core,
                        include_head=include_head)
+    chunk = int(prefill_chunk_tokens)
+    chunks = []
+    if chunk > 0 and prompt_len > chunk:
+        start = 0
+        while start < prompt_len:
+            tokens = min(chunk, prompt_len - start)
+            last_chunk = start + tokens >= prompt_len
+            chunks.append(
+                lm_trace(cfg, batch, tokens, "prefill", core,
+                         include_head=include_head and last_chunk,
+                         kv_prior=start))
+            start += tokens
     decode = []
     if max_gen > 1:
         ctx = decode_bucket(prompt_len + 2, bucket)
@@ -329,6 +386,8 @@ def request_plan(
         name=f"{cfg.name}:gen:b{batch}p{prompt_len}g{gen_len}",
         prefill=prefill, decode=decode, prompt_len=prompt_len,
         gen_len=gen_len, max_gen=max_gen, bucket_base=bucket,
+        prefill_chunk_tokens=chunk if chunks else 0,
+        prefill_chunks=chunks,
     )
 
 

@@ -85,7 +85,11 @@ class GenLenDistribution:
 @dataclass
 class TenantHandle:
     """A registered tenant, tracked across the cluster and (when
-    serving) the live simulation."""
+    serving) the live simulation.
+
+    Units: ``eu_budget`` is execution units (engines); every ``slo_*``
+    field is milliseconds of simulated time; ``attached_at`` is cycles
+    (simulator domain)."""
 
     name: str
     trace: WorkloadTrace
@@ -110,15 +114,25 @@ class TenantHandle:
 
 @dataclass
 class TenantReport:
+    """Operator-facing per-tenant report.
+
+    Unit convention (the single documented boundary): the simulator
+    domain is CYCLES (:class:`~repro.core.simulator.TenantStats`);
+    every ``*_ms`` field here is MILLISECONDS, converted exactly once
+    in ``_tenant_report`` via ``1e3 / NPUCoreConfig.freq_hz``;
+    ``throughput_rps`` is requests per SECOND of simulated time;
+    ``requests_done`` / ``queued`` / ``tokens_done`` are counts. SLO
+    verdicts are None when no SLO was set or no samples exist yet."""
+
     name: str
     n_me: int
     n_ve: int
-    p95_ms: float
+    p95_ms: float                # e2e request latency tail (arrival->done)
     mean_ms: float
     throughput_rps: float
     slo_ok: Optional[bool]
-    harvested_me_ms: float
-    blocked_ms: float
+    harvested_me_ms: float       # ME work executed on non-owned engines
+    blocked_ms: float            # stall while reclaiming harvested engines
     requests_done: int = 0
     queued: int = 0              # open loop: requests admitted, not done
     # ---- phase-aware serving (single-phase tenants: TTFT == e2e
@@ -180,10 +194,13 @@ class NPUCluster:
 
     @property
     def policy_name(self) -> str:
+        """Registry name of the cluster's scheduler policy."""
         return self.policy_cls.name or self.policy_cls.__name__
 
     @property
     def mapping(self) -> str:
+        """vNPU mapping scheme the policy implies: ``"spatial"``
+        (engines owned per tenant) or ``"temporal"`` (shared)."""
         return "spatial" if self.policy_cls.spatial else "temporal"
 
     def compile(self, trace: WorkloadTrace):
@@ -238,14 +255,25 @@ class NPUCluster:
         prompt_len: int = 512,
         gen_lens: Union[int, GenLenDistribution] = 64,
         batch: int = 1, eu_budget: int = 4,
-        bucket: int = 512, **kw,
+        bucket: int = 512, prefill_chunk_tokens: int = 0, **kw,
     ) -> TenantHandle:
         """Register an LLM serving tenant with a phase-structured
         request lifecycle: prefill over ``prompt_len`` tokens, then a
         generation-length-distributed decode chain with context-
         bucketed cost. ``gen_lens`` is either a fixed token count or a
         :class:`GenLenDistribution` sampled per request. The allocator
-        profile reflects the full prefill+decode cycle mix."""
+        profile reflects the full prefill+decode cycle mix.
+
+        ``prefill_chunk_tokens`` > 0 chunks the prefill (SARATHI
+        style): prompts longer than one chunk run as a chain of chunk
+        phases, and the tenant's in-flight decode iterations
+        interleave between its own chunks instead of waiting out the
+        whole prompt. 0 (the default) keeps monolithic prefill —
+        scheduling is then bit-identical to the pre-chunking engine.
+
+        Units: ``prompt_len`` / ``gen_lens`` / ``bucket`` /
+        ``prefill_chunk_tokens`` are token counts; ``eu_budget`` is
+        execution units (ME+VE engines)."""
         if isinstance(gen_lens, GenLenDistribution):
             dist: Optional[GenLenDistribution] = gen_lens
             gen_len = max(int(round(gen_lens.mean)), 1)
@@ -255,7 +283,8 @@ class NPUCluster:
             gen_len = max(int(gen_lens), 1)
             max_gen = gen_len
         plan = request_plan(cfg, batch, prompt_len, gen_len,
-                            core=self.core, max_gen=max_gen, bucket=bucket)
+                            core=self.core, max_gen=max_gen, bucket=bucket,
+                            prefill_chunk_tokens=prefill_chunk_tokens)
         return self.register(name, plan.profile_trace(), eu_budget,
                              plan=plan, gen_lens=dist, **kw)
 
@@ -295,6 +324,9 @@ class NPUCluster:
     def register_model(self, cfg: ModelConfig, phase: str = "prefill",
                        batch: int = 8, seq: int = 512, eu_budget: int = 4,
                        **kw) -> TenantHandle:
+        """Register a fixed-phase tenant from a model config: one
+        ``lm_trace`` replayed per request (no decode chain). ``seq``
+        is tokens; ``eu_budget`` is execution units."""
         trace = lm_trace(cfg, batch, seq, phase, self.core)
         return self.register(cfg.name, trace, eu_budget, **kw)
 
@@ -310,6 +342,8 @@ class NPUCluster:
         return h
 
     def deregister(self, handle: TenantHandle) -> None:
+        """Destroy the tenant's vNPU (engines + memory segments free
+        immediately) and drop it from the cluster roster."""
         if handle.vnpu is not None:
             self.manager.destroy(handle.vnpu)
         self.tenants.remove(handle)
@@ -420,8 +454,11 @@ def reports_from_result(tenants: Sequence[TenantHandle], res: SimResult,
 def _tenant_report(h: TenantHandle, st, ms: float,
                    throughput_rps: float, queued: int = 0) -> TenantReport:
     """One TenantReport from a handle + its simulator stats — the
-    single place where SLO verdicts (e2e / TTFT / TBT) are computed,
-    shared by the open- and closed-loop reporters."""
+    single place where cycles become milliseconds (``ms`` is the
+    cycles->ms factor, ``1e3 / freq_hz``) and where SLO verdicts
+    (e2e / TTFT / TBT) are computed, shared by the open- and
+    closed-loop reporters. Every latency series in ``st`` is in
+    cycles; every latency field emitted here is in ms."""
     p95 = st.p95() * ms
     ttft_p95 = st.ttft_p95() * ms
     tbt_p95 = st.tbt_p95() * ms
@@ -432,7 +469,10 @@ def _tenant_report(h: TenantHandle, st, ms: float,
         p95_ms=p95,
         mean_ms=st.mean() * ms,
         throughput_rps=throughput_rps,
-        slo_ok=(p95 <= h.slo_p95_ms) if h.slo_p95_ms else None,
+        # an SLO verdict needs samples: a tenant with zero completions
+        # must report None, not a vacuous pass on p95 == 0.0
+        slo_ok=((p95 <= h.slo_p95_ms)
+                if h.slo_p95_ms and st.latencies else None),
         harvested_me_ms=st.harvested_me_work * ms,
         blocked_ms=st.reclaim_blocked * ms,
         requests_done=st.requests_done,
@@ -508,9 +548,12 @@ class ServingSession:
     # ------------------------------------------------------------------
     @property
     def now_s(self) -> float:
+        """Current simulated time in SECONDS (the simulator's clock is
+        cycles; the session API is seconds everywhere)."""
         return self.sim.now / self.cluster.core.freq_hz
 
     def _cycles(self, t_s: float) -> float:
+        """Seconds (session API) -> cycles (simulator domain)."""
         return t_s * self.cluster.core.freq_hz
 
     def _attach(self, handle: TenantHandle) -> None:
@@ -535,11 +578,18 @@ class ServingSession:
     # ---------------- tenant lifecycle (all legal mid-run) ----------------
     def register(self, name: str, trace: WorkloadTrace, eu_budget: int,
                  **kw) -> TenantHandle:
+        """Register a tenant on the cluster AND attach it to the live
+        simulation (legal mid-run). ``eu_budget`` is execution units
+        (engines); SLO kwargs (``slo_p95_ms`` etc.) are milliseconds.
+        See :meth:`NPUCluster.register`."""
         h = self.cluster.register(name, trace, eu_budget, **kw)
         self._attach(h)
         return h
 
     def register_model(self, cfg: ModelConfig, **kw) -> TenantHandle:
+        """Register a fixed-phase model tenant mid-run (trace built
+        from ``cfg``; see :meth:`NPUCluster.register_model` for the
+        batch/seq token knobs)."""
         h = self.cluster.register_model(cfg, **kw)
         self._attach(h)
         return h
@@ -652,7 +702,11 @@ class ServingSession:
     def report(self, handle: Optional[TenantHandle] = None
                ) -> List[TenantReport]:
         """Per-request latency accounting for live (and, while their
-        handles are kept, deregistered) tenants."""
+        handles are kept, deregistered) tenants. Latencies are
+        reported in milliseconds (see :class:`TenantReport` for the
+        unit convention); throughput is requests per second of
+        simulated time since the tenant attached (the 1-cycle clamp
+        only guards the no-time-elapsed division)."""
         if handle is not None:
             handles = [handle]
         else:  # bare-cluster registrations have no runtime to report on
@@ -669,6 +723,8 @@ class ServingSession:
         return out
 
     def latencies_ms(self, handle: TenantHandle) -> List[float]:
+        """Completed requests' end-to-end latencies in milliseconds
+        (arrival -> completion, queueing included)."""
         ms = 1e3 / self.cluster.core.freq_hz
         return [x * ms for x in self._rt(handle).stats.latencies]
 

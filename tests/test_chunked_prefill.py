@@ -1,0 +1,311 @@
+"""Chunked prefill (SARATHI-style): chunk trace construction, the
+per-chunk program cache, chunk phase chains with decode interleave in
+the simulator, fused prefill+decode issue groups, and the guarantee
+that an UNSET ``prefill_chunk_tokens`` stays bit-identical to the
+monolithic-prefill engine."""
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.compiler import ProgramCache, compile_request_plan
+from repro.core.neuisa import FusedIssueGroup, form_fused_group
+from repro.core.simulator import Simulator
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.npu.trace import lm_trace, request_plan
+from repro.serve.session import (GenLenDistribution, NPUCluster,
+                                 PoissonArrivals, ServingSession,
+                                 run_closed_loop)
+
+CFG = SMOKES["qwen2-0.5b"]
+
+
+def _session(policy="neu10"):
+    return ServingSession(NPUCluster(policy=policy))
+
+
+# ----------------------------------------------------------------------
+# trace / plan construction
+# ----------------------------------------------------------------------
+def test_chunked_plan_construction():
+    plan = request_plan(CFG, batch=1, prompt_len=2048, gen_len=8,
+                        prefill_chunk_tokens=256)
+    assert plan.chunked and plan.prefill_chunk_tokens == 256
+    assert plan.n_prefill_chunks == 8
+    assert len(plan.prefill_phases()) == 8
+    # only the final chunk carries the lm_head (emits token 1)
+    for tr in plan.prefill_chunks[:-1]:
+        assert all(op.name != "lm_head" for op in tr.ops)
+    assert plan.prefill_chunks[-1].ops[-1].name == "lm_head"
+    # chunks after the first re-read prior KV from HBM
+    assert all(op.name != "kv_chunk_read" for op in plan.prefill_chunks[0].ops)
+    for tr in plan.prefill_chunks[1:]:
+        assert any(op.name == "kv_chunk_read" for op in tr.ops)
+    # chunk names encode (batch, prior context, tokens) for the cache
+    assert ":prefill:b1s256" in plan.prefill_chunks[0].name
+    assert ":prefill:b1k256+256" in plan.prefill_chunks[1].name
+
+
+def test_uneven_prompt_takes_remainder_chunk():
+    plan = request_plan(CFG, batch=1, prompt_len=600, gen_len=4,
+                        prefill_chunk_tokens=256)
+    assert plan.n_prefill_chunks == 3            # 256 + 256 + 88
+    assert ":b1k512+88" in plan.prefill_chunks[-1].name
+
+
+def test_short_prompt_stays_monolithic():
+    plan = request_plan(CFG, batch=1, prompt_len=128, gen_len=8,
+                        prefill_chunk_tokens=256)
+    assert not plan.chunked
+    assert plan.prefill_chunk_tokens == 0
+    assert plan.prefill_phases() == [plan.prefill]
+
+
+def test_unset_knob_is_bit_identical_plan():
+    """prefill_chunk_tokens=0 must produce exactly the pre-chunking
+    plan — same prefill ops, same decode buckets, no chunk state."""
+    a = request_plan(CFG, batch=1, prompt_len=512, gen_len=16)
+    b = request_plan(CFG, batch=1, prompt_len=512, gen_len=16,
+                     prefill_chunk_tokens=0)
+    assert not a.chunked and not b.chunked
+    assert a.prefill.name == b.prefill.name
+    assert [(o.name, o.me_cycles, o.ve_cycles, o.hbm_bytes, o.n_tiles)
+            for o in a.prefill.ops] == \
+           [(o.name, o.me_cycles, o.ve_cycles, o.hbm_bytes, o.n_tiles)
+            for o in b.prefill.ops]
+    assert [c for c, _ in a.decode] == [c for c, _ in b.decode]
+
+
+def test_chunk_work_conserves_compute_and_pays_kv_overhead():
+    """Chunking re-tiles the causal attention: total ME/VE work stays
+    within a few percent of monolithic, while HBM grows (per-chunk KV
+    re-read + weight re-streaming) — the throughput tax the benchmark
+    bounds."""
+    mono = request_plan(CFG, batch=1, prompt_len=2048, gen_len=2)
+    chk = request_plan(CFG, batch=1, prompt_len=2048, gen_len=2,
+                       prefill_chunk_tokens=256)
+    me_m, ve_m, hbm_m = mono.prefill.totals()
+    me_c = sum(t.totals()[0] for t in chk.prefill_chunks)
+    ve_c = sum(t.totals()[1] for t in chk.prefill_chunks)
+    hbm_c = sum(t.totals()[2] for t in chk.prefill_chunks)
+    assert me_m <= me_c <= 1.05 * me_m
+    assert ve_m <= ve_c <= 1.05 * ve_m
+    assert hbm_c > hbm_m
+
+
+def test_profile_trace_blends_chunks():
+    """The Eq. 1-4 allocator profile of a chunked plan reflects the
+    chunk traces (what actually executes), staying close to the
+    monolithic compute mix."""
+    mono = request_plan(CFG, batch=1, prompt_len=2048, gen_len=8)
+    chk = request_plan(CFG, batch=1, prompt_len=2048, gen_len=8,
+                       prefill_chunk_tokens=256)
+    m0, v0 = mono.profile_trace().profile_mv()
+    m1, v1 = chk.profile_trace().profile_mv()
+    assert m1 == pytest.approx(m0, rel=0.1)
+    assert v1 == pytest.approx(v0, rel=0.1)
+
+
+# ----------------------------------------------------------------------
+# compiler: chunk programs through the shared cache
+# ----------------------------------------------------------------------
+def test_compile_chunked_plan_once_per_chunk_position():
+    cache = ProgramCache()
+    plan = request_plan(CFG, batch=1, prompt_len=1024, gen_len=8,
+                        prefill_chunk_tokens=256)
+    c1 = compile_request_plan(plan, DEFAULT_CORE, isa="neuisa", cache=cache)
+    assert c1.chunked and c1.n_prefill_chunks == 4
+    assert [ph.kind for ph in c1.prefill_phases()] == ["prefill"] * 4
+    assert [ph.context for ph in c1.prefill_chunks] == [256, 512, 768, 1024]
+    assert c1.prefill is c1.prefill_chunks[0]
+    misses = cache.misses
+    assert misses == 4 + len(plan.decode)
+    # a second tenant with the same shape + chunk size compiles NOTHING
+    c2 = compile_request_plan(plan, DEFAULT_CORE, isa="neuisa", cache=cache)
+    assert cache.misses == misses
+    for a, b in zip(c1.prefill_chunks, c2.prefill_chunks):
+        assert a.program is b.program
+    # a different chunk size is a different program set
+    plan2 = request_plan(CFG, batch=1, prompt_len=1024, gen_len=8,
+                         prefill_chunk_tokens=512)
+    compile_request_plan(plan2, DEFAULT_CORE, isa="neuisa", cache=cache)
+    assert cache.misses > misses
+
+
+def test_unchunked_compiled_plan_unchanged():
+    plan = request_plan(CFG, batch=1, prompt_len=512, gen_len=8)
+    c = compile_request_plan(plan, DEFAULT_CORE, isa="neuisa")
+    assert not c.chunked
+    assert c.n_prefill_chunks == 1
+    assert c.prefill_phases() == [c.prefill]
+
+
+# ----------------------------------------------------------------------
+# simulator: chunk phase chains + same-tenant decode interleave
+# ----------------------------------------------------------------------
+def _chunked_tenant(sess, gen=8, chunk=256, prompt=1024, name="g"):
+    return sess.register_generative(name, CFG, prompt_len=prompt,
+                                    gen_lens=gen, eu_budget=4,
+                                    prefill_chunk_tokens=chunk)
+
+
+def test_chunked_token_accounting_matches_monolithic():
+    """Chunking changes WHEN work runs, not what a request produces:
+    same requests, same tokens, same TTFT/TBT sample counts."""
+    outs = []
+    for chunk in (0, 256):
+        sess = _session()
+        h = _chunked_tenant(sess, gen=8, chunk=chunk)
+        sess.submit(h, at_s=0.0)
+        sess.drain()
+        st = sess.sim.tenants[h.sim_idx].stats
+        outs.append((st.requests_done, st.tokens, len(st.ttft), len(st.tbt),
+                     st.decode_iterations))
+        # the chunk counter names CHUNK phases: monolithic counts none
+        assert st.prefill_chunks == (0 if chunk == 0 else 4)
+    assert outs[0] == outs[1]
+
+
+def test_decode_iteration_between_prefill_chunks():
+    """THE tentpole property: with one request decoding and another
+    mid-prefill, a decode iteration executes between two prefill
+    chunks of the same tenant. The iteration log must show the
+    pattern prefill-chunk -> decode -> prefill-chunk."""
+    sess = _session()
+    h = _chunked_tenant(sess, gen=16, chunk=256, prompt=1024)
+    sim = sess.sim
+    rt = sim.tenants[h.sim_idx]
+    log = []
+    orig = rt._start_iteration
+
+    def spy(t):
+        orig(t)
+        if rt.in_request:
+            log.append(rt.active_kind)
+
+    rt._start_iteration = spy
+    sess.submit(h, at_s=0.0)          # request A: prefill + 15 decodes
+    sess.submit(h, at_s=0.00002)      # request B arrives mid-A-decode
+    sess.drain()
+    st = rt.stats
+    assert st.requests_done == 2 and st.tokens == 32
+    assert st.chunk_interleaved_decodes >= 1
+    # find a decode sandwiched between two prefill chunk iterations
+    assert any(log[i] == "prefill" and log[i + 1] == "decode"
+               and log[i + 2] == "prefill"
+               for i in range(len(log) - 2)), log
+
+
+def test_monolithic_run_never_interleaves():
+    sess = _session()
+    h = _chunked_tenant(sess, gen=16, chunk=0)
+    sess.submit(h, at_s=0.0)
+    sess.submit(h, at_s=0.00002)
+    sess.drain()
+    st = sess.sim.tenants[h.sim_idx].stats
+    assert st.chunk_interleaved_decodes == 0
+    assert st.requests_done == 2
+
+
+def test_chunked_closed_loop_and_open_loop_agree_on_tokens():
+    cluster = NPUCluster(policy="neu10")
+    cluster.register_generative("g", CFG, prompt_len=1024, gen_lens=8,
+                                eu_budget=4, prefill_chunk_tokens=256)
+    res, reports = run_closed_loop(cluster, n_requests=3)
+    st = res.tenants[0]
+    assert st.requests_done >= 3
+    assert st.tokens == st.requests_done * 8
+    assert st.prefill_chunks == st.requests_done * 4
+    assert reports[0].ttft_p95_ms > 0
+
+
+def test_chunked_determinism():
+    def run_once():
+        sess = _session()
+        h = _chunked_tenant(sess, gen=12, chunk=256)
+        sess.submit_arrivals(h, PoissonArrivals(rate_rps=4000.0, n=8, seed=3))
+        sess.drain()
+        st = sess.sim.tenants[h.sim_idx].stats
+        return (st.latencies, st.ttft, st.tbt, st.tokens,
+                st.chunk_interleaved_decodes, st.prefill_chunks)
+
+    assert run_once() == run_once()
+
+
+def test_chunked_tenant_removable_mid_prefill():
+    """Deregistering a tenant with a request parked between chunks
+    must drop it cleanly (no orphaned iteration state)."""
+    sess = _session()
+    h = _chunked_tenant(sess, gen=8, chunk=256)
+    sess.submit(h, at_s=0.0)
+    sess.submit(h, at_s=0.0)
+    sess.run_until(1e-5)              # somewhere mid-chain
+    sess.deregister(h)
+    assert sess.drain() >= 0.0        # no deadlock, no leftover work
+
+
+# ----------------------------------------------------------------------
+# fused prefill+decode issue groups (Fig. 6)
+# ----------------------------------------------------------------------
+def test_form_fused_group_rules():
+    g = form_fused_group(0, "qkv_proj", [
+        (0, "attn_decode", "decode"),   # same tenant: never fuses
+        (1, "attn_decode", "decode"),   # fuses
+        (2, "softmax", "prefill"),      # wrong phase: never fuses
+        (3, "attn_decode", "decode"),   # over max_ve
+    ], max_ve=1)
+    assert isinstance(g, FusedIssueGroup)
+    assert g.fused and g.ve_members == [(1, "attn_decode")]
+    empty = form_fused_group(0, "qkv_proj", [(0, "x", "decode")])
+    assert not empty.fused
+
+
+def test_neu10_forms_fused_groups_under_colocation():
+    """A decode-heavy tenant next to a prefill-heavy tenant under
+    neu10 co-issues decode VE μTOps into the neighbor's prefill ME
+    window; the baselines (no fuse attr path) never set the flag."""
+    sess = _session("neu10")
+    chat = sess.register_generative(
+        "chat", CFG, prompt_len=128,
+        gen_lens=GenLenDistribution(mean=24.0, max_len=96, seed=11),
+        eu_budget=4)
+    doc = sess.register_generative("doc", CFG, prompt_len=2048,
+                                   gen_lens=2, eu_budget=4,
+                                   prefill_chunk_tokens=256)
+    sess.submit_arrivals(chat, PoissonArrivals(rate_rps=30_000.0, n=12,
+                                               seed=1))
+    sess.submit_arrivals(doc, PoissonArrivals(rate_rps=4_000.0, n=4, seed=2))
+    sess.drain()
+    assert sess.sim.tenants[chat.sim_idx].stats.fused_groups > 0
+    # the policy keeps the recent groups inspectable: doc's prefill
+    # MEs anchor, chat's decode VE μTOps ride
+    recent = sess.sim.policy_obj.recent_fused
+    assert recent and all(g.fused for g in recent)
+    assert any(g.me_tenant == doc.sim_idx
+               and (chat.sim_idx, "attn_decode") in g.ve_members
+               for g in recent), list(recent)[:4]
+
+
+def test_v10_pmt_never_fuse():
+    for policy in ("pmt", "v10"):
+        sess = _session(policy)
+        chat = sess.register_generative(
+            "chat", CFG, prompt_len=128, gen_lens=8, eu_budget=4)
+        doc = sess.register_generative("doc", CFG, prompt_len=1024,
+                                       gen_lens=2, eu_budget=4,
+                                       prefill_chunk_tokens=256)
+        sess.submit_arrivals(chat, PoissonArrivals(rate_rps=20_000.0, n=6,
+                                                   seed=1))
+        sess.submit_arrivals(doc, PoissonArrivals(rate_rps=4_000.0, n=3,
+                                                  seed=2))
+        sess.drain()
+        for h in (chat, doc):
+            assert sess.sim.tenants[h.sim_idx].stats.fused_groups == 0
+
+
+# ----------------------------------------------------------------------
+# guards
+# ----------------------------------------------------------------------
+def test_chunked_misuse_guards():
+    with pytest.raises(AssertionError):
+        lm_trace(CFG, 1, 512, "decode", kv_prior=256)   # decode has no chunks
+    sim = Simulator((), policy="neu10")
+    sim.run_until(100.0)                                # empty run still fine

@@ -1,0 +1,47 @@
+"""Docs hygiene: the docs/ tree exists and every relative link in
+README.md / docs/**.md resolves (the same check CI's docs job runs,
+via tools/check_links.py)."""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_links  # noqa: E402
+
+
+def test_docs_tree_exists():
+    for name in ("architecture.md", "scheduling.md", "benchmarks.md"):
+        assert (REPO / "docs" / name).is_file(), f"docs/{name} missing"
+
+
+def test_readme_and_docs_links_resolve():
+    files = check_links.default_files(REPO)
+    assert any(f.name == "README.md" for f in files)
+    assert sum(f.parent.name == "docs" for f in files) >= 3
+    errors = []
+    for f in files:
+        errors.extend(check_links.check_file(f, REPO))
+    assert not errors, "\n".join(errors)
+
+
+def test_docs_cover_every_benchmark_suite():
+    """docs/benchmarks.md must document every suite registered in
+    benchmarks/run.py (so new figures can't ship undocumented)."""
+    sys.path.insert(0, str(REPO))
+    from benchmarks.run import SUITES
+
+    text = (REPO / "docs" / "benchmarks.md").read_text(encoding="utf-8")
+    for key, mod in SUITES.items():
+        mod_file = Path(mod.__file__).name
+        assert mod_file[:-3] in text, (
+            f"docs/benchmarks.md does not mention {mod_file}")
+
+
+def test_checker_flags_broken_link(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [missing](no/such/file.md) and "
+                   "[ok](bad.md) and [web](https://x.invalid/y)\n",
+                   encoding="utf-8")
+    errors = check_links.check_file(bad, tmp_path)
+    assert len(errors) == 1 and "no/such/file.md" in errors[0]

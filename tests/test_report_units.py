@@ -1,0 +1,96 @@
+"""Unit-convention regression: the simulator domain is CYCLES, the
+TenantReport domain is MILLISECONDS (and requests/second), and the
+conversion happens exactly once at the report boundary with
+``1e3 / NPUCoreConfig.freq_hz``. These tests pin the reported numbers
+for a tiny fixed trace so any future cycles/ms (or cycles/timestep)
+mixup shifts a hard-coded golden, not just a ratio."""
+import pytest
+
+from repro.npu.cost_model import Operator, WorkloadTrace
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.serve.session import NPUCluster, ServingSession
+
+MS = 1e3 / DEFAULT_CORE.freq_hz          # the one sanctioned factor
+
+
+def _tiny_session():
+    """3 back-to-back requests of a 2-op trace on a lone neu10 tenant
+    — every event lands at a deterministic cycle count."""
+    tr = WorkloadTrace("tiny", [
+        Operator("mm", me_cycles=10_000.0, ve_cycles=2_000.0, n_tiles=2),
+        Operator("act", ve_cycles=4_000.0),
+    ], core=DEFAULT_CORE)
+    sess = ServingSession(NPUCluster(policy="neu10"))
+    h = sess.register("tiny", tr, eu_budget=4, slo_p95_ms=1.0)
+    for at in (0.0, 1e-6, 3e-6):
+        sess.submit(h, at_s=at)
+    sess.drain()
+    return sess, h
+
+
+def test_simulator_series_are_cycles():
+    sess, h = _tiny_session()
+    st = sess.sim.tenants[h.sim_idx].stats
+    # pinned cycle-domain goldens for the tiny fixed trace
+    assert st.latencies == [6000.0, 10950.0, 14850.0]
+    assert st.ttft == st.latencies           # single-phase: TTFT == e2e
+    assert st.tbt == []
+    assert sess.sim.now == 18000.0           # cycles, not seconds/steps
+
+
+def test_report_is_milliseconds_and_rps():
+    sess, h = _tiny_session()
+    r = sess.report(h)[0]
+    # pinned ms-domain goldens: cycles * 1e3 / 1.05 GHz
+    assert r.p95_ms == pytest.approx(14850.0 * MS, rel=1e-12)
+    assert r.p95_ms == pytest.approx(0.014142857142857143, rel=1e-12)
+    assert r.mean_ms == pytest.approx(0.010095238095238095, rel=1e-12)
+    assert r.ttft_p95_ms == pytest.approx(r.p95_ms, rel=1e-12)
+    assert r.tbt_p95_ms == 0.0
+    # throughput: 3 requests over 18000 cycles of simulated time
+    assert r.throughput_rps == pytest.approx(
+        3 / (18000.0 / DEFAULT_CORE.freq_hz), rel=1e-12)
+    assert r.throughput_rps == pytest.approx(175000.0, rel=1e-12)
+    assert r.slo_ok is True                  # 0.0141 ms <= 1.0 ms
+    assert sess.latencies_ms(h) == pytest.approx(
+        [c * MS for c in (6000.0, 10950.0, 14850.0)], rel=1e-12)
+
+
+def test_report_matches_stats_via_single_factor():
+    """TenantReport must be TenantStats scaled by exactly 1e3/freq_hz
+    — no second conversion path may exist."""
+    sess, h = _tiny_session()
+    st = sess.sim.tenants[h.sim_idx].stats
+    r = sess.report(h)[0]
+    assert r.p95_ms == st.p95() * MS
+    assert r.mean_ms == st.mean() * MS
+    assert r.ttft_p95_ms == st.ttft_p95() * MS
+    assert r.harvested_me_ms == st.harvested_me_work * MS
+    assert r.blocked_ms == st.reclaim_blocked * MS
+
+
+def test_generative_latency_decomposition_in_one_unit():
+    """For a lone generative request, e2e == TTFT + sum(TBT) — only
+    true when all three series share one unit (cycles)."""
+    from repro.configs import SMOKES
+
+    sess = ServingSession(NPUCluster(policy="neu10"))
+    h = sess.register_generative("g", SMOKES["qwen2-0.5b"], prompt_len=1024,
+                                 gen_lens=8, eu_budget=4,
+                                 prefill_chunk_tokens=256)
+    sess.submit(h, at_s=0.0)
+    sess.drain()
+    st = sess.sim.tenants[h.sim_idx].stats
+    assert st.latencies[0] == pytest.approx(st.ttft[0] + sum(st.tbt))
+
+
+def test_no_samples_means_no_slo_verdict():
+    """A tenant with an SLO but zero completions must report None (not
+    a vacuous pass from p95 == 0.0)."""
+    tr = WorkloadTrace("idle", [Operator("mm", me_cycles=1000.0)],
+                       core=DEFAULT_CORE)
+    sess = ServingSession(NPUCluster(policy="neu10"))
+    h = sess.register("idle", tr, eu_budget=2, slo_p95_ms=1.0)
+    r = sess.report(h)[0]
+    assert r.slo_ok is None
+    assert r.p95_ms == 0.0 and r.throughput_rps == 0.0

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Relative-link checker for the repo's Markdown docs.
+
+Scans ``README.md`` and ``docs/**/*.md`` (or explicit paths given on
+the command line) for inline Markdown links/images ``[text](target)``
+and fails if a *relative* target does not exist on disk. External
+targets (``http(s)://``, ``mailto:``) and pure in-page anchors
+(``#section``) are skipped; ``path#anchor`` checks only the path part.
+
+Used by the CI docs-and-hygiene job and by ``tests/test_docs.py``, so
+a broken cross-reference fails locally before it fails in CI.
+
+    python tools/check_links.py            # default file set
+    python tools/check_links.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List, Tuple
+
+# inline links [text](target) and images ![alt](target); stops at the
+# first unescaped ')' — good enough for the plain links our docs use
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_links(md_path: Path) -> Iterable[Tuple[int, str]]:
+    """(line number, raw target) for every inline link in the file."""
+    in_code = False
+    for lineno, line in enumerate(
+            md_path.read_text(encoding="utf-8").splitlines(), start=1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in _LINK.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(md_path: Path, repo_root: Path) -> List[str]:
+    """Broken-link error strings for one Markdown file."""
+    errors = []
+    for lineno, target in iter_links(md_path):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        path_part = target.split("#", 1)[0]
+        if not path_part:
+            continue
+        if path_part.startswith("/"):
+            resolved = repo_root / path_part.lstrip("/")
+        else:
+            resolved = md_path.parent / path_part
+        if not resolved.exists():
+            errors.append(
+                f"{md_path.relative_to(repo_root)}:{lineno}: "
+                f"broken relative link -> {target}")
+    return errors
+
+
+def default_files(repo_root: Path) -> List[Path]:
+    files = []
+    readme = repo_root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files.extend(sorted((repo_root / "docs").rglob("*.md")))
+    return files
+
+
+def main(argv: List[str]) -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    files = ([Path(a).resolve() for a in argv]
+             if argv else default_files(repo_root))
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    errors: List[str] = []
+    n_links = 0
+    for f in files:
+        n_links += sum(1 for _ in iter_links(f))
+        errors.extend(check_file(f, repo_root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {n_links} links, "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
