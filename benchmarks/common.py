@@ -29,6 +29,7 @@ def run_pair(
     n_requests: int = 6,
     hbm_scale: float = 1.0,
     me_ve: Tuple[int, int] = (2, 2),
+    fast_path: bool = True,
 ) -> SimResult:
     """Paper §V-A setup: two vNPUs of 2ME/2VE on a 4ME/4VE core,
     SRAM/HBM split evenly. The policy (any registry entry) picks the
@@ -43,7 +44,7 @@ def run_pair(
             VNPUConfig(*me_ve, hbm_bytes=core.hbm_bytes // 2,
                        sram_bytes=core.sram_bytes // 2))
     res, _ = run_closed_loop(cluster, n_requests=n_requests,
-                             hbm_scale=hbm_scale)
+                             hbm_scale=hbm_scale, fast_path=fast_path)
     return res
 
 

@@ -1,8 +1,17 @@
 """Paper Fig. 25: Neu10 throughput improvement over V10 as the core
 grows (2ME/2VE .. 8ME/8VE, split evenly between the two vNPUs).
-Paper claim: more MEs/VEs -> more benefit from μTOp scheduling."""
+Paper claim: more MEs/VEs -> more benefit from μTOp scheduling.
+
+Also carries the simulator fast-path micro-benchmark: the largest
+sweep (8ME/8VE, the heaviest event load) re-runs with
+``fast_path=False`` (reference implementations: unmemoized dispatch
+durations, engine-scan HBM pressure, reference neu10 schedule pass)
+vs the default fast path, asserting the SimResults are IDENTICAL and
+the wall-clock speedup is >= 1.3x (min-of-N timings to reject
+machine noise)."""
 from __future__ import annotations
 
+import time
 from typing import List
 
 from benchmarks.common import BenchRow, geomean, run_pair, timed
@@ -10,6 +19,36 @@ from repro.npu.hw_config import NPUCoreConfig
 
 PAIRS = [("ENet", "TFMR"), ("RNRS", "RtNt"), ("BERT", "ENet")]
 SIZES = [2, 4, 8]
+
+FAST_PATH_GAIN = 1.3   # required wall-clock speedup, largest sweep
+FAST_PATH_REPS = 5     # min-of-N per variant (noise rejection)
+
+
+def _fast_path_row() -> BenchRow:
+    """Time the largest sweep (8ME/8VE BERT+ENet under neu10) with the
+    reference vs fast simulator paths; prove identical results."""
+    core = NPUCoreConfig(n_me=8, n_ve=8)
+    times = {True: [], False: []}
+    results = {}
+    for _ in range(FAST_PATH_REPS):
+        for fast in (False, True):
+            t0 = time.time()
+            res = run_pair("BERT", "ENet", "neu10", core=core,
+                           me_ve=(4, 4), fast_path=fast)
+            times[fast].append(time.time() - t0)
+            results[fast] = res
+    ref, opt = results[False], results[True]
+    identical = (ref.makespan == opt.makespan
+                 and ref.tenants == opt.tenants)
+    assert identical, "fast path diverged from the reference simulator"
+    speedup = min(times[False]) / max(min(times[True]), 1e-9)
+    assert speedup >= FAST_PATH_GAIN, (
+        f"fast path {speedup:.2f}x < required {FAST_PATH_GAIN}x")
+    return BenchRow(
+        "fig25/fast_path/BERT+ENet/8ME8VE",
+        min(times[True]) * 1e6,
+        f"speedup={speedup:.2f}x identical=True "
+        f"ref_us={min(times[False]) * 1e6:.0f}")
 
 
 def run() -> List[BenchRow]:
@@ -33,6 +72,7 @@ def run() -> List[BenchRow]:
                              f"{gains_by_size[n]:.3f}"))
     # scaling trend: benefit at 8 engines >= benefit at 2 engines
     assert gains_by_size[8] >= gains_by_size[2] - 0.05
+    rows.append(_fast_path_row())
     return rows
 
 

@@ -19,7 +19,7 @@ Lowers a WorkloadTrace (operator list) into
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.neuisa import (
     ME,
@@ -159,6 +159,7 @@ AnyProgram = Union[NeuISAProgram, VLIWProgram]
 
 PREFILL = "prefill"
 DECODE = "decode"
+PIGGYBACK = "piggyback"   # one fused prefill-chunk + decode-batch program
 
 
 @dataclass
@@ -185,7 +186,19 @@ class CompiledRequestPlan:
     one program per chunk into ``prefill_chunks`` (ingestion order);
     ``prefill`` is then the first chunk. Monolithic plans leave
     ``prefill_chunks`` empty — :meth:`prefill_phases` abstracts over
-    both shapes."""
+    both shapes.
+
+    Piggybacked iterations (``iteration_token_budget`` > 0) cannot be
+    pre-compiled — the (slice tokens, position, decode batch) mix is
+    only known at iteration start — so :meth:`piggyback_phase` builds
+    and compiles them on demand through the shared
+    :class:`ProgramCache`, memoizing per quantized key: slice tokens
+    (rounded up to ``PIGGYBACK_TOKEN_QUANT``), prior-context position
+    (rounded up to ``PIGGYBACK_POS_QUANT``), decode-batch bucket
+    (power of two) and decode-context bucket. The cache therefore
+    holds a bounded program set per (model shape, budget, ISA),
+    shared across requests and tenants like every other phase
+    program."""
 
     name: str
     prefill: CompiledPhase
@@ -193,6 +206,14 @@ class CompiledRequestPlan:
     prompt_len: int = 0          # tokens
     gen_len: int = 1             # default tokens generated per request
     prefill_chunks: List[CompiledPhase] = field(default_factory=list)
+    # adaptive piggybacked iterations (0 = off); `_piggyback` is the
+    # on-demand (build trace -> compile via shared cache) factory set
+    # by compile_request_plan for plans that carry a builder
+    iteration_token_budget: int = 0
+    _piggyback: Optional[Callable[..., AnyProgram]] = \
+        field(default=None, repr=False, compare=False)
+    _piggy_memo: Dict[Tuple, CompiledPhase] = \
+        field(default_factory=dict, repr=False, compare=False)
 
     @property
     def has_decode(self) -> bool:
@@ -223,6 +244,36 @@ class CompiledRequestPlan:
                 return ph
         return self.decode[-1]   # clamp: out-of-coverage contexts
 
+    @property
+    def can_piggyback(self) -> bool:
+        """True when on-demand piggyback programs are available."""
+        return self._piggyback is not None
+
+    def piggyback_phase(self, chunk_tokens: int, kv_prior: int,
+                        decode_batch: int, decode_ctx: int,
+                        final: bool = False) -> CompiledPhase:
+        """Fused (prefill slice + decode batch) phase for one budgeted
+        iteration, compiled on first use and memoized. Callers pass
+        QUANTIZED arguments (the simulator quantizes; see the class
+        docstring) — the exact token bookkeeping stays with the
+        runtime, these programs are the cost proxy. ``context`` on the
+        returned phase is the prompt tokens ingested once the slice
+        completes (cost-grid tokens, not exact)."""
+        if self._piggyback is None:
+            raise ValueError(
+                f"plan {self.name!r} was compiled without a piggyback "
+                f"builder (non-generative RequestPlan)")
+        key = (chunk_tokens, kv_prior, decode_batch, decode_ctx, final)
+        ph = self._piggy_memo.get(key)
+        if ph is None:
+            ph = CompiledPhase(
+                PIGGYBACK,
+                self._piggyback(chunk_tokens, kv_prior, decode_batch,
+                                decode_ctx, final),
+                context=kv_prior + chunk_tokens)
+            self._piggy_memo[key] = ph
+        return ph
+
 
 class ProgramCache:
     """Per-(phase, context-bucket) compiled-program cache (§III-D).
@@ -236,7 +287,12 @@ class ProgramCache:
     with another shape's program. Prefill chunk traces embed their
     prior-context offset (…:bNkP+C), so a chunk program likewise
     compiles once per (model shape, chunk size, position, ISA) and is
-    shared by every request and tenant with that shape.
+    shared by every request and tenant with that shape. Piggybacked
+    iteration traces embed their full quantized mix
+    (...:piggy:bNkP+C[f]+dB@CTX — slice tokens, position,
+    decode-batch bucket, decode-context bucket), so the budgeted path
+    adds one program per quantized grid point, not per live
+    iteration.
     """
 
     def __init__(self) -> None:
@@ -292,10 +348,22 @@ def compile_request_plan(
                                 context=plan.prompt_len)
     decode = [CompiledPhase(DECODE, cache.compile(tr, core, isa), context=ctx)
               for ctx, tr in plan.decode]
+    piggyback = None
+    if plan.piggyback_builder is not None:
+        builder = plan.piggyback_builder
+
+        def piggyback(chunk_tokens: int, kv_prior: int, decode_batch: int,
+                      decode_ctx: int, final: bool) -> AnyProgram:
+            tr = builder(chunk_tokens, kv_prior, decode_batch, decode_ctx,
+                         final)
+            return cache.compile(tr, core, isa)
+
     return CompiledRequestPlan(
         name=plan.name, prefill=prefill, decode=decode,
         prompt_len=plan.prompt_len, gen_len=plan.gen_len,
         prefill_chunks=chunks,
+        iteration_token_budget=plan.iteration_token_budget,
+        _piggyback=piggyback,
     )
 
 

@@ -36,6 +36,21 @@ tenant's in-flight requests coalesce into shared decode iterations
 end-to-end latency series. A plain single-program spec is the
 degenerate one-phase plan — its event sequence is bit-identical to the
 pre-phase simulator.
+
+With ``CompiledRequestPlan.iteration_token_budget`` set, iterations
+are *budgeted* (SARATHI-SF piggybacking): each one fuses an
+adaptively-sized prefill slice with the tenant's live decode batch
+into a single program compiled on demand on a quantized grid — see
+:meth:`_TenantRT._pick_budgeted` / :meth:`_complete_piggyback` for
+the slice sizing and token-accounting rules. Unset, the PR-3 phase
+chain engine runs verbatim.
+
+``Simulator(fast_path=...)`` selects between the reference event-loop
+implementations and result-identical optimized ones (memoized
+dispatch spans, incremental HBM-contention and harvest-squatter
+bookkeeping, precomputed μTOp expansion, the tightened neu10 schedule
+pass); ``benchmarks/fig25_scaling.py`` pins both the equality and the
+speedup.
 """
 from __future__ import annotations
 
@@ -46,12 +61,15 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.compiler import DECODE, CompiledPhase, CompiledRequestPlan
+from repro.core.compiler import (DECODE, PIGGYBACK, CompiledPhase,
+                                 CompiledRequestPlan)
 from repro.core.neuisa import ME, VE, MuTOpGroup, NeuISAProgram, VLIWProgram
 from repro.core.policies import PolicyLike, resolve_policy
 from repro.core.stats import mean as _mean
 from repro.core.stats import percentile
 from repro.core.vnpu import VNPU
+from repro.npu.cost_model import (PIGGYBACK_CHUNK_FLOOR, PIGGYBACK_POS_QUANT,
+                                  PIGGYBACK_TOKEN_QUANT, batch_bucket)
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
 EPS = 1e-9
@@ -59,8 +77,40 @@ EPS = 1e-9
 _ARRIVAL = "arr"  # heap event kind for open-loop request arrivals
 
 
+def _build_chunk_specs(prog, is_neuisa: bool):
+    """Precompute, per group (NeuISA) or op (VLIW), the already-
+    filtered (cycles, hbm, name, ...) values `_fill_ready` expands
+    into Chunks — pure derived data, identical for every replay of the
+    program, cached on the program object by the fast path."""
+    specs = []
+    if is_neuisa:
+        n_y = prog.n_y
+        for g in prog.groups:
+            mes = [(u.cycles, u.hbm_bytes, u.op_name, 1)
+                   for u in g.me_utops
+                   if u.cycles > EPS or u.hbm_bytes > EPS]
+            ve = None
+            u = g.ve_utop
+            if u is not None and (u.cycles > EPS or u.hbm_bytes > EPS):
+                ve = (u.cycles / n_y, u.hbm_bytes / n_y, u.op_name, n_y,
+                      bool(g.me_utops))
+            specs.append((mes, ve))
+    else:
+        for op in prog.ops:
+            mes = []
+            ve = None
+            if op.n_me_static > 0 and (op.me_cycles > EPS
+                                       or op.hbm_bytes > EPS):
+                mes = [(op.me_cycles, op.hbm_bytes, op.op_name,
+                        op.n_me_static)]
+            elif op.ve_cycles > EPS or op.hbm_bytes > EPS:
+                ve = (op.ve_cycles, op.hbm_bytes, op.op_name, 1, False)
+            specs.append((mes, ve))
+    return specs
+
+
 # ----------------------------------------------------------------------
-@dataclass
+@dataclass(slots=True)
 class Chunk:
     """A schedulable unit: one ME μTOp, one VE μTOp slot-chunk, or a
     whole VLIW operator (multi-engine). ``cycles`` is engine cycles of
@@ -76,11 +126,15 @@ class Chunk:
     penalty: float = 0.0         # context-switch cycles to add (resume)
     group_key: int = -1          # group (NeuISA) or op (VLIW) index
     from_me_group: bool = False  # VE chunk draining an ME group
-    phase: str = ""              # "prefill" | "decode" | "" — visible to
-                                 # SchedulerPolicy dispatch decisions
+    phase: str = ""              # "prefill" | "decode" | "piggyback" | ""
+                                 # — visible to SchedulerPolicy dispatch
+                                 # decisions
     fused: bool = False          # member of a cross-tenant fused issue
                                  # group (Fig. 6): exempt from reclaim
                                  # preemption while it completes
+    n_dispatched: int = 1        # engines the chunk landed on (set by
+                                 # dispatch; lets completion skip the
+                                 # engine-pool scan for 1-engine μTOps)
 
 
 @dataclass
@@ -108,10 +162,13 @@ class TenantSpec:
 class _Request:
     """One in-flight generation request: its arrival time (cycles),
     target token count, token-emission cursor, and — under chunked
-    prefill — how many prefill chunk phases have completed."""
+    prefill — how many prefill chunk phases have completed.
+    ``prefill_done`` is the token-level ingestion cursor budgeted
+    (piggybacked) iterations advance; static chunking counts whole
+    phases in ``chunks_done`` instead."""
 
     __slots__ = ("arrival", "gen_len", "tokens_done", "last_token_t",
-                 "chunks_done")
+                 "chunks_done", "prefill_done")
 
     def __init__(self, arrival: float, gen_len: int = 1):
         self.arrival = arrival
@@ -119,6 +176,7 @@ class _Request:
         self.tokens_done = 0
         self.last_token_t = arrival
         self.chunks_done = 0
+        self.prefill_done = 0
 
 
 @dataclass
@@ -146,6 +204,13 @@ class TenantStats:
     chunk_interleaved_decodes: int = 0  # decode iterations run while a
                                      # same-tenant request sat between
                                      # prefill chunks (SARATHI interleave)
+    piggyback_iterations: int = 0    # budgeted iterations that carried a
+                                     # prefill slice (0 when the budget
+                                     # knob is unset)
+    piggyback_decode_tokens: int = 0  # decode tokens emitted riding a
+                                     # prefill slice (same iteration)
+    max_piggyback_batch: int = 0     # peak decode tokens co-batched with
+                                     # one prefill slice
     fused_groups: int = 0            # decode μTOps this tenant co-issued
                                      # into a neighbor's prefill group
     me_work: float = 0.0
@@ -248,11 +313,12 @@ class _TenantRT:
     tenant idles between iterations (``in_request`` False)."""
 
     def __init__(self, idx: int, spec: TenantSpec, core: NPUCoreConfig,
-                 open_loop: bool = False):
+                 open_loop: bool = False, fast_path: bool = True):
         self.idx = idx
         self.spec = spec
         self.core = core
         self.open_loop = open_loop
+        self.fast_path = fast_path
         self.removed = False
         if spec.plan is not None:
             self.plan = spec.plan
@@ -276,6 +342,12 @@ class _TenantRT:
         self.active_kind = ""                     # phase of the iteration
         self.yield_to_decode = False      # chunk boundary: run one decode
                                           # iteration before the next chunk
+        # budgeted (piggybacked) iterations
+        self.piggy_req: Optional[_Request] = None  # slice owner this iter
+        self.piggy_slice = 0              # prompt tokens this slice ingests
+        self.force_prefill = False        # a decode-only iteration just ran
+                                          # because the batch ate the whole
+                                          # budget: floor the next slice
         self.ready_me: List[Chunk] = []
         self.ready_ve: List[Chunk] = []
         self.loop_remaining: Dict[int, int] = {}
@@ -287,8 +359,11 @@ class _TenantRT:
     def in_flight(self) -> int:
         """Requests admitted but not completed."""
         n = len(self.waiting) + len(self.prefilling) + len(self.decoding)
-        if self.in_request and self.active_kind != DECODE:
-            n += len(self.active)
+        if self.in_request:
+            if self.active_kind == PIGGYBACK:
+                n += 1   # the slice owner; co-riders stay in `decoding`
+            elif self.active_kind != DECODE:
+                n += len(self.active)
         return n
 
     def _context_of(self, req: _Request) -> int:
@@ -305,12 +380,28 @@ class _TenantRT:
             self._start_iteration(t)
 
     def _start_iteration(self, t: float) -> None:
-        """Pick the tenant's next unit of work: a decode iteration if
-        a prefill chunk just yielded, else the next prefill chunk of
-        the request mid-prefill, else a waiting request's (first)
+        """Pick the tenant's next unit of work. With an
+        ``iteration_token_budget`` set, every iteration is *budgeted*:
+        a prefill slice sized to the live decode load piggybacks the
+        tenant's decode tokens in one fused program
+        (:meth:`_pick_budgeted`). Otherwise the PR-3 phase chain
+        rules apply verbatim (:meth:`_pick_phase`): a decode iteration
+        if a prefill chunk just yielded, else the next prefill chunk
+        of the request mid-prefill, else a waiting request's (first)
         prefill, else one shared decode step over every in-flight
-        decoding request. With monolithic prefill this degenerates to
-        the original prefill-prioritized continuous batching."""
+        decoding request."""
+        budgeted = (self.plan.iteration_token_budget > 0
+                    and self.plan.can_piggyback)
+        if not (self._pick_budgeted() if budgeted else self._pick_phase()):
+            return
+        self.in_request = True
+        self.cursor = -1
+        self.loop_remaining = {}
+        self._advance(t)
+
+    def _pick_phase(self) -> bool:
+        """PR-3 iteration selection (budget unset) — bit-identical to
+        the pre-budget engine. Returns False when the tenant idles."""
         if not self.decoding:
             self.yield_to_decode = False   # nothing to yield to
         pick_decode = self.decoding and (
@@ -320,26 +411,92 @@ class _TenantRT:
                 req = self.prefilling.pop(0)
             else:
                 req = self.waiting.popleft()
+            if req.prefill_done:
+                # the budget knob was disabled while this request was
+                # mid-slice: the unset engine only has whole-prompt /
+                # whole-chunk programs, so ingestion RESTARTS from
+                # token 0 (partial KV dropped, cost paid explicitly —
+                # see ServingSession.set_iteration_token_budget)
+                req.prefill_done = 0
             self.active = [req]
             phases = self.plan.prefill_phases()
             ph = phases[min(req.chunks_done, len(phases) - 1)]
             self.active_kind = ph.kind
             self.cur_program = ph.program
         elif self.decoding:
-            # the step's cost is the largest live context bucket: the
-            # batched KV stream is paced by the longest sequence
-            ctx = max(self._context_of(r) for r in self.decoding)
-            phase = self.plan.decode_phase_for(ctx)
-            self.active = list(self.decoding)
-            self.active_kind = DECODE
-            self.cur_program = phase.program
-            self.yield_to_decode = False
+            self._begin_decode()
         else:
-            return
-        self.in_request = True
-        self.cursor = -1
-        self.loop_remaining = {}
-        self._advance(t)
+            return False
+        return True
+
+    def _begin_decode(self) -> None:
+        """Set up one shared decode iteration over every in-flight
+        decoding request. The step's cost is the largest live context
+        bucket: the batched KV stream is paced by the longest
+        sequence."""
+        ctx = max(self._context_of(r) for r in self.decoding)
+        phase = self.plan.decode_phase_for(ctx)
+        self.active = list(self.decoding)
+        self.active_kind = DECODE
+        self.cur_program = phase.program
+        self.yield_to_decode = False
+
+    def _pick_budgeted(self) -> bool:
+        """Adaptive per-iteration token budget (SARATHI-SF
+        piggybacking): one iteration serves a prefill slice of
+        ``budget - live decode batch`` prompt tokens AND the decode
+        batch, as one fused program — decoding requests keep their
+        token cadence through a neighbor request's prefill instead of
+        waiting out whole chunk iterations.
+
+        Floor/cap rules guarantee progress both ways: when the
+        (bucketed) decode batch eats the budget to under
+        ``PIGGYBACK_CHUNK_FLOOR`` tokens, ONE decode-only iteration
+        runs and the next slice is floored — prefill always advances
+        every other iteration; the slice is capped at the remaining
+        prompt (the final slice may be partial). Program cost is
+        looked up on the quantized grid (slice tokens, position,
+        batch bucket, context bucket) while token bookkeeping stays
+        exact. Returns False when the tenant idles."""
+        if not (self.prefilling or self.waiting):
+            if not self.decoding:
+                return False
+            self._begin_decode()    # no prompt left to slice
+            return True
+        budget = self.plan.iteration_token_budget
+        batch = len(self.decoding)
+        bb = batch_bucket(batch)
+        slice_ = budget - bb
+        if batch and slice_ < PIGGYBACK_CHUNK_FLOOR and not self.force_prefill:
+            # over-subscribed: the decode batch alone fills the budget
+            self.force_prefill = True
+            self._begin_decode()
+            return True
+        self.force_prefill = False
+        if self.prefilling:
+            req = self.prefilling.pop(0)
+        else:
+            req = self.waiting.popleft()
+        remaining = max(self.plan.prompt_len - req.prefill_done, 1)
+        slice_ = min(max(slice_, min(PIGGYBACK_CHUNK_FLOOR, remaining)),
+                     remaining)
+        final = req.prefill_done + slice_ >= self.plan.prompt_len
+        q = PIGGYBACK_TOKEN_QUANT
+        cost_tokens = -(-slice_ // q) * q
+        pq = PIGGYBACK_POS_QUANT
+        pos = -(-req.prefill_done // pq) * pq if req.prefill_done else 0
+        ctx = 0
+        if batch:
+            live = max(self._context_of(r) for r in self.decoding)
+            ctx = self.plan.decode_phase_for(live).context
+        phase = self.plan.piggyback_phase(cost_tokens, pos, bb, ctx, final)
+        self.active = [req] + (list(self.decoding) if batch else [])
+        self.piggy_req = req
+        self.piggy_slice = slice_
+        self.active_kind = PIGGYBACK
+        self.cur_program = phase.program
+        self.yield_to_decode = False
+        return True
 
     def _on_iteration_complete(self, t: float) -> None:
         """A phase program finished: emit tokens, advance each served
@@ -365,6 +522,8 @@ class _TenantRT:
             for req in finished:
                 self.decoding.remove(req)
                 self._complete_request(req, t)
+        elif self.active_kind == PIGGYBACK:
+            self._complete_piggyback(t)
         else:
             req = self.active[0]
             req.chunks_done += 1
@@ -387,6 +546,49 @@ class _TenantRT:
         self.active = []
         self.in_request = False
         self._start_iteration(t)
+
+    def _complete_piggyback(self, t: float) -> None:
+        """A budgeted iteration finished. Token accounting rules:
+        every co-riding decode request's token lands NOW (one TBT
+        sample each — piggybacked tokens are decode tokens, whatever
+        program carried them); the slice owner's ingestion cursor
+        advances by the exact slice, and only the slice that completes
+        the prompt emits the first token (one TTFT sample, measured
+        from arrival — co-riders never touch TTFT)."""
+        req = self.piggy_req
+        riders = [r for r in self.active if r is not req]
+        st = self.stats
+        st.prefill_chunks += 1
+        st.piggyback_iterations += 1
+        if riders:
+            st.piggyback_decode_tokens += len(riders)
+            st.max_piggyback_batch = max(st.max_piggyback_batch,
+                                         len(riders))
+        finished = []
+        for r in riders:
+            r.tokens_done += 1
+            st.tokens += 1
+            st.tbt.append(t - r.last_token_t)
+            r.last_token_t = t
+            if r.tokens_done >= r.gen_len:
+                finished.append(r)
+        for r in finished:
+            self.decoding.remove(r)
+            self._complete_request(r, t)
+        req.prefill_done += self.piggy_slice
+        if req.prefill_done >= self.plan.prompt_len:
+            st.ttft.append(t - req.arrival)
+            st.tokens += 1
+            req.tokens_done = 1      # the final slice emits token 1
+            req.last_token_t = t
+            if req.gen_len > 1 and self.plan.has_decode:
+                self.decoding.append(req)
+            else:
+                self._complete_request(req, t)
+        else:
+            self.prefilling.insert(0, req)   # same request continues
+        self.piggy_req = None
+        self.piggy_slice = 0
 
     def _complete_request(self, req: _Request, t: float) -> None:
         self.stats.latencies.append(t - req.arrival)
@@ -435,10 +637,35 @@ class _TenantRT:
         return nxt if nxt < n else None
 
     def _fill_ready(self) -> bool:
-        """Expand current group/op into ready chunks. False if empty."""
+        """Expand current group/op into ready chunks. False if empty.
+        Under the fast path, the per-group (filtered μTOp values) are
+        precomputed once per program — they are pure derived data, so
+        caching them on the shared program object is safe — and each
+        replay only constructs the Chunk objects."""
         prog = self.cur_program
         phase = self.active_kind
         made = 0
+        if self.fast_path:
+            specs = getattr(prog, "_chunk_specs", None)
+            if specs is None:
+                specs = _build_chunk_specs(prog, self.is_neuisa)
+                prog._chunk_specs = specs
+            me_specs, ve_spec = specs[self.cursor]
+            cursor, idx = self.cursor, self.idx
+            for cycles, hbm, name, n_eng in me_specs:
+                self.ready_me.append(Chunk(
+                    idx, ME, cycles, hbm, name, n_engines=n_eng,
+                    group_key=cursor, phase=phase))
+                made += 1
+            if ve_spec is not None:
+                cycles, hbm, name, slots, from_me = ve_spec
+                for _ in range(slots):
+                    self.ready_ve.append(Chunk(
+                        idx, VE, cycles, hbm, name, group_key=cursor,
+                        from_me_group=from_me, phase=phase))
+                    made += 1
+            self.outstanding = made
+            return made > 0
         if self.is_neuisa:
             g: MuTOpGroup = prog.groups[self.cursor]
             for u in g.me_utops:
@@ -501,13 +728,31 @@ class Simulator:
         hbm_scale: float = 1.0,
         fair_slice: float = 50_000.0,   # cycles of service imbalance
         max_events: int = 20_000_000,
+        fast_path: bool = True,
     ):
+        """``fast_path`` enables the wall-clock optimizations that are
+        *result-identical* by construction: memoized per-(chunk shape,
+        mem-pressure) dispatch durations, incremental HBM-contention
+        bookkeeping instead of an engine scan per dispatch, and the
+        tightened ``neu10`` schedule pass. ``False`` runs the
+        reference implementations — kept so benchmarks/tests can
+        prove byte-for-byte SimResult equality and measure the
+        speedup (``fig25_scaling``'s fast-path row)."""
         self.policy_obj = resolve_policy(policy)
         self.policy = self.policy_obj.name or type(self.policy_obj).__name__
         self.core = core
         self.hbm_scale = hbm_scale
         self.fair_slice = fair_slice
         self.max_events = max_events
+        self.fast_path = fast_path
+        self._span_memo: Dict[Tuple, float] = {}
+        self._bw_inflight: Dict[int, int] = {}   # id(chunk) -> tenant
+        self._bw_per_tenant: Dict[int, int] = {}  # tenant -> bw chunks
+        self._bpc = core.hbm_bytes_per_cycle * hbm_scale  # bytes/cycle
+        # fast path: engines per owner currently running a FOREIGN
+        # tenant's chunk (harvest squatters) — lets the reclaim pass
+        # skip its engine scan when an owner has nothing to reclaim
+        self._squat: Dict[int, int] = {}
         self.now = 0.0
         self.tenants: List[_TenantRT] = []
         self.mes = [_Engine(ME, i, None) for i in range(core.n_me)]
@@ -531,7 +776,8 @@ class Simulator:
         start their request train immediately; open-loop tenants idle
         until :meth:`inject_request`. Returns the tenant index."""
         idx = len(self.tenants)
-        rt = _TenantRT(idx, spec, self.core, open_loop=open_loop)
+        rt = _TenantRT(idx, spec, self.core, open_loop=open_loop,
+                       fast_path=self.fast_path)
         # a late joiner starts from the lowest live fair-share counter,
         # not zero — otherwise it would starve everyone until it
         # "caught up" on service it never queued for
@@ -541,6 +787,12 @@ class Simulator:
         self.tenants.append(rt)
         if self.policy_obj.spatial:
             self._claim_engines(rt)
+            if self.fast_path:
+                # a mid-run joiner can take ownership of engines still
+                # running a departed neighbor's harvested chunks (the
+                # deregister released ownership, not the work) — the
+                # squatter counts must see them, like resize does
+                self._recount_squat()
         if not open_loop:
             rt.start_request(self.now)
         self.policy_obj.on_tenant_added(self, rt)
@@ -555,20 +807,30 @@ class Simulator:
             return
         for e in self.mes + self.ves:
             if not e.free and e.chunk is not None and e.tenant == idx:
+                self._unsquat(e, idx)
                 e.token = -1       # pending completion event goes stale
                 e.chunk = None
                 e.tenant = -1
                 e.harvested = False
             if e.owner == idx:
                 e.owner = None
+        self._squat.pop(idx, None)   # released engines reclaim nothing
         rt.ready_me.clear()
         rt.ready_ve.clear()
         rt.waiting.clear()
         rt.prefilling.clear()
         rt.decoding.clear()
         rt.active = []
+        rt.piggy_req = None
+        rt.piggy_slice = 0
         rt.in_request = False
         rt.removed = True
+        if self._bw_per_tenant.pop(idx, None) is not None:
+            # cancelled chunks left the engines above: drop their
+            # bandwidth-contention entries too
+            for cid in [c for c, ten in self._bw_inflight.items()
+                        if ten == idx]:
+                del self._bw_inflight[cid]
         rt.done = True
         rt.finished_at = min(rt.finished_at, self.now)
         self.policy_obj.on_tenant_removed(self, rt)
@@ -589,6 +851,7 @@ class Simulator:
                 if e.owner == idx:
                     e.owner = None
             self._claim_engines(rt)
+            self._recount_squat()   # ownership moved under live chunks
         self._schedule(self.now)
 
     def _claim_engines(self, rt: _TenantRT) -> None:
@@ -726,37 +989,81 @@ class Simulator:
                 if e.token == token:
                     e.token = -1
             return
-        engines = self._engines_of(chunk)
-        for e in engines:
-            e.token = -1
-            e.chunk = None
+        squat = self._squat
+        if chunk.n_dispatched == 1:     # single-engine μTOp fast path
+            if squat:
+                self._unsquat(eng, tenant)
+            eng.token = -1
+            eng.chunk = None
+        else:
+            for e in self._engines_of(chunk):
+                if squat:
+                    self._unsquat(e, tenant)
+                e.token = -1
+                e.chunk = None
+        if self._bw_inflight:
+            self._bw_unregister(chunk)
         rt = self.tenants[tenant]
+        st = rt.stats
+        cycles = chunk.cycles
         if chunk.kind == ME:
-            rt.stats.me_work += chunk.cycles
+            st.me_work += cycles
             # note: a VLIW ME op's fused VE-drain work rides inside the
             # op span without occupying modeled VE engines, so it is
             # NOT counted as VE work — utilization stats are physical
             # occupancy for every policy (conservation-exact).
             if eng.harvested:
-                rt.stats.harvested_me_work += chunk.cycles
+                st.harvested_me_work += cycles
         else:
-            rt.stats.ve_work += chunk.cycles
+            st.ve_work += cycles
             if eng.harvested:
-                rt.stats.harvested_ve_work += chunk.cycles
+                st.harvested_ve_work += cycles
         # fairness bookkeeping counts ACTIVE (compute) cycles, like the
         # paper's per-vNPU performance counters (§III-E) — an
         # HBM-stalled tenant accrues little and keeps its priority,
         # which is precisely V10's Fig. 27 pathology.
-        rt.active_cycles += chunk.cycles / max(chunk.n_engines, 1)
+        rt.active_cycles += (cycles if chunk.n_engines <= 1
+                             else cycles / chunk.n_engines)
         rt.chunk_done(t)
 
-    def _engines_of(self, chunk: Chunk) -> List[_Engine]:
+    def _engines_of(self, chunk: Chunk,
+                    eng: Optional[_Engine] = None) -> List[_Engine]:
+        if eng is not None and chunk.n_dispatched == 1:
+            return [eng]   # single-engine μTOp: no pool scan needed
         pool = self.mes if chunk.kind == ME else self.ves
         return [e for e in pool if e.chunk is chunk]
 
     # ------------------------------------------------------------------
     def _duration(self, chunk: Chunk, n_dispatched: int) -> float:
         rt = self.tenants[chunk.tenant]
+        if self.fast_path:
+            # the overwhelmingly common case — a compute-only μTOp —
+            # IS its span; skip the key build entirely
+            if rt.is_neuisa and chunk.hbm_bytes <= 0:
+                return chunk.cycles + chunk.penalty
+            pressure = (self._mem_pressure(chunk.tenant)
+                        if chunk.hbm_bytes > 0 else (1, 1))
+            # memoized per-(chunk shape, mem-pressure) span: identical
+            # chunk shapes recur thousands of times per run (one per
+            # μTOp replay), so the arithmetic is computed once per
+            # key. VLIW ME spans also read ops[chunk.group_key] off
+            # the live program — the (program id, group index) pair
+            # stands in for that dereference in the key.
+            key = (chunk.kind, chunk.cycles, chunk.hbm_bytes,
+                   chunk.n_engines, n_dispatched, pressure, rt.is_neuisa,
+                   (id(rt.cur_program), chunk.group_key)
+                   if not rt.is_neuisa and chunk.kind == ME else None)
+            span = self._span_memo.get(key)
+            if span is None:
+                span = self._span(chunk, rt, n_dispatched, pressure)
+                self._span_memo[key] = span
+            return span + chunk.penalty
+        pressure = (self._mem_pressure(chunk.tenant)
+                    if chunk.hbm_bytes > 0 else (1, 1))
+        return self._span(chunk, rt, n_dispatched, pressure) + chunk.penalty
+
+    def _span(self, chunk: Chunk, rt: _TenantRT, n_dispatched: int,
+              pressure: Tuple[int, int]) -> float:
         if rt.is_neuisa:
             # μTOps are single-engine units (a VE μTOp was pre-split
             # into n_y slot chunks)
@@ -778,17 +1085,25 @@ class Simulator:
             # sharing of HBM bandwidth"), then across THIS tenant's
             # own in-flight memory chunks — so partitioning one
             # operator into μTOps never manufactures bandwidth.
-            n_ten, n_mine = self._mem_pressure(chunk.tenant)
+            n_ten, n_mine = pressure
             bw = (self.core.hbm_bytes_per_cycle * self.hbm_scale
                   / n_ten / n_mine)
             span = max(span, chunk.hbm_bytes / bw)
-        return span + chunk.penalty
+        return span
 
     def _mem_pressure(self, tenant: int) -> Tuple[int, int]:
         """Max-min fair HBM sharing: only BANDWIDTH-BOUND in-flight
         chunks contend (a compute-bound neighbor's trickle of weight
         streaming doesn't halve a decode tenant's BW — §V-F: the
-        collocated LLM 'suffers negligible overhead')."""
+        collocated LLM 'suffers negligible overhead'). The fast path
+        reads the incrementally-maintained per-tenant contender
+        counts; the reference path recomputes them with an engine
+        scan — same answer, proven equal by the fig25 fast-path
+        row."""
+        if self.fast_path:
+            per = self._bw_per_tenant
+            return (len(per) + (0 if tenant in per else 1),
+                    1 + per.get(tenant, 0))
         bpc = self.core.hbm_bytes_per_cycle * self.hbm_scale
         tenants = {tenant}
         mine = 1  # the chunk being dispatched
@@ -809,24 +1124,104 @@ class Simulator:
                 mine += 1
         return len(tenants), mine
 
+    def _bw_unregister(self, chunk: Chunk) -> None:
+        ten = self._bw_inflight.pop(id(chunk), None)
+        if ten is not None:
+            n = self._bw_per_tenant[ten] - 1
+            if n <= 0:
+                del self._bw_per_tenant[ten]
+            else:
+                self._bw_per_tenant[ten] = n
+
+    def _unsquat(self, eng: _Engine, tenant: int) -> None:
+        """Engine stops running a chunk: drop its squatter entry if it
+        was running a foreign tenant's work on an owned engine."""
+        owner = eng.owner
+        if owner is not None and owner != tenant and self._squat:
+            n = self._squat.get(owner, 0) - 1
+            if n <= 0:
+                self._squat.pop(owner, None)
+            else:
+                self._squat[owner] = n
+
+    def _recount_squat(self) -> None:
+        """Rebuild the squatter counts from engine state (ownership
+        was reassigned with chunks in flight — rare)."""
+        self._squat.clear()
+        for e in self.mes + self.ves:
+            if (e.chunk is not None and e.owner is not None
+                    and e.owner != e.tenant):
+                self._squat[e.owner] = self._squat.get(e.owner, 0) + 1
+
     # ------------------------------------------------------------------
     # policy-facing dispatch API (stable for third-party policies)
     # ------------------------------------------------------------------
     def dispatch(self, chunk: Chunk, engines: List[_Engine], t: float,
                  harvested: bool = False) -> None:
         """Start ``chunk`` on one or more free engines at time ``t``."""
+        if len(engines) == 1:
+            # single source of truth for the 1-engine case
+            self._dispatch1(chunk, engines[0], t, harvested)
+            return
         token = next(self._tok)
-        dur = self._duration(chunk, len(engines))
+        n = len(engines)
+        dur = self._duration(chunk, n)
+        chunk.n_dispatched = n
+        end = t + dur
+        fast = self.fast_path
         for e in engines:
             e.token = token
             e.chunk = chunk
             e.tenant = chunk.tenant
             e.start = t
-            e.end = t + dur
+            e.end = end
             e.harvested = harvested
+            if fast and e.owner is not None and e.owner != chunk.tenant:
+                self._squat[e.owner] = self._squat.get(e.owner, 0) + 1
+        if fast:
+            self._bw_register(chunk)
         lead = engines[0]
         heapq.heappush(
-            self._heap, (t + dur, next(self._seq), lead.kind, lead.eid, token))
+            self._heap, (end, next(self._seq), lead.kind, lead.eid, token))
+
+    def _dispatch1(self, chunk: Chunk, e: _Engine, t: float,
+                   harvested: bool = False) -> None:
+        """Single-engine dispatch (same semantics as
+        ``dispatch(chunk, [e], t, harvested)``, which delegates here —
+        the hot schedule pass calls it directly to skip the list
+        plumbing, and the common compute-only μTOp duration is
+        inlined)."""
+        token = next(self._tok)
+        fast = self.fast_path
+        if (fast and chunk.hbm_bytes <= 0
+                and self.tenants[chunk.tenant].is_neuisa):
+            dur = chunk.cycles + chunk.penalty
+        else:
+            dur = self._duration(chunk, 1)
+            if fast:
+                self._bw_register(chunk)
+        chunk.n_dispatched = 1
+        e.token = token
+        e.chunk = chunk
+        e.tenant = chunk.tenant
+        e.start = t
+        end = t + dur
+        e.end = end
+        e.harvested = harvested
+        if fast and e.owner is not None and e.owner != chunk.tenant:
+            self._squat[e.owner] = self._squat.get(e.owner, 0) + 1
+        heapq.heappush(
+            self._heap, (end, next(self._seq), e.kind, e.eid, token))
+
+    def _bw_register(self, chunk: Chunk) -> None:
+        """Incremental HBM-contention bookkeeping (fast path): the
+        chunk is a bandwidth contender iff it is memory-paced (ties
+        count — see :meth:`_mem_pressure`)."""
+        if (chunk.hbm_bytes > 0
+                and chunk.hbm_bytes / self._bpc >= chunk.cycles):
+            self._bw_inflight[id(chunk)] = chunk.tenant
+            self._bw_per_tenant[chunk.tenant] = \
+                self._bw_per_tenant.get(chunk.tenant, 0) + 1
 
     def preempt(self, eng: _Engine, t: float,
                 blocked_owner: Optional[int] = None) -> None:
@@ -836,7 +1231,9 @@ class Simulator:
         ``blocked_owner``: tenant reclaiming its engine — it eats the
         drain window (Table III 'blocked because harvested')."""
         chunk = eng.chunk
-        engines = self._engines_of(chunk)
+        engines = self._engines_of(chunk, eng)
+        if self._bw_inflight:
+            self._bw_unregister(chunk)
         # VE state is tiny vs the 256-cycle systolic drain (§III-G)
         ctx = float(self.core.ctx_switch_cycles if chunk.kind == ME else 32)
         # VLIW ops span every ME: their contexts drain serially through
@@ -867,6 +1264,7 @@ class Simulator:
         # engines drain their state for ctx cycles
         token = next(self._tok)
         for e in engines:
+            self._unsquat(e, chunk.tenant)
             e.token = token
             e.chunk = None
             e.tenant = -1

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
@@ -48,6 +48,10 @@ class Operator:
     fused_ve: bool = True          # VE work rides in ME uTOps' VE slots
     out_elems: float = 0.0        # output size (reduce cost on K-splits)
     shapes: Tuple[Tuple[int, ...], ...] = ()
+    # bytes of ``hbm_bytes`` that are parameter (weight) streaming — a
+    # piggybacked iteration that runs this op twice (prefill chunk +
+    # decode batch) streams the weights ONCE and dedupes this share
+    weight_bytes: float = 0.0
 
     @property
     def kind(self) -> str:
@@ -71,6 +75,27 @@ class Operator:
             fused_ve=self.fused_ve,
             out_elems=self.out_elems,
             shapes=self.shapes,
+            weight_bytes=self.weight_bytes * factor,
+        )
+
+    def without_weight_stream(self) -> "Operator":
+        """Copy with the parameter-streaming HBM share removed — the
+        weights were already streamed by an identical op earlier in
+        the same fused program (piggybacked iterations count shared
+        weight reads once)."""
+        if self.weight_bytes <= 0:
+            return self
+        return Operator(
+            self.name,
+            me_cycles=self.me_cycles,
+            ve_cycles=self.ve_cycles,
+            hbm_bytes=max(self.hbm_bytes - self.weight_bytes, 0.0),
+            n_tiles=self.n_tiles,
+            reduction_split=self.reduction_split,
+            fused_ve=self.fused_ve,
+            out_elems=self.out_elems,
+            shapes=self.shapes,
+            weight_bytes=0.0,
         )
 
 
@@ -113,8 +138,10 @@ def matmul_op(
     ve_cycles = ve_elems / core.ve_elems_per_cycle
 
     hbm = 0.0
+    w_bytes = 0.0
     if not weight_resident:
-        hbm += k * n * dtype_bytes          # stream weights once
+        w_bytes = k * n * dtype_bytes       # stream weights once
+        hbm += w_bytes
     if not act_in_sram:
         hbm += m * k * dtype_bytes
     if out_to_hbm:
@@ -140,6 +167,7 @@ def matmul_op(
         reduction_split=reduction_split,
         out_elems=float(m * n),
         shapes=((m, k), (k, n)),
+        weight_bytes=float(w_bytes),
     )
 
 
@@ -244,6 +272,28 @@ def decode_bucket(context: int, base: int = 512) -> int:
     return b
 
 
+def batch_bucket(n: int) -> int:
+    """Decode-batch bucket for piggybacked programs: the smallest
+    power of two >= ``n`` (0 for an empty batch). Piggyback program
+    cache keys use the bucket instead of the live batch so the cache
+    stays bounded; cost is taken at the bucket ceiling (conservative,
+    same idiom as :func:`decode_bucket`)."""
+    if n <= 0:
+        return 0
+    return 1 << (int(n) - 1).bit_length()
+
+
+# tokens a budgeted prefill slice never shrinks below (prefill must
+# always progress — SARATHI-SF's "stall-free" floor), and the grids
+# the piggyback program cache quantizes on: slice token counts round
+# up to PIGGYBACK_TOKEN_QUANT and the chunk's prior-context position
+# rounds up to PIGGYBACK_POS_QUANT, so the cache holds O(log) programs
+# per (shape, budget) instead of one per live (slice, position) pair.
+PIGGYBACK_CHUNK_FLOOR = 32
+PIGGYBACK_TOKEN_QUANT = 32
+PIGGYBACK_POS_QUANT = 64
+
+
 @dataclass
 class RequestPlan:
     """Phase-structured request IR: one generation request = a prefill
@@ -269,10 +319,22 @@ class RequestPlan:
     With the knob unset (0), ``prefill_chunks`` is empty and the plan
     is bit-identical to the monolithic-prefill IR.
 
+    A further refinement replaces the *static* chunk knob entirely:
+    ``iteration_token_budget`` > 0 enables SARATHI-SF-style
+    **piggybacked iterations** — the simulator sizes each prefill
+    slice adaptively (budget minus the live decode batch, floored so
+    prefill always progresses) and runs the slice and the tenant's
+    live decode tokens as ONE fused program. Those mixed programs are
+    built on demand through ``piggyback_builder`` (a callable
+    ``(chunk_tokens, kv_prior, decode_batch, decode_ctx, final) ->
+    WorkloadTrace``); the trace layer attaches it for generative
+    plans. With the budget unset (0) the builder is never invoked and
+    every path is bit-identical to the static-chunk / monolithic IR.
+
     Units: trace costs are engine cycles / HBM bytes (see
     :class:`Operator`); ``prompt_len`` / ``gen_len`` / ``max_gen`` /
-    ``prefill_chunk_tokens`` are token counts; ``hbm_footprint`` is
-    resident bytes.
+    ``prefill_chunk_tokens`` / ``iteration_token_budget`` are token
+    counts; ``hbm_footprint`` is resident bytes.
     """
 
     name: str
@@ -286,6 +348,11 @@ class RequestPlan:
     # SARATHI-style chunked prefill: tokens per chunk (0 = monolithic)
     prefill_chunk_tokens: int = 0
     prefill_chunks: List[WorkloadTrace] = field(default_factory=list)
+    # adaptive piggybacked iterations: target tokens per iteration
+    # (0 = off); the builder makes mixed chunk+decode traces on demand
+    iteration_token_budget: int = 0
+    piggyback_builder: Optional[Callable[..., WorkloadTrace]] = \
+        field(default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         self.decode = sorted(self.decode, key=lambda p: p[0])
@@ -305,6 +372,12 @@ class RequestPlan:
     def chunked(self) -> bool:
         """True when prefill runs as a chain of chunk phases."""
         return bool(self.prefill_chunks)
+
+    @property
+    def piggybacked(self) -> bool:
+        """True when iterations are budgeted: prefill slices size
+        adaptively and carry the live decode batch in one program."""
+        return self.iteration_token_budget > 0
 
     @property
     def n_prefill_chunks(self) -> int:

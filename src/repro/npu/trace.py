@@ -138,6 +138,7 @@ def _moe_ops(cfg: ModelConfig, T: int, core: NPUCoreConfig) -> List[Operator]:
             ve_cycles=gu.ve_cycles + (T * k * d_e * 4.0) / core.ve_elems_per_cycle,
             hbm_bytes=w_bytes * (2.0 / 3.0),
             n_tiles=min(core.n_me, max(n_act, 1)),
+            weight_bytes=w_bytes * (2.0 / 3.0),
         )
     )
     ops.append(
@@ -147,6 +148,7 @@ def _moe_ops(cfg: ModelConfig, T: int, core: NPUCoreConfig) -> List[Operator]:
             ve_cycles=dn.ve_cycles,
             hbm_bytes=w_bytes / 3.0,
             n_tiles=min(core.n_me, max(n_act, 1)),
+            weight_bytes=w_bytes / 3.0,
         )
     )
     ops.append(vector_op("combine", T * k * d * 2.0, core))
@@ -327,6 +329,61 @@ def lm_trace(
     return tr
 
 
+def piggyback_trace(
+    cfg: ModelConfig,
+    batch: int,
+    chunk_tokens: int,
+    kv_prior: int,
+    decode_batch: int,
+    decode_ctx: int,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    include_head: bool = True,
+    final: bool = True,
+) -> WorkloadTrace:
+    """One SARATHI-SF *piggybacked iteration*: a prefill chunk of
+    ``chunk_tokens`` prompt tokens at prior context ``kv_prior`` fused
+    with ``decode_batch`` live decode tokens at context bucket
+    ``decode_ctx`` — a single program, so a decoding request's token
+    cadence no longer waits out a whole chunk iteration.
+
+    Costing (the paper's fine-grained operator mixing, §V-F):
+
+    * the chunk slice keeps causal-fraction attention over
+      ``kv_prior + chunk_tokens`` keys plus the per-chunk KV re-read
+      (identical ops to :func:`lm_trace` with ``kv_prior``);
+    * each decode token pays its per-token attention against the KV
+      stream at ``decode_ctx`` (identical ops to a decode trace at
+      that bucket, batch ``decode_batch``);
+    * **shared weight reads are counted once**: every decode operator
+      whose weights were already streamed by the same-named chunk
+      operator drops its :attr:`Operator.weight_bytes` HBM share
+      (KV-cache / state / embedding traffic is per-token and stays).
+
+    ``final`` marks the slice that completes the prompt — only then
+    does the chunk side carry the lm_head that emits the first token
+    (mirroring the static-chunk rule). ``decode_batch == 0`` degrades
+    to a plain chunk trace. Units: all token counts; ``decode_ctx``
+    is the bucket ceiling in tokens.
+    """
+    chunk = lm_trace(cfg, batch, chunk_tokens, "prefill", core,
+                     include_head=include_head and final,
+                     kv_prior=kv_prior)
+    if decode_batch <= 0:
+        return chunk
+    dec = lm_trace(cfg, batch * decode_batch, decode_ctx, "decode", core,
+                   include_head=include_head)
+    tr = WorkloadTrace(
+        name=(f"{cfg.name}:piggy:b{batch}k{kv_prior}+{chunk_tokens}"
+              f"{'f' if final else ''}+d{decode_batch}@{decode_ctx}"),
+        core=core)
+    tr.ops.extend(chunk.ops)
+    streamed = {op.name for op in chunk.ops if op.weight_bytes > 0}
+    tr.ops.extend(op.without_weight_stream() if op.name in streamed else op
+                  for op in dec.ops)
+    tr.hbm_footprint = max(chunk.hbm_footprint, dec.hbm_footprint)
+    return tr
+
+
 def request_plan(
     cfg: ModelConfig,
     batch: int,
@@ -337,6 +394,7 @@ def request_plan(
     bucket: int = 512,
     include_head: bool = True,
     prefill_chunk_tokens: int = 0,
+    iteration_token_budget: int = 0,
 ) -> RequestPlan:
     """Phase-structured generation request: prefill over ``prompt_len``
     tokens (emits token 1) + decode steps against a growing KV cache.
@@ -356,7 +414,25 @@ def request_plan(
     per position — the compiler still builds each one exactly once per
     (model shape, chunk size, ISA) through the shared ProgramCache.
     Prompts no longer than one chunk stay monolithic.
+
+    ``iteration_token_budget`` > 0 *replaces* the static chunk knob
+    with adaptive piggybacked iterations: the simulator sizes each
+    prefill slice to (budget - live decode batch) and fuses it with
+    the tenant's decode tokens into one :func:`piggyback_trace`
+    program. The two knobs are mutually exclusive. The piggyback
+    builder is attached for every generative plan so the budget can
+    also be raised from 0 live (``ServingSession.
+    set_iteration_token_budget``); with the budget at 0 it is never
+    invoked.
     """
+    if iteration_token_budget and prefill_chunk_tokens:
+        raise ValueError(
+            "iteration_token_budget replaces prefill_chunk_tokens "
+            "(adaptive vs static chunking) — set at most one")
+    if iteration_token_budget < 0:
+        raise ValueError(
+            f"iteration_token_budget must be >= 0 tokens, "
+            f"got {iteration_token_budget}")
     max_gen = max(max_gen, gen_len, 1)
     prefill = lm_trace(cfg, batch, prompt_len, "prefill", core,
                        include_head=include_head)
@@ -382,12 +458,20 @@ def request_plan(
             if ctx >= last:
                 break
             ctx <<= 1
+    def _piggyback(chunk_tokens: int, kv_prior: int, decode_batch: int,
+                   decode_ctx: int, final: bool) -> WorkloadTrace:
+        return piggyback_trace(cfg, batch, chunk_tokens, kv_prior,
+                               decode_batch, decode_ctx, core,
+                               include_head=include_head, final=final)
+
     return RequestPlan(
         name=f"{cfg.name}:gen:b{batch}p{prompt_len}g{gen_len}",
         prefill=prefill, decode=decode, prompt_len=prompt_len,
         gen_len=gen_len, max_gen=max_gen, bucket_base=bucket,
         prefill_chunk_tokens=chunk if chunks else 0,
         prefill_chunks=chunks,
+        iteration_token_budget=int(iteration_token_budget),
+        piggyback_builder=_piggyback,
     )
 
 

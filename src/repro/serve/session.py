@@ -255,7 +255,8 @@ class NPUCluster:
         prompt_len: int = 512,
         gen_lens: Union[int, GenLenDistribution] = 64,
         batch: int = 1, eu_budget: int = 4,
-        bucket: int = 512, prefill_chunk_tokens: int = 0, **kw,
+        bucket: int = 512, prefill_chunk_tokens: int = 0,
+        iteration_token_budget: int = 0, **kw,
     ) -> TenantHandle:
         """Register an LLM serving tenant with a phase-structured
         request lifecycle: prefill over ``prompt_len`` tokens, then a
@@ -271,9 +272,21 @@ class NPUCluster:
         whole prompt. 0 (the default) keeps monolithic prefill —
         scheduling is then bit-identical to the pre-chunking engine.
 
+        ``iteration_token_budget`` > 0 *replaces* the static chunk
+        knob (the two are mutually exclusive) with SARATHI-SF
+        piggybacked iterations: each iteration fuses a prefill slice
+        of ``budget - live decode batch`` tokens with the tenant's
+        decode tokens into ONE program, so decoding requests keep
+        their token cadence through a neighbor request's prefill. The
+        knob stays adjustable live
+        (:meth:`ServingSession.set_iteration_token_budget`) — an
+        autoscale hook can trade TBT against TTFT mid-run without
+        re-registering.
+
         Units: ``prompt_len`` / ``gen_lens`` / ``bucket`` /
-        ``prefill_chunk_tokens`` are token counts; ``eu_budget`` is
-        execution units (ME+VE engines)."""
+        ``prefill_chunk_tokens`` / ``iteration_token_budget`` are
+        token counts; ``eu_budget`` is execution units (ME+VE
+        engines)."""
         if isinstance(gen_lens, GenLenDistribution):
             dist: Optional[GenLenDistribution] = gen_lens
             gen_len = max(int(round(gen_lens.mean)), 1)
@@ -284,7 +297,8 @@ class NPUCluster:
             max_gen = gen_len
         plan = request_plan(cfg, batch, prompt_len, gen_len,
                             core=self.core, max_gen=max_gen, bucket=bucket,
-                            prefill_chunk_tokens=prefill_chunk_tokens)
+                            prefill_chunk_tokens=prefill_chunk_tokens,
+                            iteration_token_budget=iteration_token_budget)
         return self.register(name, plan.profile_trace(), eu_budget,
                              plan=plan, gen_lens=dist, **kw)
 
@@ -421,12 +435,15 @@ class NPUCluster:
 # closed-loop helper (paper figures, legacy MultiTenantServer)
 # ----------------------------------------------------------------------
 def run_closed_loop(cluster: NPUCluster, n_requests: int = 8,
-                    hbm_scale: float = 1.0,
+                    hbm_scale: float = 1.0, fast_path: bool = True,
                     ) -> Tuple[SimResult, List[TenantReport]]:
     """Batch-mode run: every registered tenant replays its program
     ``n_requests`` times back to back (the paper's §V-A methodology).
     Generative tenants replay their full phase chain (prefill + the
-    default generation length of decode steps) per request."""
+    default generation length of decode steps) per request.
+    ``fast_path=False`` selects the simulator's reference
+    implementations (result-identical; see :class:`Simulator`) — the
+    fig25 fast-path benchmark row uses it for its A/B proof."""
     specs = []
     for h in cluster.tenants:
         if h.plan is not None:
@@ -438,7 +455,7 @@ def run_closed_loop(cluster: NPUCluster, n_requests: int = 8,
             specs.append(TenantSpec(cluster.compile(h.trace), h.vnpu,
                                     n_requests, weight=h.priority))
     res = Simulator(specs, policy=cluster.policy_cls, core=cluster.core,
-                    hbm_scale=hbm_scale).run()
+                    hbm_scale=hbm_scale, fast_path=fast_path).run()
     return res, reports_from_result(cluster.tenants, res, cluster.core)
 
 
@@ -612,6 +629,48 @@ class ServingSession:
         if handle.sim_idx >= 0:
             self.sim.remove_tenant(handle.sim_idx)
         self.cluster.deregister(handle)
+
+    def set_iteration_token_budget(self, handle: TenantHandle,
+                                   tokens: int) -> None:
+        """Adjust a generative tenant's per-iteration token budget
+        LIVE (tokens; 0 disables piggybacking). Takes effect at the
+        tenant's next iteration start — in-flight work finishes at its
+        compiled cost. This is the knob an autoscale hook turns to
+        trade decode cadence (bigger budget = larger prefill slices,
+        faster TTFT) against TBT (smaller slices = shorter
+        iterations); tenants registered with static
+        ``prefill_chunk_tokens`` must re-register instead (the knobs
+        are mutually exclusive).
+
+        Disabling (``tokens=0``) RESTARTS any request parked
+        mid-slice: the unset engine only has the whole-prompt
+        monolithic program, so the partially-ingested KV is dropped
+        and the prompt re-ingests from token 0 (the cost of the
+        policy change is paid explicitly, never silently
+        double-counted)."""
+        if handle.plan is None:
+            raise ValueError(
+                f"tenant {handle.name!r} is not generative; there is "
+                f"no iteration budget to set")
+        if tokens < 0:
+            raise ValueError(f"budget must be >= 0 tokens, got {tokens}")
+        if tokens > 0 and handle.plan.chunked:
+            raise ValueError(
+                f"tenant {handle.name!r} uses static prefill_chunk_tokens="
+                f"{handle.plan.prefill_chunk_tokens}; the adaptive budget "
+                f"replaces that knob — re-register without it")
+        rt = self._rt(handle)
+        if tokens > 0 and not rt.plan.can_piggyback:
+            raise ValueError(
+                f"tenant {handle.name!r} was compiled without a piggyback "
+                f"builder; re-register through register_generative")
+        handle.plan.iteration_token_budget = int(tokens)
+        rt.plan.iteration_token_budget = int(tokens)
+        if tokens == 0:
+            # back to the monolithic engine; the simulator resets any
+            # mid-slice ingestion cursor when it next picks such a
+            # request (the restart documented above)
+            rt.force_prefill = False
 
     def resize(self, handle: TenantHandle, eu_budget: int) -> TenantHandle:
         """Re-size a tenant mid-run (the paper's reconfigure hypercall
