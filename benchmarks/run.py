@@ -29,6 +29,7 @@ from benchmarks import (
     fig26_hbm,
     fig_chunked_prefill,
     fig_colocation,
+    fig_kv_pressure,
     table3_harvest_overhead,
 )
 
@@ -42,6 +43,7 @@ SUITES = {
     "fig26": fig26_hbm,
     "fig_colocation": fig_colocation,
     "fig_chunked_prefill": fig_chunked_prefill,
+    "fig_kv_pressure": fig_kv_pressure,
 }
 
 # "chat_ttft_p95=0.0063ms" / "speedup=1.50x" / "interleaved=9" ->

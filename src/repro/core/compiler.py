@@ -160,6 +160,7 @@ AnyProgram = Union[NeuISAProgram, VLIWProgram]
 PREFILL = "prefill"
 DECODE = "decode"
 PIGGYBACK = "piggyback"   # one fused prefill-chunk + decode-batch program
+SWAPIN = "swapin"         # KV restore of an evicted (swapped) request
 
 
 @dataclass
@@ -167,11 +168,16 @@ class CompiledPhase:
     """One phase of a compiled request: the program the scheduler
     replays for it, plus the context it was compiled at (``context``
     is in TOKENS: the decode bucket ceiling, or — for a prefill chunk
-    — the prompt tokens ingested once this chunk completes)."""
+    — the prompt tokens ingested once this chunk completes).
+    ``est_cycles`` is the phase trace's ideal-parallel lower bound on
+    the full core (cycles) — the per-step service estimate
+    PREMA-style eviction victim selection multiplies by
+    tokens-remaining."""
 
     kind: str                    # "prefill" | "decode" | "" (legacy)
     program: AnyProgram
     context: int = 0
+    est_cycles: float = 0.0
 
 
 @dataclass
@@ -214,6 +220,16 @@ class CompiledRequestPlan:
         field(default=None, repr=False, compare=False)
     _piggy_memo: Dict[Tuple, CompiledPhase] = \
         field(default_factory=dict, repr=False, compare=False)
+    # live KV-cache accounting (bytes; 0 disables the ledger path) —
+    # see RequestPlan.kv_token_bytes. `_swapin` builds the HBM
+    # re-read program an evicted request replays on resume, one per
+    # decode context bucket through the shared cache.
+    kv_token_bytes: float = 0.0
+    weight_bytes: float = 0.0
+    _swapin: Optional[Callable[[int], AnyProgram]] = \
+        field(default=None, repr=False, compare=False)
+    _swapin_memo: Dict[int, CompiledPhase] = \
+        field(default_factory=dict, repr=False, compare=False)
 
     @property
     def has_decode(self) -> bool:
@@ -251,27 +267,74 @@ class CompiledRequestPlan:
 
     def piggyback_phase(self, chunk_tokens: int, kv_prior: int,
                         decode_batch: int, decode_ctx: int,
-                        final: bool = False) -> CompiledPhase:
+                        final: bool = False,
+                        decode_groups: Optional[Tuple[Tuple[int, int], ...]]
+                        = None) -> CompiledPhase:
         """Fused (prefill slice + decode batch) phase for one budgeted
         iteration, compiled on first use and memoized. Callers pass
         QUANTIZED arguments (the simulator quantizes; see the class
         docstring) — the exact token bookkeeping stays with the
-        runtime, these programs are the cost proxy. ``context`` on the
-        returned phase is the prompt tokens ingested once the slice
-        completes (cost-grid tokens, not exact)."""
+        runtime, these programs are the cost proxy.
+
+        ``decode_groups`` (``((batch_bucket, ctx_bucket), ...)``,
+        sorted) costs each rider's decode share at ITS OWN context
+        bucket instead of the largest live bucket — the simulator
+        passes it whenever the live batch straddles buckets; the
+        legacy single-bucket arguments stay the calling convention
+        (and cache key) when it doesn't, so single-bucket programs
+        are byte-identical to the pre-grouping compiler. The memo
+        stays bounded either way: group tuples are drawn from the
+        finite (bucket x batch-bucket) grid.
+
+        ``context`` on the returned phase is the prompt tokens
+        ingested once the slice completes (cost-grid tokens, not
+        exact)."""
         if self._piggyback is None:
             raise ValueError(
                 f"plan {self.name!r} was compiled without a piggyback "
                 f"builder (non-generative RequestPlan)")
-        key = (chunk_tokens, kv_prior, decode_batch, decode_ctx, final)
+        key = (chunk_tokens, kv_prior, decode_batch, decode_ctx, final,
+               decode_groups)
         ph = self._piggy_memo.get(key)
         if ph is None:
             ph = CompiledPhase(
                 PIGGYBACK,
                 self._piggyback(chunk_tokens, kv_prior, decode_batch,
-                                decode_ctx, final),
+                                decode_ctx, final,
+                                decode_groups=decode_groups),
                 context=kv_prior + chunk_tokens)
             self._piggy_memo[key] = ph
+        return ph
+
+    @property
+    def kv_prompt_bytes(self) -> float:
+        """KV bytes the whole prompt writes (the cumulative
+        prefill-side charge; admission must test THIS against the KV
+        budget, not a single chunk's share)."""
+        return self.prompt_len * self.kv_token_bytes
+
+    @property
+    def can_swapin(self) -> bool:
+        """True when on-demand KV-restore programs are available."""
+        return self._swapin is not None
+
+    def swapin_phase(self, context: int) -> CompiledPhase:
+        """KV-restore phase for an evicted request resuming at
+        ``context`` tokens, compiled per decode bucket on first use
+        (the re-read is costed at the bucket ceiling, like every
+        decode-side program; the ledger's byte bookkeeping stays
+        exact)."""
+        if self._swapin is None:
+            raise ValueError(
+                f"plan {self.name!r} was compiled without a swap-in "
+                f"builder (no live KV accounting)")
+        bucket = (self.decode_phase_for(context).context
+                  if self.decode else context)
+        ph = self._swapin_memo.get(bucket)
+        if ph is None:
+            ph = CompiledPhase(SWAPIN, self._swapin(bucket),
+                               context=bucket)
+            self._swapin_memo[bucket] = ph
         return ph
 
 
@@ -346,17 +409,27 @@ def compile_request_plan(
         prefill = CompiledPhase(PREFILL,
                                 cache.compile(plan.prefill, core, isa),
                                 context=plan.prompt_len)
-    decode = [CompiledPhase(DECODE, cache.compile(tr, core, isa), context=ctx)
+    decode = [CompiledPhase(DECODE, cache.compile(tr, core, isa),
+                            context=ctx,
+                            est_cycles=tr.ideal_cycles(core.n_me, core.n_ve))
               for ctx, tr in plan.decode]
     piggyback = None
     if plan.piggyback_builder is not None:
         builder = plan.piggyback_builder
 
         def piggyback(chunk_tokens: int, kv_prior: int, decode_batch: int,
-                      decode_ctx: int, final: bool) -> AnyProgram:
+                      decode_ctx: int, final: bool,
+                      decode_groups=None) -> AnyProgram:
             tr = builder(chunk_tokens, kv_prior, decode_batch, decode_ctx,
-                         final)
+                         final, decode_groups=decode_groups)
             return cache.compile(tr, core, isa)
+
+    swapin = None
+    if plan.swapin_builder is not None:
+        swapin_builder = plan.swapin_builder
+
+        def swapin(context: int) -> AnyProgram:
+            return cache.compile(swapin_builder(context), core, isa)
 
     return CompiledRequestPlan(
         name=plan.name, prefill=prefill, decode=decode,
@@ -364,6 +437,9 @@ def compile_request_plan(
         prefill_chunks=chunks,
         iteration_token_budget=plan.iteration_token_budget,
         _piggyback=piggyback,
+        kv_token_bytes=plan.kv_token_bytes,
+        weight_bytes=plan.weight_bytes,
+        _swapin=swapin,
     )
 
 

@@ -17,7 +17,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.vnpu import MemorySegments, VNPU, VNPUConfig, VNPUState
+from repro.core.vnpu import (KVLedger, KVLedgerError, MemorySegments, VNPU,
+                             VNPUConfig, VNPUState)
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
 
@@ -132,18 +133,41 @@ class VNPUManager:
         All-or-nothing: if the new config cannot be placed, the old
         mapping is restored and :class:`ReconfigureError` is raised
         carrying the restored vNPU (live control planes must keep a
-        valid handle — a failed grow must not kill the tenant)."""
+        valid handle — a failed grow must not kill the tenant).
+
+        The vNPU's KV ledger (live per-request HBM occupancy) is
+        carried to the new mapping. A resize whose HBM allocation
+        cannot hold the live occupancy is REJECTED the same
+        all-or-nothing way: callers must evict/swap the excess first —
+        shrinking segments out from under resident KV would corrupt
+        tenant state."""
         mapping = v.mapping
         old_cfg = v.config
+        old_ledger = v.kv_ledger
         self.destroy(v)
-        try:
-            return self.create(cfg, name=v.name, mapping=mapping)
-        except RuntimeError as exc:
+
+        def _restore() -> VNPU:
             restored = self.create(old_cfg, name=v.name, mapping=mapping)
+            if old_ledger is not None:
+                restored.kv_ledger.migrate_from(old_ledger)
+            return restored
+
+        try:
+            nv = self.create(cfg, name=v.name, mapping=mapping)
+        except RuntimeError as exc:
             raise ReconfigureError(
                 f"reconfigure of vNPU {v.name!r} to "
                 f"{cfg.n_me}ME/{cfg.n_ve}VE failed ({exc}); "
-                f"previous mapping restored", restored) from exc
+                f"previous mapping restored", _restore()) from exc
+        if old_ledger is not None:
+            try:
+                nv.kv_ledger.migrate_from(old_ledger)
+            except KVLedgerError as exc:
+                self.destroy(nv)
+                raise ReconfigureError(
+                    f"reconfigure of vNPU {v.name!r} rejected: {exc}; "
+                    f"previous mapping restored", _restore()) from exc
+        return nv
 
     # ------------------------------------------------------------------
     def _core_of(self, v: VNPU) -> Optional[CoreState]:
@@ -198,6 +222,8 @@ class VNPUManager:
             v.me_ids = tuple(range(cfg.n_me))   # logical ids
             v.ve_ids = tuple(range(cfg.n_ve))
         v.segments = self._alloc_segments(cs, cfg)
+        # live HBM accounting over exactly the segments this vNPU owns
+        v.kv_ledger = KVLedger(v.segments.hbm_bytes, cs.core.hbm_segment)
         cs.residents.append(v.vnpu_id)
         v.pnpu_id, v.core_id = cs.pnpu_id, cs.core_id
         v.state = VNPUState.MAPPED

@@ -534,3 +534,36 @@ class PMTPolicy(SchedulerPolicy):
     def on_tenant_removed(self, sim: "Simulator", rt) -> None:
         if self._last == rt.idx:
             self._last = -1
+
+
+# ----------------------------------------------------------------------
+# KV-pressure eviction victim selection (PREMA-style, arXiv 1909.04548)
+# ----------------------------------------------------------------------
+def estimated_remaining_cycles(plan, req, context: int) -> float:
+    """PREMA-style per-request service estimate: decode tokens
+    remaining x the per-step cost of the request's CURRENT context
+    bucket (``CompiledPhase.est_cycles``, the ideal-parallel lower
+    bound of the bucket's decode trace). Requests still mid-prefill
+    count their full generation. Units: cycles."""
+    steps = max(req.gen_len - max(req.tokens_done, 1), 0) + 1
+    if not plan.has_decode:
+        return float(steps)
+    return steps * max(plan.decode_phase_for(context).est_cycles, 1.0)
+
+
+def pick_eviction_victim(requests, plan, context_of):
+    """Choose which in-flight decoding request loses its KV segments
+    when a tenant's continuous batch outgrows its HBM budget: the one
+    with the LARGEST estimated remaining service (it would occupy the
+    segments longest, so parking it frees the most byte-time for the
+    short requests whose TBT the SLO watches — PREMA's
+    estimate-driven preemption applied to memory instead of compute).
+    Deterministic: ties break toward the latest arrival, then the
+    candidate list order."""
+    best, best_key = None, None
+    for i, req in enumerate(requests):
+        key = (estimated_remaining_cycles(plan, req, context_of(req)),
+               req.arrival, i)
+        if best_key is None or key > best_key:
+            best, best_key = req, key
+    return best

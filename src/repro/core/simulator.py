@@ -51,6 +51,17 @@ dispatch spans, incremental HBM-contention and harvest-squatter
 bookkeeping, precomputed μTOp expansion, the tightened neu10 schedule
 pass); ``benchmarks/fig25_scaling.py`` pins both the equality and the
 speedup.
+
+With ``TenantSpec.kv_policy`` set, KV-cache occupancy is a live
+simulator resource: every prefill chunk/slice and decode token
+charges its KV bytes against the tenant vNPU's
+:class:`~repro.core.vnpu.KVLedger` at the phase boundary, and when
+the continuous batch outgrows the tenant's HBM segments a PREMA-style
+victim (largest tokens-remaining x bucket-cost estimate) is evicted:
+swapped out and later resumed through an HBM re-read program
+(``"evict"``), or aborted back to admission (``"reject"``).
+``kv_policy=""`` (the default) keeps every path bit-identical to the
+static-``hbm_footprint`` engine — the KV goldens pin it.
 """
 from __future__ import annotations
 
@@ -61,10 +72,11 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.compiler import (DECODE, PIGGYBACK, CompiledPhase,
+from repro.core.compiler import (DECODE, PIGGYBACK, SWAPIN, CompiledPhase,
                                  CompiledRequestPlan)
 from repro.core.neuisa import ME, VE, MuTOpGroup, NeuISAProgram, VLIWProgram
-from repro.core.policies import PolicyLike, resolve_policy
+from repro.core.policies import (PolicyLike, pick_eviction_victim,
+                                 resolve_policy)
 from repro.core.stats import mean as _mean
 from repro.core.stats import percentile
 from repro.core.vnpu import VNPU
@@ -151,12 +163,21 @@ class TenantSpec:
     # phase-structured requests (prefill -> decode chain); when None,
     # ``program`` runs as a degenerate single-phase plan
     plan: Optional[CompiledRequestPlan] = None
+    # live KV-cache accounting policy: "" (off — static hbm_footprint,
+    # bit-identical to the ledger-less engine), "evict" (PREMA victim
+    # swap-out + HBM re-read resume), or "reject" (victims abort back
+    # to admission and restart from scratch)
+    kv_policy: str = ""
 
     def __post_init__(self) -> None:
         if self.program is None and self.plan is None:
             raise ValueError("TenantSpec needs a program or a plan")
         if self.vnpu is None:
             raise ValueError("TenantSpec needs a vnpu")
+        if self.kv_policy not in ("", "evict", "reject"):
+            raise ValueError(
+                f"unknown kv_policy {self.kv_policy!r}; "
+                f"use '' (off), 'evict' or 'reject'")
 
 
 class _Request:
@@ -168,15 +189,21 @@ class _Request:
     phases in ``chunks_done`` instead."""
 
     __slots__ = ("arrival", "gen_len", "tokens_done", "last_token_t",
-                 "chunks_done", "prefill_done")
+                 "chunks_done", "prefill_done", "rid", "ttft_seen",
+                 "kv_swapped")
 
-    def __init__(self, arrival: float, gen_len: int = 1):
+    def __init__(self, arrival: float, gen_len: int = 1, rid: int = 0):
         self.arrival = arrival
         self.gen_len = max(int(gen_len), 1)
         self.tokens_done = 0
         self.last_token_t = arrival
         self.chunks_done = 0
         self.prefill_done = 0
+        self.rid = rid               # KV-ledger allocation key
+        self.ttft_seen = False       # first token already sampled (a
+                                     # reject-mode restart must not
+                                     # re-sample TTFT)
+        self.kv_swapped = 0          # bytes to restore on swap-in resume
 
 
 @dataclass
@@ -213,6 +240,21 @@ class TenantStats:
                                      # one prefill slice
     fused_groups: int = 0            # decode μTOps this tenant co-issued
                                      # into a neighbor's prefill group
+    # ---- live KV-cache ledger (all zero with kv_policy unset) ----
+    kv_evictions: int = 0            # requests whose KV lost its segments
+                                     # under pressure (either kv policy)
+    kv_swapins: int = 0              # evicted requests resumed after the
+                                     # swap-in HBM re-read ("evict")
+    kv_restarts: int = 0             # "reject": victims aborted back to
+                                     # admission (re-prefill from token 0)
+    kv_rejected: int = 0             # requests dropped outright: their KV
+                                     # can never fit the tenant's segments
+    kv_truncated: int = 0            # requests force-finished early: no
+                                     # co-tenant victim left to evict
+    kv_swapped_bytes: float = 0.0    # cumulative bytes swapped out
+    kv_peak_bytes: float = 0.0       # peak ledger occupancy (bytes,
+                                     # weights + live KV)
+    kv_peak_segments: int = 0        # peak HBM isolation segments occupied
     me_work: float = 0.0
     ve_work: float = 0.0
     harvested_me_work: float = 0.0   # work done on non-owned MEs
@@ -348,6 +390,20 @@ class _TenantRT:
         self.force_prefill = False        # a decode-only iteration just ran
                                           # because the batch ate the whole
                                           # budget: floor the next slice
+        # live KV accounting (inert unless the spec sets a kv_policy
+        # AND the plan carries per-token KV bytes)
+        self.kv_policy = spec.kv_policy
+        self.kv_enabled = bool(spec.kv_policy) \
+            and self.plan.kv_token_bytes > 0
+        if (self.kv_enabled and self.kv_policy == "evict"
+                and not self.plan.can_swapin):
+            raise ValueError(
+                f"tenant plan {self.plan.name!r} has no swap-in builder; "
+                f"kv_policy='evict' needs one (compile the plan from a "
+                f"trace-layer request_plan)")
+        self.swapped: List[_Request] = []  # evicted, awaiting swap-in
+        self._rid = itertools.count()      # per-request ledger keys
+        self._t = 0.0                      # time of the current pick
         self.ready_me: List[Chunk] = []
         self.ready_ve: List[Chunk] = []
         self.loop_remaining: Dict[int, int] = {}
@@ -358,22 +414,28 @@ class _TenantRT:
     @property
     def in_flight(self) -> int:
         """Requests admitted but not completed."""
-        n = len(self.waiting) + len(self.prefilling) + len(self.decoding)
+        n = (len(self.waiting) + len(self.prefilling)
+             + len(self.decoding) + len(self.swapped))
         if self.in_request:
             if self.active_kind == PIGGYBACK:
                 n += 1   # the slice owner; co-riders stay in `decoding`
-            elif self.active_kind != DECODE:
+            elif self.active_kind not in (DECODE, SWAPIN):
                 n += len(self.active)
+            elif self.active_kind == SWAPIN:
+                n += 1   # the resuming request left every queue
         return n
 
     def _context_of(self, req: _Request) -> int:
         """KV context of the request's NEXT decode step."""
         return self.plan.prompt_len + req.tokens_done + 1
 
+    def _new_request(self, arrival: float, gen_len: int) -> _Request:
+        return _Request(arrival, gen_len, rid=next(self._rid))
+
     def start_request(self, t: float, arrival: Optional[float] = None,
                       gen_len: Optional[int] = None) -> None:
         """Admit one request (closed-loop kick / legacy entry point)."""
-        self.waiting.append(_Request(
+        self.waiting.append(self._new_request(
             t if arrival is None else arrival,
             self.plan.gen_len if gen_len is None else gen_len))
         if not self.in_request:
@@ -389,10 +451,19 @@ class _TenantRT:
         if a prefill chunk just yielded, else the next prefill chunk
         of the request mid-prefill, else a waiting request's (first)
         prefill, else one shared decode step over every in-flight
-        decoding request."""
+        decoding request. KV-accounted tenants route through the
+        ledger-aware variants (:meth:`_pick_phase_kv`, or the gated
+        checks inside :meth:`_pick_budgeted`)."""
+        self._t = t
         budgeted = (self.plan.iteration_token_budget > 0
                     and self.plan.can_piggyback)
-        if not (self._pick_budgeted() if budgeted else self._pick_phase()):
+        if budgeted:
+            picked = self._pick_budgeted()
+        elif self.kv_enabled:
+            picked = self._pick_phase_kv()
+        else:
+            picked = self._pick_phase()
+        if not picked:
             return
         self.in_request = True
         self.cursor = -1
@@ -429,6 +500,200 @@ class _TenantRT:
             return False
         return True
 
+    # ---------------- live KV-cache ledger ----------------
+    def _kv_led(self):
+        """The tenant vNPU's live ledger, or None when KV accounting
+        is off (re-read per call: a live resize swaps the vNPU — and
+        its migrated ledger — under the runtime)."""
+        if not self.kv_enabled:
+            return None
+        v = self.spec.vnpu
+        return None if v is None else v.kv_ledger
+
+    def _kv_charge(self, led, req: _Request, nbytes: float) -> bool:
+        """Charge ``nbytes`` of KV growth to ``req``; mirrors the
+        ledger's peak occupancy into the tenant stats."""
+        if nbytes <= 0:
+            return True
+        if not led.alloc(req.rid, nbytes):
+            return False
+        st = self.stats
+        if led.peak_bytes > st.kv_peak_bytes:
+            st.kv_peak_bytes = led.peak_bytes
+        if led.peak_segments > st.kv_peak_segments:
+            st.kv_peak_segments = led.peak_segments
+        return True
+
+    def _kv_phase_tokens(self, req: _Request) -> int:
+        """Prompt tokens the request's NEXT prefill phase ingests
+        (whole prompt when monolithic; this chunk's share when
+        chunked) — the prefill-side KV write charged at admission."""
+        phases = self.plan.prefill_phases()
+        i = min(req.chunks_done, len(phases) - 1)
+        prev = phases[i - 1].context if i > 0 else 0
+        return max(phases[i].context - prev, 0)
+
+    def _kv_evict_one(self, t: float,
+                      exclude: Optional[_Request] = None) -> bool:
+        """Free one victim's KV segments under pressure. The victim is
+        the PREMA-style pick (largest tokens-remaining x bucket-cost
+        service estimate — see
+        :func:`repro.core.policies.pick_eviction_victim`); under
+        ``"evict"`` its KV swaps out (HBM re-read on resume), under
+        ``"reject"`` it aborts back to admission and restarts from
+        token 0. Returns False when no candidate exists."""
+        cands = [r for r in self.decoding if r is not exclude]
+        if not cands:
+            return False
+        victim = pick_eviction_victim(cands, self.plan, self._context_of)
+        self.decoding.remove(victim)
+        led = self._kv_led()
+        freed = led.release(victim.rid)
+        st = self.stats
+        st.kv_evictions += 1
+        if self.kv_policy == "evict":
+            victim.kv_swapped = freed
+            st.kv_swapped_bytes += freed
+            self.swapped.append(victim)
+        else:
+            st.kv_restarts += 1
+            victim.tokens_done = 0
+            victim.prefill_done = 0
+            victim.chunks_done = 0
+            self.waiting.appendleft(victim)
+        return True
+
+    def _kv_admit_decode(self, t: float) -> None:
+        """Charge one token of KV growth per decoding request (the
+        token the next shared iteration emits). When the batch's
+        growth outgrows the tenant's segments, evict victims until
+        the remainder fits; a lone request that cannot grow is
+        force-finished (single-request OOM) rather than deadlocked."""
+        led = self._kv_led()
+        if led is None or not self.decoding:
+            return
+        per = self.plan.kv_token_bytes
+        charged = set()
+        idx = 0
+        while idx < len(self.decoding):
+            req = self.decoding[idx]
+            if req.rid in charged or self._kv_charge(led, req, per):
+                charged.add(req.rid)
+                idx += 1
+                continue
+            if self._kv_evict_one(t, exclude=req):
+                idx = 0   # indices shifted; `charged` skips re-charges
+                continue
+            self.decoding.pop(idx)
+            self.stats.kv_truncated += 1
+            self._complete_request(req, t)
+
+    def _kv_try_swapin(self, t: float):
+        """Resume the longest-parked evicted request when its KV fits
+        again, with one decode round of headroom so the resume does
+        not instantly re-trigger the eviction it came from. Returns
+        True (swap-in iteration set up), None (a permanently
+        unfittable request was dropped — caller retries), or False
+        (nothing to resume / still no room)."""
+        if not self.swapped:
+            return False
+        led = self._kv_led()
+        req = self.swapped[0]
+        need = req.kv_swapped
+        if need > led.capacity - led.reserved:
+            # a shrink-resize left this context permanently unfittable
+            self.swapped.pop(0)
+            self.stats.kv_truncated += 1
+            self._complete_request(req, t)
+            return None
+        headroom = (len(self.decoding) + 1) * self.plan.kv_token_bytes
+        headroom = min(headroom, max(led.capacity - led.reserved - need, 0))
+        if not led.fits(need + headroom):
+            return False
+        self.swapped.pop(0)
+        self._kv_charge(led, req, need)
+        req.kv_swapped = 0
+        ph = self.plan.swapin_phase(self.plan.prompt_len + req.tokens_done)
+        self.active = [req]
+        self.active_kind = SWAPIN
+        self.cur_program = ph.program
+        return True
+
+    def _kv_admit_prefill(self):
+        """Admission under the ledger: start the next prefill
+        chunk/prompt only if its KV write fits. Returns True
+        (iteration set up), None (an unfittable request was dropped —
+        caller retries), or False (blocked on memory / nothing to
+        admit; FIFO order is preserved)."""
+        if not (self.prefilling or self.waiting):
+            return False
+        led = self._kv_led()
+        from_prefilling = bool(self.prefilling)
+        req = (self.prefilling.pop(0) if from_prefilling
+               else self.waiting.popleft())
+        if req.prefill_done:
+            # budget knob disabled mid-slice: ingestion restarts from
+            # token 0 (same rule as _pick_phase) — the partial KV is
+            # dropped, so its ledger share frees too
+            req.prefill_done = 0
+            led.release(req.rid)
+        tokens = self._kv_phase_tokens(req)
+        need = tokens * self.plan.kv_token_bytes
+        if self._kv_charge(led, req, need):
+            self.active = [req]
+            phases = self.plan.prefill_phases()
+            ph = phases[min(req.chunks_done, len(phases) - 1)]
+            self.active_kind = ph.kind
+            self.cur_program = ph.program
+            return True
+        if self.plan.kv_prompt_bytes > led.capacity - led.reserved:
+            # the WHOLE prompt can never fit this tenant's segments
+            # (checked cumulatively, not per chunk — a request whose
+            # chunks fit one at a time but whose total cannot would
+            # otherwise wedge mid-prefill holding partial KV):
+            # admission reject, surfaced through kv_rejected
+            led.release(req.rid)
+            self.stats.kv_rejected += 1
+            return None
+        if from_prefilling:
+            self.prefilling.insert(0, req)
+        else:
+            self.waiting.appendleft(req)
+        return False
+
+    def _pick_phase_kv(self) -> bool:
+        """Ledger-aware iteration selection (KV accounting on, budget
+        unset): the PR-3 phase rules extended with swap-in resumes,
+        prompt-KV admission gating, and decode-growth charging with
+        PREMA eviction. KV-disabled tenants never enter here — their
+        scheduling stays bit-identical (:meth:`_pick_phase`)."""
+        t = self._t
+        for _ in range(100_000):
+            if not self.decoding:
+                self.yield_to_decode = False   # nothing to yield to
+            pick_decode = self.decoding and (
+                self.yield_to_decode
+                or not (self.prefilling or self.waiting or self.swapped))
+            if not pick_decode:
+                got = self._kv_try_swapin(t)
+                if got:
+                    return True
+                if got is None:
+                    continue
+                got = self._kv_admit_prefill()
+                if got:
+                    return True
+                if got is None:
+                    continue
+            if self.decoding:
+                self._kv_admit_decode(t)
+                if self.decoding:
+                    self._begin_decode()
+                    return True
+                continue   # batch dissolved under pressure: re-pick
+            return False
+        raise RuntimeError("KV admission livelock")   # pragma: no cover
+
     def _begin_decode(self) -> None:
         """Set up one shared decode iteration over every in-flight
         decoding request. The step's cost is the largest live context
@@ -456,47 +721,120 @@ class _TenantRT:
         every other iteration; the slice is capped at the remaining
         prompt (the final slice may be partial). Program cost is
         looked up on the quantized grid (slice tokens, position,
-        batch bucket, context bucket) while token bookkeeping stays
-        exact. Returns False when the tenant idles."""
-        if not (self.prefilling or self.waiting):
-            if not self.decoding:
-                return False
-            self._begin_decode()    # no prompt left to slice
+        batch bucket, per-rider context buckets) while token
+        bookkeeping stays exact.
+
+        KV-accounted tenants additionally charge the ledger here:
+        riders' decode growth first (with PREMA eviction under
+        pressure), then the slice's prompt-KV write — a slice shrinks
+        to the bytes available (never below the floor; with no room
+        for even a floored slice the prompt parks and the decode
+        cadence continues; a prompt whose TOTAL KV can never fit is
+        rejected). Returns False when the tenant idles."""
+        t = self._t
+        led = self._kv_led()
+        for _ in range(100_000):   # bounded: each retry dropped or
+            if led is not None:    # evicted a request
+                got = self._kv_try_swapin(t)
+                if got:
+                    return True
+                if got is None:
+                    continue       # a parked request dropped: re-pick
+            if not (self.prefilling or self.waiting):
+                if not self.decoding:
+                    return False
+                if led is not None:
+                    self._kv_admit_decode(t)
+                    if not self.decoding:
+                        continue   # batch dissolved: re-pick
+                self._begin_decode()    # no prompt left to slice
+                return True
+            budget = self.plan.iteration_token_budget
+            if led is not None and self.decoding:
+                # every budgeted iteration below serves the live batch
+                # (fused or decode-only): charge its growth now
+                self._kv_admit_decode(t)
+            batch = len(self.decoding)
+            bb = batch_bucket(batch)
+            slice_ = budget - bb
+            if (batch and slice_ < PIGGYBACK_CHUNK_FLOOR
+                    and not self.force_prefill):
+                # over-subscribed: the decode batch alone fills the
+                # budget
+                self.force_prefill = True
+                self._begin_decode()
+                return True
+            self.force_prefill = False
+            from_prefilling = bool(self.prefilling)
+            if from_prefilling:
+                req = self.prefilling.pop(0)
+            else:
+                req = self.waiting.popleft()
+            remaining = max(self.plan.prompt_len - req.prefill_done, 1)
+            slice_ = min(max(slice_, min(PIGGYBACK_CHUNK_FLOOR, remaining)),
+                         remaining)
+            if led is not None:
+                per = self.plan.kv_token_bytes
+                floor_tok = min(PIGGYBACK_CHUNK_FLOOR, remaining)
+                if self.plan.kv_prompt_bytes > led.capacity - led.reserved:
+                    # the whole prompt can never fit (cumulative
+                    # check, like _kv_admit_prefill): reject
+                    led.release(req.rid)
+                    self.stats.kv_rejected += 1
+                    continue
+                fit = int(led.available // per) if per > 0 else slice_
+                if fit < floor_tok:
+                    # no memory for even a floored slice: the prompt
+                    # waits for admission; decode cadence keeps running
+                    if from_prefilling:
+                        self.prefilling.insert(0, req)
+                    else:
+                        self.waiting.appendleft(req)
+                    if self.decoding:
+                        self._begin_decode()
+                        return True
+                    return False
+                slice_ = min(slice_, fit)
+                self._kv_charge(led, req, slice_ * per)
+            final = req.prefill_done + slice_ >= self.plan.prompt_len
+            q = PIGGYBACK_TOKEN_QUANT
+            cost_tokens = -(-slice_ // q) * q
+            pq = PIGGYBACK_POS_QUANT
+            pos = -(-req.prefill_done // pq) * pq if req.prefill_done else 0
+            phase = self._piggyback_phase_for(cost_tokens, pos, final)
+            self.active = [req] + (list(self.decoding)
+                                   if self.decoding else [])
+            self.piggy_req = req
+            self.piggy_slice = slice_
+            self.active_kind = PIGGYBACK
+            self.cur_program = phase.program
+            self.yield_to_decode = False
             return True
-        budget = self.plan.iteration_token_budget
-        batch = len(self.decoding)
-        bb = batch_bucket(batch)
-        slice_ = budget - bb
-        if batch and slice_ < PIGGYBACK_CHUNK_FLOOR and not self.force_prefill:
-            # over-subscribed: the decode batch alone fills the budget
-            self.force_prefill = True
-            self._begin_decode()
-            return True
-        self.force_prefill = False
-        if self.prefilling:
-            req = self.prefilling.pop(0)
-        else:
-            req = self.waiting.popleft()
-        remaining = max(self.plan.prompt_len - req.prefill_done, 1)
-        slice_ = min(max(slice_, min(PIGGYBACK_CHUNK_FLOOR, remaining)),
-                     remaining)
-        final = req.prefill_done + slice_ >= self.plan.prompt_len
-        q = PIGGYBACK_TOKEN_QUANT
-        cost_tokens = -(-slice_ // q) * q
-        pq = PIGGYBACK_POS_QUANT
-        pos = -(-req.prefill_done // pq) * pq if req.prefill_done else 0
-        ctx = 0
-        if batch:
-            live = max(self._context_of(r) for r in self.decoding)
-            ctx = self.plan.decode_phase_for(live).context
-        phase = self.plan.piggyback_phase(cost_tokens, pos, bb, ctx, final)
-        self.active = [req] + (list(self.decoding) if batch else [])
-        self.piggy_req = req
-        self.piggy_slice = slice_
-        self.active_kind = PIGGYBACK
-        self.cur_program = phase.program
-        self.yield_to_decode = False
-        return True
+        raise RuntimeError("KV admission livelock")   # pragma: no cover
+
+    def _piggyback_phase_for(self, cost_tokens: int, pos: int,
+                             final: bool) -> CompiledPhase:
+        """Fused-phase lookup for the live decode batch. Riders are
+        costed at their OWN context bucket: the batch is grouped per
+        bucket and each group's decode share priced there, so a
+        small-context rider no longer pays the largest live bucket's
+        KV stream. A single-bucket batch keeps the legacy
+        (batch-bucket, ctx) cache key — those programs stay
+        byte-identical to the pre-grouping engine."""
+        if not self.decoding:
+            return self.plan.piggyback_phase(cost_tokens, pos, 0, 0, final)
+        per: Dict[int, int] = {}
+        for r in self.decoding:
+            c = self.plan.decode_phase_for(self._context_of(r)).context
+            per[c] = per.get(c, 0) + 1
+        bb = batch_bucket(len(self.decoding))
+        if len(per) == 1:
+            ctx = next(iter(per))
+            return self.plan.piggyback_phase(cost_tokens, pos, bb, ctx,
+                                             final)
+        groups = tuple((batch_bucket(n), c) for c, n in sorted(per.items()))
+        return self.plan.piggyback_phase(cost_tokens, pos, 0, 0, final,
+                                         decode_groups=groups)
 
     def _on_iteration_complete(self, t: float) -> None:
         """A phase program finished: emit tokens, advance each served
@@ -524,6 +862,13 @@ class _TenantRT:
                 self._complete_request(req, t)
         elif self.active_kind == PIGGYBACK:
             self._complete_piggyback(t)
+        elif self.active_kind == SWAPIN:
+            # KV restored (the re-read program just paid the HBM
+            # cost): the request rejoins the continuous batch; its
+            # next token's TBT sample carries the full eviction gap
+            req = self.active[0]
+            self.stats.kv_swapins += 1
+            self.decoding.append(req)
         else:
             req = self.active[0]
             req.chunks_done += 1
@@ -535,7 +880,11 @@ class _TenantRT:
                 if self.decoding:
                     self.yield_to_decode = True
             else:
-                self.stats.ttft.append(t - req.arrival)
+                if not req.ttft_seen:
+                    # a reject-mode restart re-runs prefill; only the
+                    # FIRST first-token samples TTFT
+                    self.stats.ttft.append(t - req.arrival)
+                    req.ttft_seen = True
                 self.stats.tokens += 1
                 req.tokens_done = 1       # prefill emits the first token
                 req.last_token_t = t
@@ -577,7 +926,9 @@ class _TenantRT:
             self._complete_request(r, t)
         req.prefill_done += self.piggy_slice
         if req.prefill_done >= self.plan.prompt_len:
-            st.ttft.append(t - req.arrival)
+            if not req.ttft_seen:
+                st.ttft.append(t - req.arrival)
+                req.ttft_seen = True
             st.tokens += 1
             req.tokens_done = 1      # the final slice emits token 1
             req.last_token_t = t
@@ -591,6 +942,10 @@ class _TenantRT:
         self.piggy_slice = 0
 
     def _complete_request(self, req: _Request, t: float) -> None:
+        if self.kv_enabled:
+            led = self._kv_led()
+            if led is not None:
+                led.release(req.rid)   # exact free of the request's KV
         self.stats.latencies.append(t - req.arrival)
         self.stats.completions.append(t)
         self.stats.requests_done += 1
@@ -600,7 +955,7 @@ class _TenantRT:
                 self.done = True
                 self.finished_at = t
             # closed loop: the next request arrives immediately
-            self.waiting.append(_Request(t, self.plan.gen_len))
+            self.waiting.append(self._new_request(t, self.plan.gen_len))
 
     # ---------------- program stepping ----------------
     def _advance(self, t: float) -> None:
@@ -820,6 +1175,14 @@ class Simulator:
         rt.waiting.clear()
         rt.prefilling.clear()
         rt.decoding.clear()
+        rt.swapped.clear()
+        if rt.kv_enabled:
+            led = rt._kv_led()
+            if led is not None:
+                # mid-run churn: every per-request allocation releases
+                # with the tenant (the vNPU's reserved weights free
+                # when the control plane destroys the vNPU itself)
+                led.clear()
         rt.active = []
         rt.piggy_req = None
         rt.piggy_slice = 0

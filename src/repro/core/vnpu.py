@@ -12,7 +12,7 @@ from __future__ import annotations
 import enum
 import itertools
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
@@ -92,6 +92,141 @@ class MemorySegments:
         return len(self.hbm_segments) * self.hbm_segment_size
 
 
+class KVLedgerError(RuntimeError):
+    """A ledger operation violated its bookkeeping contract
+    (double-free, unknown allocation, over-reservation)."""
+
+
+class KVLedger:
+    """Live HBM accounting for one vNPU's segment allocation.
+
+    Tracks per-request KV-cache bytes against the vNPU's HBM capacity
+    so decode context growth consumes memory *live* instead of hiding
+    behind a static ``hbm_footprint`` max. ``reserved`` bytes model
+    the resident working set that is not per-request (weights); every
+    other byte is owned by exactly one request id.
+
+    Invariants (proven by the property tests):
+
+    * ``reserved + in_use <= capacity`` at all times — an ``alloc``
+      that would exceed returns False and changes nothing;
+    * frees are exact: ``free(rid)`` returns precisely the bytes
+      ``rid`` holds and removes the entry; freeing an unknown rid
+      raises :class:`KVLedgerError` (no silent double-free);
+    * conservation: ``sum(entries) == in_use`` across any sequence of
+      alloc/grow/free/clear/migrate.
+
+    Units: every quantity is BYTES except ``used_segments`` /
+    ``peak_segments`` (counts of ``segment_bytes``-sized isolation
+    segments, §III-C)."""
+
+    def __init__(self, capacity_bytes: int, segment_bytes: int,
+                 reserved_bytes: int = 0):
+        if capacity_bytes < 0 or segment_bytes <= 0:
+            raise ValueError("ledger needs capacity >= 0 and segment > 0")
+        self.capacity = int(capacity_bytes)
+        self.segment_bytes = int(segment_bytes)
+        self.reserved = 0
+        self.in_use = 0
+        self.entries: Dict[int, int] = {}
+        self.peak_bytes = 0
+        self.peak_segments = 0
+        if reserved_bytes:
+            self.reserve(reserved_bytes)
+
+    # ------------------------------------------------------------------
+    @property
+    def available(self) -> int:
+        """Bytes still allocatable (capacity minus reserved + live)."""
+        return self.capacity - self.reserved - self.in_use
+
+    @property
+    def used_segments(self) -> int:
+        """HBM isolation segments the live occupancy covers."""
+        return -(-(self.reserved + self.in_use) // self.segment_bytes)
+
+    def fits(self, nbytes: float) -> bool:
+        return nbytes <= self.available
+
+    def reserve(self, nbytes: int) -> None:
+        """Set the non-per-request resident share (weights) to
+        ``nbytes`` absolute; raises if it cannot fit next to the live
+        allocations."""
+        nbytes = int(nbytes)
+        if nbytes < 0 or nbytes + self.in_use > self.capacity:
+            raise KVLedgerError(
+                f"cannot reserve {nbytes} B: {self.in_use} B live KV in a "
+                f"{self.capacity} B ledger")
+        self.reserved = nbytes
+        self._mark()
+
+    def alloc(self, rid: int, nbytes: float) -> bool:
+        """Allocate (or grow by) ``nbytes`` for request ``rid``.
+        All-or-nothing: returns False — and changes nothing — when the
+        ledger would exceed its capacity."""
+        n = int(nbytes)
+        if n < 0:
+            raise KVLedgerError(f"negative allocation ({n} B) for rid {rid}")
+        if n > self.available:
+            return False
+        self.entries[rid] = self.entries.get(rid, 0) + n
+        self.in_use += n
+        self._mark()
+        return True
+
+    def bytes_of(self, rid: int) -> int:
+        return self.entries.get(rid, 0)
+
+    def free(self, rid: int) -> int:
+        """Release ``rid``'s allocation exactly; raises
+        :class:`KVLedgerError` on an unknown rid (double-free)."""
+        if rid not in self.entries:
+            raise KVLedgerError(f"free of unknown/already-freed rid {rid}")
+        n = self.entries.pop(rid)
+        self.in_use -= n
+        return n
+
+    def release(self, rid: int) -> int:
+        """Lenient free: 0 for an unknown rid (used on teardown paths
+        where a request may legitimately hold nothing)."""
+        if rid not in self.entries:
+            return 0
+        return self.free(rid)
+
+    def clear(self) -> int:
+        """Release every per-request allocation (tenant teardown);
+        ``reserved`` stays until the vNPU itself is destroyed."""
+        n = self.in_use
+        self.entries.clear()
+        self.in_use = 0
+        return n
+
+    def migrate_from(self, other: "KVLedger") -> None:
+        """Adopt ``other``'s live state (vNPU reconfigure carries the
+        ledger to the re-placed vNPU). Raises when the live occupancy
+        does not fit the new capacity — the caller must evict or
+        reject the resize first."""
+        need = other.reserved + other.in_use
+        if need > self.capacity:
+            raise KVLedgerError(
+                f"live occupancy {need} B exceeds the resized capacity "
+                f"{self.capacity} B; evict or reject the resize")
+        self.reserved = other.reserved
+        self.in_use = other.in_use
+        self.entries = dict(other.entries)
+        self.peak_bytes = max(self.peak_bytes, other.peak_bytes)
+        self.peak_segments = max(self.peak_segments, other.peak_segments)
+        self._mark()
+
+    def _mark(self) -> None:
+        used = self.reserved + self.in_use
+        if used > self.peak_bytes:
+            self.peak_bytes = used
+        segs = self.used_segments
+        if segs > self.peak_segments:
+            self.peak_segments = segs
+
+
 _ids = itertools.count()
 
 
@@ -110,6 +245,9 @@ class VNPU:
     ve_ids: Tuple[int, ...] = ()
     segments: Optional[MemorySegments] = None
     mapping: str = "spatial"  # "spatial" (hw-isolated) | "temporal"
+    # live HBM accounting against this vNPU's segment allocation
+    # (created by the mapper; carried across reconfigures)
+    kv_ledger: Optional[KVLedger] = None
 
     def __post_init__(self):
         if not self.name:
@@ -120,3 +258,4 @@ class VNPU:
         self.me_ids = ()
         self.ve_ids = ()
         self.segments = None
+        self.kv_ledger = None

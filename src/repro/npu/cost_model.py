@@ -331,10 +331,28 @@ class RequestPlan:
     plans. With the budget unset (0) the builder is never invoked and
     every path is bit-identical to the static-chunk / monolithic IR.
 
+    Per-phase KV-cache accounting: ``kv_token_bytes`` is the HBM bytes
+    the KV cache grows by for every token the request ingests or
+    generates, at the REAL (unbucketed) context — the prefill phase
+    writes ``kv_prompt_bytes`` (= ``prompt_len`` tokens; a chunk or
+    piggybacked slice writes only its own tokens' share), and each
+    decode step grows the cache by one token. The live-ledger
+    simulator charges these against the tenant's
+    :class:`~repro.core.vnpu.KVLedger` at phase boundaries; with
+    ``kv_token_bytes == 0`` (non-attention families, or single-phase
+    plans) the ledger path is inert and ``hbm_footprint`` stays the
+    static admission-time max it always was. ``weight_bytes`` is the
+    resident parameter share the ledger reserves up front.
+    ``swapin_builder`` makes the HBM re-read trace an evicted
+    request's KV restore pays on resume (one
+    :func:`memory_op` over the context's KV bytes, built per decode
+    bucket).
+
     Units: trace costs are engine cycles / HBM bytes (see
     :class:`Operator`); ``prompt_len`` / ``gen_len`` / ``max_gen`` /
     ``prefill_chunk_tokens`` / ``iteration_token_budget`` are token
-    counts; ``hbm_footprint`` is resident bytes.
+    counts; ``hbm_footprint`` / ``kv_token_bytes`` / ``weight_bytes``
+    are bytes.
     """
 
     name: str
@@ -353,6 +371,12 @@ class RequestPlan:
     iteration_token_budget: int = 0
     piggyback_builder: Optional[Callable[..., WorkloadTrace]] = \
         field(default=None, repr=False, compare=False)
+    # live KV-cache accounting (0 = ledger path inert)
+    kv_token_bytes: float = 0.0  # KV bytes written per ingested/generated
+                                 # token (real context, unbucketed)
+    weight_bytes: float = 0.0    # resident parameter bytes (ledger reserve)
+    swapin_builder: Optional[Callable[[int], WorkloadTrace]] = \
+        field(default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         self.decode = sorted(self.decode, key=lambda p: p[0])
@@ -367,6 +391,13 @@ class RequestPlan:
     def has_decode(self) -> bool:
         """True when the plan carries context-bucketed decode phases."""
         return bool(self.decode)
+
+    @property
+    def kv_prompt_bytes(self) -> float:
+        """KV bytes the (whole) prefill phase writes: the prompt's
+        cache at the real context. Chunked/budgeted prefill charges
+        this incrementally, one chunk/slice's tokens at a time."""
+        return self.prompt_len * self.kv_token_bytes
 
     @property
     def chunked(self) -> bool:

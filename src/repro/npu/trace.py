@@ -14,7 +14,7 @@ traces.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.npu.cost_model import (
@@ -329,6 +329,39 @@ def lm_trace(
     return tr
 
 
+def kv_bytes_per_token(cfg: ModelConfig, batch: int = 1) -> float:
+    """HBM bytes the KV cache grows by per ingested/generated token
+    (the K and V rows every attention layer writes). Matches the
+    per-context cache term in :func:`lm_trace`'s footprint; SSM /
+    recurrent families carry fixed-size state instead of a growing
+    cache, so they return 0 and the live KV ledger stays inert."""
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        n_attn = cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.hybrid_attn_every, 1)
+    else:
+        return 0.0
+    return 2.0 * batch * cfg.n_kv_heads * cfg.d_head * n_attn * DTYPE
+
+
+def kv_swapin_trace(
+    cfg: ModelConfig,
+    batch: int,
+    context: int,
+    core: NPUCoreConfig = DEFAULT_CORE,
+) -> WorkloadTrace:
+    """HBM re-read an evicted request pays to restore its swapped-out
+    KV cache before rejoining decode: one memory operator streaming
+    the cache at ``context`` tokens back into the tenant's segments
+    (no compute — the paper's §III-B tensor-swapping cost, applied to
+    per-request KV instead of weights)."""
+    bytes_ = kv_bytes_per_token(cfg, batch) * context
+    tr = WorkloadTrace(name=f"{cfg.name}:swapin:b{batch}@{context}",
+                       core=core)
+    tr.ops.append(memory_op("kv_swapin", float(bytes_), core))
+    return tr
+
+
 def piggyback_trace(
     cfg: ModelConfig,
     batch: int,
@@ -339,6 +372,7 @@ def piggyback_trace(
     core: NPUCoreConfig = DEFAULT_CORE,
     include_head: bool = True,
     final: bool = True,
+    decode_groups: Optional[Sequence[Tuple[int, int]]] = None,
 ) -> WorkloadTrace:
     """One SARATHI-SF *piggybacked iteration*: a prefill chunk of
     ``chunk_tokens`` prompt tokens at prior context ``kv_prior`` fused
@@ -352,35 +386,51 @@ def piggyback_trace(
       ``kv_prior + chunk_tokens`` keys plus the per-chunk KV re-read
       (identical ops to :func:`lm_trace` with ``kv_prior``);
     * each decode token pays its per-token attention against the KV
-      stream at ``decode_ctx`` (identical ops to a decode trace at
-      that bucket, batch ``decode_batch``);
+      stream at ITS OWN context bucket: ``decode_groups`` is a
+      sequence of ``(batch, ctx_bucket)`` pairs — one decode
+      sub-trace per bucket with live riders, so a small-context rider
+      no longer pays the largest live bucket's KV stream. The legacy
+      ``(decode_batch, decode_ctx)`` pair is the single-group case
+      (kept as the calling convention when every rider shares one
+      bucket, so those programs — and their cache keys — are
+      byte-identical to the pre-grouping builder);
     * **shared weight reads are counted once**: every decode operator
-      whose weights were already streamed by the same-named chunk
-      operator drops its :attr:`Operator.weight_bytes` HBM share
+      whose weights were already streamed by a same-named operator
+      earlier in the fused program (the chunk, or a previous decode
+      group) drops its :attr:`Operator.weight_bytes` HBM share
       (KV-cache / state / embedding traffic is per-token and stays).
 
     ``final`` marks the slice that completes the prompt — only then
     does the chunk side carry the lm_head that emits the first token
-    (mirroring the static-chunk rule). ``decode_batch == 0`` degrades
-    to a plain chunk trace. Units: all token counts; ``decode_ctx``
-    is the bucket ceiling in tokens.
+    (mirroring the static-chunk rule). An empty decode side degrades
+    to a plain chunk trace. Units: all token counts; context values
+    are bucket ceilings in tokens.
     """
     chunk = lm_trace(cfg, batch, chunk_tokens, "prefill", core,
                      include_head=include_head and final,
                      kv_prior=kv_prior)
-    if decode_batch <= 0:
+    if decode_groups is not None:
+        groups = [(b, c) for b, c in decode_groups if b > 0]
+    else:
+        groups = [(decode_batch, decode_ctx)] if decode_batch > 0 else []
+    if not groups:
         return chunk
-    dec = lm_trace(cfg, batch * decode_batch, decode_ctx, "decode", core,
-                   include_head=include_head)
+    groups.sort(key=lambda g: g[1])
+    tag = "".join(f"+d{b}@{c}" for b, c in groups)
     tr = WorkloadTrace(
         name=(f"{cfg.name}:piggy:b{batch}k{kv_prior}+{chunk_tokens}"
-              f"{'f' if final else ''}+d{decode_batch}@{decode_ctx}"),
+              f"{'f' if final else ''}{tag}"),
         core=core)
     tr.ops.extend(chunk.ops)
+    tr.hbm_footprint = chunk.hbm_footprint
     streamed = {op.name for op in chunk.ops if op.weight_bytes > 0}
-    tr.ops.extend(op.without_weight_stream() if op.name in streamed else op
-                  for op in dec.ops)
-    tr.hbm_footprint = max(chunk.hbm_footprint, dec.hbm_footprint)
+    for db, ctx in groups:
+        dec = lm_trace(cfg, batch * db, ctx, "decode", core,
+                       include_head=include_head)
+        tr.ops.extend(op.without_weight_stream() if op.name in streamed
+                      else op for op in dec.ops)
+        streamed.update(op.name for op in dec.ops if op.weight_bytes > 0)
+        tr.hbm_footprint = max(tr.hbm_footprint, dec.hbm_footprint)
     return tr
 
 
@@ -459,10 +509,17 @@ def request_plan(
                 break
             ctx <<= 1
     def _piggyback(chunk_tokens: int, kv_prior: int, decode_batch: int,
-                   decode_ctx: int, final: bool) -> WorkloadTrace:
+                   decode_ctx: int, final: bool,
+                   decode_groups=None) -> WorkloadTrace:
         return piggyback_trace(cfg, batch, chunk_tokens, kv_prior,
                                decode_batch, decode_ctx, core,
-                               include_head=include_head, final=final)
+                               include_head=include_head, final=final,
+                               decode_groups=decode_groups)
+
+    kv_tok = kv_bytes_per_token(cfg, batch)
+
+    def _swapin(context: int) -> WorkloadTrace:
+        return kv_swapin_trace(cfg, batch, context, core)
 
     return RequestPlan(
         name=f"{cfg.name}:gen:b{batch}p{prompt_len}g{gen_len}",
@@ -472,6 +529,9 @@ def request_plan(
         prefill_chunks=chunks,
         iteration_token_budget=int(iteration_token_budget),
         piggyback_builder=_piggyback,
+        kv_token_bytes=kv_tok,
+        weight_bytes=float(cfg.param_count() * DTYPE),
+        swapin_builder=_swapin if kv_tok > 0 else None,
     )
 
 

@@ -106,6 +106,14 @@ class TenantHandle:
     slo_ttft_ms: Optional[float] = None   # time-to-first-token SLO
     slo_tbt_ms: Optional[float] = None    # time-between-tokens SLO
     submitted: int = 0           # gen-length sampling stream cursor
+    # live KV-cache accounting: "" = off (static hbm_footprint),
+    # "evict" = swap-out + HBM re-read resume, "reject" = abort victims
+    # back to admission (see repro.core.simulator.TenantSpec)
+    kv_policy: str = ""
+    # registration-time HBM pin (bytes; None = footprint estimate).
+    # Resizes keep honoring it — a KV-pressure-constrained allocation
+    # must not silently re-inflate to the estimate on the first resize.
+    hbm_bytes: Optional[int] = None
 
     @property
     def generative(self) -> bool:
@@ -142,6 +150,15 @@ class TenantReport:
     tokens_done: int = 0
     slo_ttft_ok: Optional[bool] = None
     slo_tbt_ok: Optional[bool] = None
+    # ---- live KV-cache pressure (zero without a kv_policy) ----
+    kv_evictions: int = 0        # requests that lost their KV segments
+    kv_swapins: int = 0          # eviction round-trips completed
+    kv_peak_segments: int = 0    # peak HBM isolation segments occupied
+    # request-loss accounting: an operator must be able to tell
+    # "still in flight" from "the ledger dropped it"
+    kv_rejected: int = 0         # admission-rejected (prompt can never fit)
+    kv_restarts: int = 0         # reject-policy victims re-queued from 0
+    kv_truncated: int = 0        # force-finished (single-request OOM)
 
 
 # ----------------------------------------------------------------------
@@ -222,13 +239,30 @@ class NPUCluster:
                  plan: Optional[RequestPlan] = None,
                  gen_lens: Optional[GenLenDistribution] = None,
                  slo_ttft_ms: Optional[float] = None,
-                 slo_tbt_ms: Optional[float] = None) -> TenantHandle:
+                 slo_tbt_ms: Optional[float] = None,
+                 kv_policy: Optional[str] = None,
+                 hbm_bytes: Optional[int] = None) -> TenantHandle:
         """Pay-as-you-go entry point: the tenant buys `eu_budget` EUs;
         the allocator picks the ME/VE split from the compile-time
         profile (§III-B). Generative tenants pass ``plan`` (the trace
-        argument should then be the plan's profile trace)."""
+        argument should then be the plan's profile trace).
+
+        ``hbm_bytes`` pins the vNPU's HBM allocation (bytes, rounded
+        up to isolation segments) instead of the footprint estimate —
+        the knob the KV-pressure benchmarks sweep. ``kv_policy``
+        (``"evict"`` | ``"reject"``) turns on live KV-cache
+        accounting against that allocation: the plan's weights are
+        reserved up front and every request's KV is charged to the
+        vNPU's :class:`~repro.core.vnpu.KVLedger` as it runs."""
+        if kv_policy and (plan is None or plan.kv_token_bytes <= 0):
+            raise ValueError(
+                f"kv_policy={kv_policy!r} needs a generative plan with "
+                f"per-token KV bytes (attention-family request_plan); "
+                f"tenant {name!r} has none")
         alloc = allocate_for_trace(trace, eu_budget, self.core)
         sram, hbm = estimate_memory(trace, alloc.n_me, self.core)
+        if hbm_bytes is not None:
+            hbm = int(hbm_bytes)
         try:
             vnpu = self.manager.create(
                 VNPUConfig(n_me=alloc.n_me, n_ve=alloc.n_ve,
@@ -241,12 +275,27 @@ class NPUCluster:
             # FEASIBLE splits, still maximizing Eq. 2. Harvesting
             # recovers most of the gap at runtime (§III-B).
             alloc, vnpu = self._constrained_register(
-                trace, alloc, eu_budget, priority, name)
+                trace, alloc, eu_budget, priority, name,
+                hbm_override=hbm_bytes)
+        if kv_policy:
+            # weights are resident for the tenant's lifetime; the
+            # remainder of the segment allocation is the KV budget
+            weights = int(plan.weight_bytes)
+            if weights >= vnpu.kv_ledger.capacity:
+                self.manager.destroy(vnpu)
+                raise ValueError(
+                    f"tenant {name!r}: resident weights ({weights} B) fill "
+                    f"the {vnpu.kv_ledger.capacity} B HBM allocation — no "
+                    f"KV budget left; raise hbm_bytes")
+            vnpu.kv_ledger.reserve(weights)
         h = TenantHandle(name=name, trace=trace, eu_budget=eu_budget,
                          priority=priority, slo_p95_ms=slo_p95_ms,
                          allocation=alloc, vnpu=vnpu, plan=plan,
                          gen_lens=gen_lens, slo_ttft_ms=slo_ttft_ms,
-                         slo_tbt_ms=slo_tbt_ms)
+                         slo_tbt_ms=slo_tbt_ms,
+                         kv_policy=kv_policy or "",
+                         hbm_bytes=(int(hbm_bytes)
+                                    if hbm_bytes is not None else None))
         self.tenants.append(h)
         return h
 
@@ -283,10 +332,17 @@ class NPUCluster:
         autoscale hook can trade TBT against TTFT mid-run without
         re-registering.
 
+        ``kv_policy="evict"`` (or ``"reject"``) plus an optional
+        ``hbm_bytes`` pin — both forwarded to :meth:`register` — turn
+        on live KV-cache accounting: decode context growth consumes
+        the tenant's HBM segments as it happens, and under pressure a
+        PREMA-style victim is swapped out (resumed via an HBM
+        re-read) or aborted back to admission.
+
         Units: ``prompt_len`` / ``gen_lens`` / ``bucket`` /
         ``prefill_chunk_tokens`` / ``iteration_token_budget`` are
         token counts; ``eu_budget`` is execution units (ME+VE
-        engines)."""
+        engines); ``hbm_bytes`` is bytes."""
         if isinstance(gen_lens, GenLenDistribution):
             dist: Optional[GenLenDistribution] = gen_lens
             gen_len = max(int(round(gen_lens.mean)), 1)
@@ -303,7 +359,8 @@ class NPUCluster:
                              plan=plan, gen_lens=dist, **kw)
 
     def _constrained_register(self, trace, alloc, eu_budget, priority,
-                              name) -> Tuple[Allocation, VNPU]:
+                              name, hbm_override: Optional[int] = None,
+                              ) -> Tuple[Allocation, VNPU]:
         feasible = set()
         for cs in self.manager.cores:
             free_me, free_ve = len(cs.free_mes), len(cs.free_ves)
@@ -320,6 +377,8 @@ class NPUCluster:
             feasible,
             key=lambda s: (eu_utilization(alloc.m, alloc.v, *s), s))
         sram, hbm = estimate_memory(trace, n_me, self.core)
+        if hbm_override is not None:
+            hbm = int(hbm_override)
         # cap the memory ask to what remains (§III-B: oversized models
         # fall back to tensor swapping / multi-vNPU allocation)
         free_hbm = max(len(cs.free_hbm_segs) for cs in self.manager.cores)
@@ -371,9 +430,19 @@ class NPUCluster:
         EUs plus the ones the tenant already holds (same admission
         logic as register). Only when no feasible split beats the
         current shape does :class:`ReconfigureError` propagate — the
-        handle stays valid (old mapping restored) either way."""
+        handle stays valid (old mapping restored) either way.
+
+        KV-accounted tenants: the HBM ask is floored at the ledger's
+        LIVE occupancy (weights + resident KV), so a shrink can never
+        pull segments out from under in-flight requests — a resize
+        that cannot hold them is rejected with
+        :class:`ReconfigureError` (the vNPU manager re-checks when
+        migrating the ledger; evict or drain first)."""
         alloc = allocate_for_trace(handle.trace, eu_budget, self.core)
         sram, hbm = estimate_memory(handle.trace, alloc.n_me, self.core)
+        if handle.hbm_bytes is not None:
+            hbm = handle.hbm_bytes   # keep the registration-time pin
+        hbm = max(hbm, self._kv_floor(handle))
         try:
             handle.vnpu = self.manager.reconfigure(
                 handle.vnpu, VNPUConfig(
@@ -386,6 +455,17 @@ class NPUCluster:
         handle.eu_budget = eu_budget
         handle.allocation = alloc
         return handle
+
+    def _kv_floor(self, handle: TenantHandle) -> int:
+        """Bytes a resize of ``handle`` must keep: the live ledger
+        occupancy (reserved weights + in-flight KV), segment-rounded.
+        0 for tenants without KV accounting."""
+        v = handle.vnpu
+        if not handle.kv_policy or v is None or v.kv_ledger is None:
+            return 0
+        led = v.kv_ledger
+        seg = self.core.hbm_segment
+        return -(-(led.reserved + led.in_use) // seg) * seg
 
     def _constrained_resize(self, handle: TenantHandle, eu_budget: int,
                             alloc: Allocation,
@@ -415,6 +495,10 @@ class NPUCluster:
             raise exc  # nothing feasible beats the current shape
         n_me, n_ve = best
         sram, hbm = estimate_memory(handle.trace, n_me, self.core)
+        if handle.hbm_bytes is not None:
+            hbm = handle.hbm_bytes   # keep the registration-time pin
+        kv_floor = self._kv_floor(handle)
+        hbm = max(hbm, kv_floor)
         if cs is not None and handle.vnpu.segments is not None:
             held_s = len(handle.vnpu.segments.sram_segments)
             held_h = len(handle.vnpu.segments.hbm_segments)
@@ -422,6 +506,13 @@ class NPUCluster:
                        (len(cs.free_sram_segs) + held_s) * self.core.sram_segment)
             hbm = min(hbm,
                       (len(cs.free_hbm_segs) + held_h) * self.core.hbm_segment)
+        if hbm < kv_floor:
+            # the feasible segments cannot hold the live KV occupancy:
+            # reject rather than shrink resident state out from under
+            # in-flight requests (the ledger-migration check in
+            # VNPUManager.reconfigure guarantees this invariant even
+            # for callers that skip the session layer)
+            raise exc
         handle.vnpu = self.manager.reconfigure(
             handle.vnpu, VNPUConfig(n_me=n_me, n_ve=n_ve,
                                     sram_bytes=sram, hbm_bytes=hbm,
@@ -450,7 +541,7 @@ def run_closed_loop(cluster: NPUCluster, n_requests: int = 8,
             cplan = cluster.compile_plan(h.plan)
             specs.append(TenantSpec(cplan.prefill.program, h.vnpu,
                                     n_requests, weight=h.priority,
-                                    plan=cplan))
+                                    plan=cplan, kv_policy=h.kv_policy))
         else:
             specs.append(TenantSpec(cluster.compile(h.trace), h.vnpu,
                                     n_requests, weight=h.priority))
@@ -501,6 +592,12 @@ def _tenant_report(h: TenantHandle, st, ms: float,
                      if h.slo_ttft_ms and st.ttft else None),
         slo_tbt_ok=((tbt_p95 <= h.slo_tbt_ms)
                     if h.slo_tbt_ms and st.tbt else None),
+        kv_evictions=st.kv_evictions,
+        kv_swapins=st.kv_swapins,
+        kv_peak_segments=st.kv_peak_segments,
+        kv_rejected=st.kv_rejected,
+        kv_restarts=st.kv_restarts,
+        kv_truncated=st.kv_truncated,
     )
 
 
@@ -577,7 +674,8 @@ class ServingSession:
         if handle.plan is not None:
             cplan = self.cluster.compile_plan(handle.plan)
             spec = TenantSpec(cplan.prefill.program, handle.vnpu,
-                              weight=handle.priority, plan=cplan)
+                              weight=handle.priority, plan=cplan,
+                              kv_policy=handle.kv_policy)
         else:
             prog = self.cluster.compile(handle.trace)
             spec = TenantSpec(prog, handle.vnpu, weight=handle.priority)

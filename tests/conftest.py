@@ -1,0 +1,20 @@
+"""Shared test configuration.
+
+``HYPOTHESIS_SEED`` (any value) opts into the derandomized hypothesis
+profile: every property test runs its deterministic example set, so a
+CI failure replays byte-identically instead of depending on a random
+draw. CI's docs-and-hygiene job pins it; local runs stay randomized
+(better long-run coverage). No-op when hypothesis is absent (the
+property tests then skip via tests/hypothesis_compat.py).
+"""
+import os
+
+try:
+    from hypothesis import settings as _hyp_settings
+except ModuleNotFoundError:
+    _hyp_settings = None
+
+if _hyp_settings is not None and os.environ.get("HYPOTHESIS_SEED"):
+    _hyp_settings.register_profile("ci-deterministic", derandomize=True,
+                                   print_blob=True)
+    _hyp_settings.load_profile("ci-deterministic")

@@ -1,0 +1,189 @@
+"""Live KV-cache HBM ledger: unit contract + property-based
+invariants (never exceed capacity, exact frees, conservation across
+arbitrary op sequences and mid-run tenant churn / resizes)."""
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.mapper import ReconfigureError, VNPUManager
+from repro.core.vnpu import KVLedger, KVLedgerError, VNPUConfig
+from repro.npu.hw_config import DEFAULT_CORE
+
+SEG = 64 * 1024
+
+
+# ----------------------------------------------------------------------
+# unit contract
+# ----------------------------------------------------------------------
+def test_alloc_grow_free_roundtrip():
+    led = KVLedger(10 * SEG, SEG)
+    assert led.alloc(1, 3 * SEG)
+    assert led.alloc(1, SEG)            # grow merges into the entry
+    assert led.bytes_of(1) == 4 * SEG
+    assert led.in_use == 4 * SEG
+    assert led.used_segments == 4
+    assert led.free(1) == 4 * SEG
+    assert led.in_use == 0 and led.entries == {}
+
+
+def test_alloc_is_all_or_nothing():
+    led = KVLedger(2 * SEG, SEG)
+    assert led.alloc(1, SEG)
+    assert not led.alloc(2, 2 * SEG)    # would exceed: refused...
+    assert led.bytes_of(2) == 0         # ...and nothing changed
+    assert led.in_use == SEG
+    assert led.alloc(2, SEG)            # exact fit is fine
+    assert not led.fits(1)
+
+
+def test_double_free_raises_exactly():
+    led = KVLedger(4 * SEG, SEG)
+    led.alloc(7, SEG)
+    led.free(7)
+    with pytest.raises(KVLedgerError, match="already-freed"):
+        led.free(7)
+    assert led.release(7) == 0          # lenient teardown variant
+
+
+def test_reserve_respects_live_allocations():
+    led = KVLedger(4 * SEG, SEG)
+    led.reserve(2 * SEG)
+    assert led.available == 2 * SEG
+    led.alloc(1, 2 * SEG)
+    with pytest.raises(KVLedgerError, match="reserve"):
+        led.reserve(3 * SEG)
+    led.clear()                          # per-request state only
+    assert led.reserved == 2 * SEG and led.in_use == 0
+
+
+def test_peaks_are_monotone_and_segment_rounded():
+    led = KVLedger(10 * SEG, SEG)
+    led.reserve(SEG // 2)
+    led.alloc(1, SEG)                    # occupancy 1.5 seg -> 2 segments
+    assert led.peak_segments == 2
+    led.free(1)
+    assert led.peak_segments == 2        # peaks never decay
+    assert led.peak_bytes == SEG // 2 + SEG
+
+
+def test_migrate_carries_state_and_rejects_shrink_below_live():
+    a = KVLedger(8 * SEG, SEG, reserved_bytes=2 * SEG)
+    a.alloc(1, 3 * SEG)
+    b = KVLedger(6 * SEG, SEG)
+    b.migrate_from(a)
+    assert b.reserved == 2 * SEG and b.bytes_of(1) == 3 * SEG
+    small = KVLedger(4 * SEG, SEG)
+    with pytest.raises(KVLedgerError, match="exceeds the resized"):
+        small.migrate_from(a)
+    assert small.in_use == 0             # failed migrate changed nothing
+
+
+# ----------------------------------------------------------------------
+# property: arbitrary op sequences vs an independent mirror model
+# ----------------------------------------------------------------------
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "grow", "free", "clear", "resize"]),
+              st.integers(0, 5),            # request id
+              st.integers(0, 3 * SEG)),     # bytes / new capacity scale
+    max_size=60)
+
+
+@given(ops=_OPS, cap_segs=st.integers(1, 12), reserved=st.integers(0, SEG))
+@settings(max_examples=150, deadline=None)
+def test_ledger_invariants_under_arbitrary_sequences(ops, cap_segs,
+                                                     reserved):
+    """Whatever the arrival/finish/evict/resize interleaving, the
+    ledger never exceeds capacity, frees are exact (no leak, no
+    double-free), and occupancy equals the sum of live entries."""
+    pytest.importorskip("hypothesis")
+    led = KVLedger(cap_segs * SEG, SEG)
+    if reserved + led.in_use <= led.capacity:
+        led.reserve(reserved)
+    mirror = {}
+    for op, rid, n in ops:
+        if op in ("alloc", "grow"):
+            before = led.bytes_of(rid)
+            ok = led.alloc(rid, n)
+            expect_ok = n <= led.capacity - led.reserved - sum(
+                mirror.values())
+            if n > 0:
+                assert ok == expect_ok
+            if ok:
+                mirror[rid] = mirror.get(rid, 0) + n
+                assert led.bytes_of(rid) == before + n
+            else:
+                assert led.bytes_of(rid) == before   # all-or-nothing
+        elif op == "free":
+            if rid in mirror:
+                assert led.free(rid) == mirror.pop(rid)
+            else:
+                with pytest.raises(KVLedgerError):
+                    led.free(rid)
+        elif op == "clear":
+            led.clear()
+            mirror.clear()
+        else:  # resize: migrate into a new-capacity ledger
+            new = KVLedger(max(n, SEG), SEG)
+            need = led.reserved + led.in_use
+            if need <= new.capacity:
+                new.migrate_from(led)
+                led = new
+            else:
+                with pytest.raises(KVLedgerError):
+                    new.migrate_from(led)
+        # the three invariants, after every single op (peaks are
+        # historical telemetry: monotone, dominating live occupancy —
+        # a shrink-resize may leave them above the NEW capacity)
+        assert led.reserved + led.in_use <= led.capacity
+        assert led.in_use == sum(mirror.values()) == sum(
+            led.entries.values())
+        assert led.peak_bytes >= led.reserved + led.in_use
+    drained = led.clear()
+    assert drained == sum(mirror.values())
+    assert led.in_use == 0
+
+
+# ----------------------------------------------------------------------
+# property: manager-level churn conserves physical segments
+# ----------------------------------------------------------------------
+@given(script=st.lists(st.tuples(st.integers(0, 3),     # slot
+                                 st.integers(1, 4),     # hbm segments
+                                 st.integers(0, 2)),    # action
+                       max_size=24))
+@settings(max_examples=60, deadline=None)
+def test_manager_churn_conserves_segments(script):
+    """Create / KV-fill / destroy / reconfigure vNPUs in arbitrary
+    order: every core's free+owned HBM segments stay conserved, each
+    ledger's capacity tracks its vNPU's segment allocation, and a
+    full teardown returns every segment."""
+    pytest.importorskip("hypothesis")
+    mgr = VNPUManager(core=DEFAULT_CORE)
+    total = DEFAULT_CORE.hbm_bytes // DEFAULT_CORE.hbm_segment
+    slots = {}
+    for slot, n_hbm, action in script:
+        v = slots.get(slot)
+        if action == 0 and v is None:            # create + some live KV
+            try:
+                v = mgr.create(VNPUConfig(
+                    1, 1, hbm_bytes=n_hbm * DEFAULT_CORE.hbm_segment))
+            except RuntimeError:
+                continue
+            v.kv_ledger.alloc(0, DEFAULT_CORE.hbm_segment // 2)
+            slots[slot] = v
+        elif action == 1 and v is not None:      # destroy
+            mgr.destroy(v)
+            del slots[slot]
+        elif action == 2 and v is not None:      # reconfigure (resize)
+            try:
+                slots[slot] = mgr.reconfigure(v, VNPUConfig(
+                    1, 1, hbm_bytes=n_hbm * DEFAULT_CORE.hbm_segment))
+            except ReconfigureError as exc:
+                slots[slot] = exc.restored       # handle stays valid
+        owned = sum(len(v.segments.hbm_segments) for v in slots.values())
+        free = sum(len(cs.free_hbm_segs) for cs in mgr.cores)
+        assert owned + free == total             # conservation
+        for v in slots.values():
+            assert v.kv_ledger.capacity == v.segments.hbm_bytes
+            assert v.kv_ledger.in_use == DEFAULT_CORE.hbm_segment // 2
+    for v in list(slots.values()):
+        mgr.destroy(v)
+    assert sum(len(cs.free_hbm_segs) for cs in mgr.cores) == total

@@ -1,0 +1,330 @@
+"""Live KV-cache accounting in the simulator + serving session:
+golden bit-identity of KV-disabled paths, deterministic eviction,
+evict/swap-resume vs reject-restart semantics, admission rejection,
+and the live-resize-below-occupancy regression (satellite fix)."""
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.mapper import ReconfigureError
+from repro.core.vnpu import VNPUConfig
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.npu.trace import kv_bytes_per_token, request_plan
+from repro.serve.session import (GenLenDistribution, NPUCluster,
+                                 PoissonArrivals, ServingSession)
+
+CFG = SMOKES["qwen2-0.5b"]
+SEG = 64 * 1024
+SMALL_CORE = DEFAULT_CORE.with_(hbm_bytes=1024 * SEG, hbm_segment=SEG)
+WEIGHTS = CFG.param_count() * 2
+WSEG = -(-WEIGHTS // SEG) * SEG          # weights rounded to segments
+
+
+def _pressure_session(kv_policy, kv_segs=2, n=24, policy="neu10"):
+    """Decode-heavy chat tenant on a pinned HBM allocation of
+    weights + ``kv_segs`` segments (the fig_kv_pressure mix)."""
+    cluster = NPUCluster(core=SMALL_CORE, policy=policy)
+    sess = ServingSession(cluster)
+    chat = sess.register_generative(
+        "chat", CFG, prompt_len=128,
+        gen_lens=GenLenDistribution(mean=96.0, max_len=256, seed=11),
+        eu_budget=4, kv_policy=kv_policy,
+        hbm_bytes=WSEG + kv_segs * SEG)
+    sess.submit_arrivals(chat, PoissonArrivals(rate_rps=200_000.0,
+                                               n=n, seed=1))
+    return sess, chat
+
+
+# ----------------------------------------------------------------------
+# golden regression: KV-disabled paths stay bit-identical to PR 4
+# ----------------------------------------------------------------------
+# Captured from the PR 4 tree (commit ab53ec8) on the fixed chat+doc
+# open-loop scenario below: (requests_done, tokens, sum(latencies),
+# sum(ttft), sum(tbt), me_work, ve_work) per tenant + final sim time,
+# every float rounded to 1e-6 cycles. With kv_policy unset the live
+# ledger must not perturb a single event.
+PR4_GOLDEN = {
+    ("neu10", "mono"): [
+        (10, 172, 448650.934304, 43945.650228, 404705.284076,
+         325189.632, 13954.6205),
+        (4, 8, 179079.095223, 169251.578723, 9827.5165,
+         335429.632, 119134.45),
+        528547.261041],
+    ("neu10", "chunk"): [
+        (10, 172, 442058.384949, 44665.423776, 397392.961173,
+         327383.04, 13983.545),
+        (4, 8, 194385.140735, 184557.624235, 9827.5165,
+         340464.298667, 119097.372667),
+        527051.214984],
+    ("neu10", "piggy"): [
+        (10, 172, 466187.807442, 67657.236842, 398530.5706,
+         329576.448, 14070.3185),
+        (4, 8, 239267.041721, 227168.105221, 12098.9365,
+         392812.214768, 125145.119426),
+        528360.102535],
+    ("v10", "mono"): [
+        (10, 172, 1724289.056411, 215713.143703, 1508575.912709,
+         272547.84, 7250.4325),
+        (4, 8, 970507.582533, 674541.300675, 295966.281859,
+         332852.224, 93907.5255),
+        894171.994716],
+    ("v10", "chunk"): [
+        (10, 172, 1708611.259345, 186132.7604, 1522478.498946,
+         274741.248, 7253.357),
+        (4, 8, 861505.966915, 814682.242689, 46823.724225,
+         340464.298667, 95286.706),
+        939222.616563],
+    ("v10", "piggy"): [
+        (10, 172, 1887630.710117, 386990.981196, 1500639.72892,
+         281705.472, 7294.3),
+        (4, 8, 1006029.293673, 977476.542548, 28552.751125,
+         392812.214768, 100800.61),
+        993306.237289],
+}
+_ARMS = {"mono": {}, "chunk": {"prefill_chunk_tokens": 256},
+         "piggy": {"iteration_token_budget": 160}}
+
+
+def _golden_scenario(policy, **kw):
+    cluster = NPUCluster(policy=policy)
+    sess = ServingSession(cluster)
+    chat = sess.register_generative(
+        "chat", CFG, prompt_len=128,
+        gen_lens=GenLenDistribution(mean=24.0, max_len=96, seed=11),
+        eu_budget=4, **kw)
+    doc = sess.register_generative("doc", CFG, prompt_len=1024,
+                                   gen_lens=2, eu_budget=4, **kw)
+    sess.submit_arrivals(chat, PoissonArrivals(rate_rps=30_000.0, n=10,
+                                               seed=1))
+    sess.submit_arrivals(doc, PoissonArrivals(rate_rps=4_000.0, n=4,
+                                              seed=2))
+    sess.drain()
+    out = []
+    for h in (chat, doc):
+        st = sess.sim.tenants[h.sim_idx].stats
+        out.append((st.requests_done, st.tokens,
+                    round(sum(st.latencies), 6), round(sum(st.ttft), 6),
+                    round(sum(st.tbt), 6), round(st.me_work, 6),
+                    round(st.ve_work, 6)))
+    out.append(round(sess.sim.now, 6))
+    return out
+
+
+@pytest.mark.parametrize("policy,arm", sorted(PR4_GOLDEN))
+def test_kv_disabled_paths_bit_identical_to_pr4(policy, arm):
+    assert _golden_scenario(policy, **_ARMS[arm]) == PR4_GOLDEN[(policy,
+                                                                 arm)]
+
+
+# ----------------------------------------------------------------------
+# determinism: same seed -> same evictions
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kv_policy", ["evict", "reject"])
+def test_open_loop_determinism_with_eviction(kv_policy):
+    def run_once():
+        sess, chat = _pressure_session(kv_policy)
+        sess.drain()
+        st = sess.sim.tenants[chat.sim_idx].stats
+        return (st.latencies, st.ttft, st.tbt, st.tokens,
+                st.kv_evictions, st.kv_swapins, st.kv_restarts,
+                st.kv_swapped_bytes, st.kv_peak_segments)
+
+    assert run_once() == run_once()
+
+
+# ----------------------------------------------------------------------
+# evict / reject semantics under pressure
+# ----------------------------------------------------------------------
+def test_evict_swap_resume_roundtrip_under_pressure():
+    sess, chat = _pressure_session("evict")
+    sess.drain()
+    st = sess.sim.tenants[chat.sim_idx].stats
+    led = chat.vnpu.kv_ledger
+    assert st.kv_evictions >= 1 and st.kv_swapins >= 1   # full round trip
+    assert st.kv_restarts == 0                  # evict mode never aborts
+    assert st.kv_swapped_bytes > 0
+    assert st.requests_done == 24               # nobody lost
+    # ledger safety: the budget was really respected, and drained
+    assert st.kv_peak_segments <= led.capacity // SEG
+    assert led.in_use == 0 and led.entries == {}
+    assert led.reserved == WEIGHTS              # weights stay resident
+    # report surfaces the pressure counters
+    rep = sess.report(chat)[0]
+    assert rep.kv_evictions == st.kv_evictions
+    assert rep.kv_swapins == st.kv_swapins
+    assert rep.kv_peak_segments == st.kv_peak_segments
+
+
+def test_reject_mode_restarts_victims():
+    sess, chat = _pressure_session("reject")
+    sess.drain()
+    st = sess.sim.tenants[chat.sim_idx].stats
+    assert st.kv_restarts >= 1 and st.kv_evictions >= 1
+    assert st.kv_swapins == 0                   # reject never swaps
+    assert st.requests_done == 24
+    # a restarted request re-runs prefill but TTFT samples only once
+    assert len(st.ttft) == 24
+    assert chat.vnpu.kv_ledger.in_use == 0
+
+
+def test_eviction_interacts_with_piggybacked_iterations():
+    """KV accounting composes with the budgeted (SARATHI-SF) engine:
+    slices charge their ingestion, riders charge growth, and pressure
+    still resolves through eviction + resume."""
+    cluster = NPUCluster(core=SMALL_CORE, policy="neu10")
+    sess = ServingSession(cluster)
+    chat = sess.register_generative(
+        "chat", CFG, prompt_len=128,
+        gen_lens=GenLenDistribution(mean=96.0, max_len=256, seed=11),
+        eu_budget=4, kv_policy="evict", hbm_bytes=WSEG + 2 * SEG,
+        iteration_token_budget=96)
+    sess.submit_arrivals(chat, PoissonArrivals(rate_rps=200_000.0,
+                                               n=24, seed=1))
+    sess.drain()
+    st = sess.sim.tenants[chat.sim_idx].stats
+    assert st.requests_done == 24
+    assert st.piggyback_iterations >= 1         # the fused engine ran
+    assert st.kv_evictions >= 1 and st.kv_swapins >= 1
+    assert chat.vnpu.kv_ledger.in_use == 0
+
+
+def test_admission_rejects_prompt_that_can_never_fit():
+    """A prompt whose KV write exceeds the whole KV budget is dropped
+    (counted, no deadlock) instead of wedging the tenant queue."""
+    per = kv_bytes_per_token(CFG)
+    kv_segs = 1
+    # prompt KV > 1 segment (+ rounding slack) can never be admitted
+    prompt = int((2 * SEG) // per)
+    cluster = NPUCluster(core=SMALL_CORE, policy="neu10")
+    sess = ServingSession(cluster)
+    h = sess.register_generative(
+        "big", CFG, prompt_len=prompt, gen_lens=4, eu_budget=4,
+        kv_policy="evict", hbm_bytes=WSEG + kv_segs * SEG)
+    sess.submit(h, at_s=0.0)
+    sess.submit(h, at_s=0.0)
+    sess.drain()
+    st = sess.sim.tenants[h.sim_idx].stats
+    assert st.kv_rejected == 2
+    assert st.requests_done == 0
+    assert sess.sim.tenants[h.sim_idx].in_flight == 0
+
+
+def test_kv_policy_requires_generative_plan():
+    cluster = NPUCluster(policy="neu10")
+    with pytest.raises(ValueError, match="kv_policy"):
+        cluster.register_model(CFG, batch=1, seq=128, eu_budget=2,
+                               kv_policy="evict")
+
+
+def test_mid_run_deregister_releases_ledger():
+    sess, chat = _pressure_session("evict")
+    sess.run_until(2e-4)                        # mid-pressure
+    led = chat.vnpu.kv_ledger
+    sess.deregister(chat)
+    assert sess.drain() >= 0.0                  # no orphaned state
+    assert led.in_use == 0 and led.entries == {}
+
+
+# ----------------------------------------------------------------------
+# satellite fix: live resize must respect the ledger
+# ----------------------------------------------------------------------
+def test_reconfigure_below_live_occupancy_rejected_and_restored():
+    """The vNPU manager refuses to shrink HBM segments out from under
+    live KV: ReconfigureError carries a restored vNPU with the ledger
+    (entries, reserve) intact."""
+    cluster = NPUCluster(core=SMALL_CORE, policy="neu10")
+    v = cluster.manager.create(
+        VNPUConfig(2, 2, hbm_bytes=8 * SEG), name="t")
+    v.kv_ledger.reserve(2 * SEG)
+    assert v.kv_ledger.alloc(0, 3 * SEG)
+    with pytest.raises(ReconfigureError) as ei:
+        cluster.manager.reconfigure(
+            v, VNPUConfig(2, 2, hbm_bytes=4 * SEG))
+    restored = ei.value.restored
+    assert restored.kv_ledger.in_use == 3 * SEG
+    assert restored.kv_ledger.reserved == 2 * SEG
+    assert restored.segments.hbm_bytes == 8 * SEG
+    # a resize that CAN hold the occupancy migrates the ledger
+    grown = cluster.manager.reconfigure(
+        restored, VNPUConfig(2, 2, hbm_bytes=6 * SEG))
+    assert grown.kv_ledger.in_use == 3 * SEG
+    assert grown.kv_ledger.capacity == 6 * SEG
+
+
+def test_live_resize_keeps_segments_above_occupancy():
+    """Session-level regression for the latent bug: a mid-run resize
+    under live KV occupancy must never leave the tenant with fewer
+    HBM bytes than the ledger holds — the ask is floored at the live
+    occupancy and serving continues across the resize."""
+    sess, chat = _pressure_session("evict", kv_segs=4)
+    sess.run_until(2e-4)                        # KV is live now
+    led = chat.vnpu.kv_ledger
+    assert led.in_use > 0
+    for eu in (6, 2, 4):                        # grow, shrink, restore
+        try:
+            sess.resize(chat, eu)
+        except ReconfigureError:
+            pass                                # reject is legal...
+        led = chat.vnpu.kv_ledger
+        # ...silently shrinking below the live occupancy is not, and
+        # the migrated ledger stays conservation-exact
+        assert led.capacity >= led.reserved + led.in_use
+        assert led.reserved == WEIGHTS
+        assert led.in_use == sum(led.entries.values())
+    sess.drain()
+    st = sess.sim.tenants[chat.sim_idx].stats
+    assert st.requests_done == 24               # nothing was corrupted
+    assert chat.vnpu.kv_ledger.in_use == 0
+
+
+# ----------------------------------------------------------------------
+# review regressions: cumulative admission, pinned resize, loss report
+# ----------------------------------------------------------------------
+def _never_fit_prompt(kv_segs=2):
+    """Prompt whose TOTAL KV is ~2x the KV budget while every 64-token
+    chunk fits individually — the mid-prefill wedge shape."""
+    per = kv_bytes_per_token(CFG)
+    budget = kv_segs * SEG + (WSEG - WEIGHTS)     # bytes beyond weights
+    return 64 * max(int(2 * budget / per) // 64, 2)
+
+
+@pytest.mark.parametrize("kw", [{"prefill_chunk_tokens": 64},
+                                {"iteration_token_budget": 64},
+                                {}])
+def test_cumulative_prompt_kv_rejected_not_wedged(kw):
+    """A request whose chunks/slices fit one at a time but whose whole
+    prompt can never fit the KV budget is REJECTED at admission —
+    previously it wedged mid-prefill forever, holding partial KV."""
+    cluster = NPUCluster(core=SMALL_CORE, policy="neu10")
+    sess = ServingSession(cluster)
+    h = sess.register_generative(
+        "big", CFG, prompt_len=_never_fit_prompt(), gen_lens=4,
+        eu_budget=4, kv_policy="evict", hbm_bytes=WSEG + 2 * SEG, **kw)
+    sess.submit(h, at_s=0.0)
+    sess.submit(h, at_s=0.0)
+    sess.drain()
+    rt = sess.sim.tenants[h.sim_idx]
+    assert rt.stats.kv_rejected == 2
+    assert rt.stats.requests_done == 0
+    assert rt.in_flight == 0                      # nothing wedged
+    assert h.vnpu.kv_ledger.in_use == 0           # no partial-KV leak
+    # and the loss is visible at the serving layer
+    assert sess.report(h)[0].kv_rejected == 2
+
+
+def test_resize_keeps_registration_hbm_pin():
+    """A resize must keep honoring the hbm_bytes pin the tenant
+    registered with — re-inflating to the footprint estimate would
+    silently dissolve the KV pressure the operator configured."""
+    sess, chat = _pressure_session("evict", kv_segs=2)
+    pinned = chat.vnpu.kv_ledger.capacity
+    sess.run_until(1e-4)
+    sess.resize(chat, 6)
+    led = chat.vnpu.kv_ledger
+    # capacity may only grow by the occupancy floor, never jump to
+    # the (orders-of-magnitude larger) footprint estimate
+    floor = -(-(led.reserved + led.in_use) // SEG) * SEG
+    assert led.capacity <= max(pinned, floor)
+    sess.drain()
+    assert sess.sim.tenants[chat.sim_idx].stats.requests_done == 24
+    # pressure still exists after the resize round trip
+    assert sess.sim.tenants[chat.sim_idx].stats.kv_evictions >= 1
