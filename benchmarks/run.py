@@ -29,6 +29,7 @@ from benchmarks import (
     fig26_hbm,
     fig_chunked_prefill,
     fig_colocation,
+    fig_fabric,
     fig_kv_pressure,
     table3_harvest_overhead,
 )
@@ -43,6 +44,7 @@ SUITES = {
     "fig26": fig26_hbm,
     "fig_colocation": fig_colocation,
     "fig_chunked_prefill": fig_chunked_prefill,
+    "fig_fabric": fig_fabric,
     "fig_kv_pressure": fig_kv_pressure,
 }
 

@@ -11,6 +11,13 @@ from repro.core.allocator import (
     eu_utilization,
     normalized_exec_time,
     optimal_ratio,
+    place_phase_pair,
+)
+from repro.core.fabric import (
+    FabricLink,
+    FabricTopology,
+    Placement,
+    random_phase_pair,
 )
 from repro.core.compiler import (
     CompiledPhase,
@@ -46,6 +53,11 @@ __all__ = [
     "eu_utilization",
     "normalized_exec_time",
     "optimal_ratio",
+    "place_phase_pair",
+    "FabricLink",
+    "FabricTopology",
+    "Placement",
+    "random_phase_pair",
     "CompiledPhase",
     "CompiledRequestPlan",
     "ProgramCache",

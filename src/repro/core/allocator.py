@@ -18,11 +18,14 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import TYPE_CHECKING, Optional, Sequence, Tuple
 
 from repro.core.vnpu import VNPUConfig
 from repro.npu.cost_model import WorkloadTrace
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.fabric import FabricTopology
 
 
 def normalized_exec_time(m: float, v: float, n_m: int, n_v: int) -> float:
@@ -106,6 +109,45 @@ def allocate_for_trace(trace: WorkloadTrace, total_eus: int,
                        core: NPUCoreConfig = DEFAULT_CORE) -> Allocation:
     m, v = trace.profile_mv()
     return allocate_eus(m, v, total_eus, core)
+
+
+def place_phase_pair(topology: "FabricTopology",
+                     loads: Optional[Sequence[float]] = None,
+                     kv_bytes: float = 0.0,
+                     distinct: bool = True) -> Tuple[int, int]:
+    """Topology-aware companion to the Eq. 1-4 split: pick the
+    (prefill_core, decode_core) pair for a chatty phase pair — a
+    generative tenant's prefill pool hands every request's KV to its
+    decode pool, so the pools must land on NEIGHBORING cores.
+
+    Minimizes, in order: the priced hand-off cost
+    (``topology.transfer_cycles`` of one request's ``kv_bytes`` —
+    hop count x bytes over the link model), then the combined load of
+    the two cores (``loads``, any per-core utilization measure; the
+    control plane passes EU + memory used fractions), then the core
+    ids (deterministic tie-break). ``distinct`` keeps the pools on
+    separate cores (the disaggregation invariant) whenever the fabric
+    has more than one."""
+    n = topology.n_cores
+    if loads is not None and len(loads) != n:
+        raise ValueError(
+            f"loads has {len(loads)} entries for {n} cores")
+    best_key: Optional[Tuple] = None
+    best = (0, 0)
+    for a in range(n):
+        for b in range(n):
+            if distinct and n > 1 and a == b:
+                continue
+            cost = topology.transfer_cycles(a, b, kv_bytes)
+            if not math.isfinite(cost):
+                continue              # disconnected: never pair them
+            load = (loads[a] + loads[b]) if loads is not None else 0.0
+            key = (cost, load, a, b)
+            if best_key is None or key < best_key:
+                best_key, best = key, (a, b)
+    if best_key is None:
+        raise ValueError("no connected core pair in the topology")
+    return best
 
 
 def estimate_memory(trace: WorkloadTrace, n_me: int,

@@ -95,11 +95,16 @@ class VNPUManager:
 
     # ------------------------------------------------------------------
     def create(self, cfg: VNPUConfig, name: str = "",
-               mapping: str = "spatial") -> VNPU:
+               mapping: str = "spatial",
+               core_hint: Optional[int] = None) -> VNPU:
+        """``core_hint`` pins placement to one core index (the fabric
+        control plane's topology-aware choice; a live per-core
+        simulation also pins resizes so a tenant cannot silently hop
+        cores). ``None`` keeps the unrestricted greedy rule."""
         cfg.validate(self.core_cfg)
         v = VNPU(config=cfg, name=name, mapping=mapping)
         self.vnpus[v.vnpu_id] = v
-        self._map(v)
+        self._map(v, core_hint=core_hint)
         return v
 
     def destroy(self, v: VNPU) -> None:
@@ -127,7 +132,8 @@ class VNPUManager:
             cs.residents.remove(v.vnpu_id)
         v.destroy()
 
-    def reconfigure(self, v: VNPU, cfg: VNPUConfig) -> VNPU:
+    def reconfigure(self, v: VNPU, cfg: VNPUConfig,
+                    core_hint: Optional[int] = None) -> VNPU:
         """Paper hypercall (2): change an existing vNPU's config.
 
         All-or-nothing: if the new config cannot be placed, the old
@@ -147,13 +153,15 @@ class VNPUManager:
         self.destroy(v)
 
         def _restore() -> VNPU:
-            restored = self.create(old_cfg, name=v.name, mapping=mapping)
+            restored = self.create(old_cfg, name=v.name, mapping=mapping,
+                                   core_hint=core_hint)
             if old_ledger is not None:
                 restored.kv_ledger.migrate_from(old_ledger)
             return restored
 
         try:
-            nv = self.create(cfg, name=v.name, mapping=mapping)
+            nv = self.create(cfg, name=v.name, mapping=mapping,
+                             core_hint=core_hint)
         except RuntimeError as exc:
             raise ReconfigureError(
                 f"reconfigure of vNPU {v.name!r} to "
@@ -176,6 +184,14 @@ class VNPUManager:
                 return cs
         return None
 
+    def core_index_of(self, v: VNPU) -> int:
+        """Fabric-facing: index (into ``self.cores``) of the core a
+        vNPU is mapped on. Raises for an unmapped/destroyed vNPU."""
+        for i, cs in enumerate(self.cores):
+            if v.vnpu_id in cs.residents:
+                return i
+        raise ValueError(f"vNPU {v.name!r} is not mapped on any core")
+
     def _alloc_segments(self, cs: CoreState, cfg: VNPUConfig) -> MemorySegments:
         c = cs.core
         n_sram = -(-max(cfg.sram_bytes, c.sram_segment) // c.sram_segment)
@@ -188,8 +204,15 @@ class VNPUManager:
         del cs.free_hbm_segs[:n_hbm]
         return MemorySegments(sram, hbm, c.sram_segment, c.hbm_segment)
 
-    def _map(self, v: VNPU) -> None:
+    def _map(self, v: VNPU, core_hint: Optional[int] = None) -> None:
         cfg = v.config
+        pool = self.cores
+        if core_hint is not None:
+            if not 0 <= core_hint < len(self.cores):
+                raise ValueError(
+                    f"core_hint {core_hint} out of range for "
+                    f"{len(self.cores)} cores")
+            pool = [self.cores[core_hint]]
         if v.mapping == "spatial":
             # greedy §III-C: among cores that fit, pick the one where
             # adding this vNPU best balances EU-frac vs mem-frac.
@@ -203,7 +226,7 @@ class VNPUManager:
                 )
                 return abs(eu - mem)
 
-            candidates = [cs for cs in self.cores if cs.fits_spatial(cfg)]
+            candidates = [cs for cs in pool if cs.fits_spatial(cfg)]
             if not candidates:
                 raise RuntimeError(
                     f"no pNPU core fits vNPU {cfg.n_me}ME/{cfg.n_ve}VE "
@@ -216,7 +239,7 @@ class VNPUManager:
             del cs.free_ves[: cfg.n_ve]
         else:
             # temporal: least-loaded core by oversubscribed demand
-            cs = min(self.cores, key=lambda c: c.demand_me + c.demand_ve)
+            cs = min(pool, key=lambda c: c.demand_me + c.demand_ve)
             cs.demand_me += cfg.n_me
             cs.demand_ve += cfg.n_ve
             v.me_ids = tuple(range(cfg.n_me))   # logical ids

@@ -162,6 +162,15 @@ class SchedulerPolicy(ABC):
     def on_tenant_removed(self, sim: "Simulator", rt) -> None:
         """Called after a tenant runtime is deregistered mid-run."""
 
+    def on_request_migrated(self, sim: "Simulator", rt, req) -> None:
+        """Called after a request migrated in from ANOTHER core's
+        simulator (cross-core prefill->decode hand-off over the
+        cluster fabric) and joined ``rt``'s continuous decode batch.
+        Policies with per-tenant warm state can prime it here; the
+        default is a no-op — the request is already queued and the
+        dispatch pass that follows the hand-off event schedules it
+        like any decode work."""
+
     # ---------------- the actual scheduler ----------------
     @abstractmethod
     def schedule(self, sim: "Simulator", t: float) -> None:

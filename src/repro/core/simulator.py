@@ -70,7 +70,8 @@ import itertools
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Deque, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 from repro.core.compiler import (DECODE, PIGGYBACK, SWAPIN, CompiledPhase,
                                  CompiledRequestPlan)
@@ -87,6 +88,8 @@ from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 EPS = 1e-9
 
 _ARRIVAL = "arr"  # heap event kind for open-loop request arrivals
+_MIGRATE = "mig"  # heap event kind for cross-core decode hand-offs
+                  # landing after their fabric transfer delay
 
 
 def _build_chunk_specs(prog, is_neuisa: bool):
@@ -252,6 +255,17 @@ class TenantStats:
     kv_truncated: int = 0            # requests force-finished early: no
                                      # co-tenant victim left to evict
     kv_swapped_bytes: float = 0.0    # cumulative bytes swapped out
+    # ---- cross-core fabric migration (zero off-fabric) ----
+    kv_migrations: int = 0           # prefill->decode hand-offs this
+                                     # tenant's requests took to another
+                                     # core's decode pool
+    kv_migrated_bytes: float = 0.0   # KV bytes those hand-offs moved
+                                     # over the inter-core links
+    cross_core_hops: int = 0         # fabric hops those hand-offs
+                                     # traversed (cumulative)
+    kv_migration_rejects: int = 0    # hand-offs refused on DESTINATION
+                                     # ledger pressure (request decoded
+                                     # locally instead)
     kv_peak_bytes: float = 0.0       # peak ledger occupancy (bytes,
                                      # weights + live KV)
     kv_peak_segments: int = 0        # peak HBM isolation segments occupied
@@ -402,6 +416,12 @@ class _TenantRT:
                 f"kv_policy='evict' needs one (compile the plan from a "
                 f"trace-layer request_plan)")
         self.swapped: List[_Request] = []  # evicted, awaiting swap-in
+        # cluster fabric: called when a request finishes prefill and
+        # decode steps remain — returning True means the hand-off was
+        # taken (the request continues on another core's decode pool);
+        # False / None keeps the PR-3 local-decode path bit-identical
+        self.migrate_hook: Optional[Callable[["_TenantRT", _Request,
+                                              float], bool]] = None
         self._rid = itertools.count()      # per-request ledger keys
         self._t = 0.0                      # time of the current pick
         self.ready_me: List[Chunk] = []
@@ -889,7 +909,12 @@ class _TenantRT:
                 req.tokens_done = 1       # prefill emits the first token
                 req.last_token_t = t
                 if req.gen_len > 1 and self.plan.has_decode:
-                    self.decoding.append(req)
+                    # fabric hand-off point: a disaggregated tenant's
+                    # decode pool may live on another core (hook True
+                    # = migrated; rejected hand-offs decode locally)
+                    if not (self.migrate_hook is not None
+                            and self.migrate_hook(self, req, t)):
+                        self.decoding.append(req)
                 else:
                     self._complete_request(req, t)
         self.active = []
@@ -933,7 +958,10 @@ class _TenantRT:
             req.tokens_done = 1      # the final slice emits token 1
             req.last_token_t = t
             if req.gen_len > 1 and self.plan.has_decode:
-                self.decoding.append(req)
+                # same fabric hand-off point as the monolithic path
+                if not (self.migrate_hook is not None
+                        and self.migrate_hook(self, req, t)):
+                    self.decoding.append(req)
             else:
                 self._complete_request(req, t)
         else:
@@ -1068,6 +1096,33 @@ class _TenantRT:
             return
         self.start_request(t, arrival=t, gen_len=gen_len)
 
+    # ---------------- cluster-fabric migration ----------------
+    def clone_inbound(self, req: _Request) -> _Request:
+        """Materialize the migrated-in copy of ANOTHER core's request
+        (cross-core prefill->decode hand-off): a fresh ledger rid on
+        THIS tenant, with the arrival timestamp and token cursors
+        preserved so end-to-end latency still spans the original
+        arrival and the first decode token's TBT sample carries the
+        fabric transfer gap."""
+        m = _Request(req.arrival, req.gen_len, rid=next(self._rid))
+        m.tokens_done = req.tokens_done
+        m.last_token_t = req.last_token_t
+        m.ttft_seen = req.ttft_seen     # TTFT sampled on the prefill core
+        return m
+
+    def admit_migrated(self, t: float, req: _Request) -> None:
+        """A request that finished prefill on another core joins this
+        tenant's continuous decode batch (its KV was charged to this
+        vNPU's ledger at hand-off time — see the session's migration
+        hook). Dropped silently if the tenant was deregistered while
+        the transfer was in flight (the ledger clear on removal
+        already released the charge)."""
+        if self.removed:
+            return
+        self.decoding.append(req)
+        if not self.in_request:
+            self._start_iteration(t)
+
 
 # ----------------------------------------------------------------------
 class Simulator:
@@ -1115,6 +1170,10 @@ class Simulator:
         self._heap: List[Tuple[float, int, str, int, int]] = []
         self._seq = itertools.count()
         self._tok = itertools.count()
+        # in-flight cross-core hand-offs keyed by token: the payload
+        # is (request clone, optional landing callback)
+        self._mig_payloads: Dict[int, Tuple["_Request",
+                                            Optional[Callable]]] = {}
         self._events = 0
         self.policy_obj.on_attach(self)
         for s in tenants:
@@ -1250,6 +1309,35 @@ class Simulator:
                        (max(at, self.now), next(self._seq), _ARRIVAL, idx,
                         -1 if gen_len is None else int(gen_len)))
 
+    def inject_migration(self, idx: int, at: float, req: "_Request",
+                         on_land: Optional[Callable[[float], None]] = None,
+                         ) -> None:
+        """Cluster-fabric hand-off: a request that finished prefill on
+        ANOTHER core's simulator joins tenant ``idx``'s decode batch
+        at cycle ``at`` (hand-off time + the priced link transfer).
+        ``req`` must be this tenant's own clone
+        (:meth:`_TenantRT.clone_inbound`) — its KV charge happened at
+        hand-off. ``on_land`` fires when the transfer lands (the
+        serving session's in-transit accounting)."""
+        rt = self.tenants[idx]
+        if rt.removed:
+            raise ValueError(f"tenant {idx} was deregistered")
+        if at < self.now - EPS:
+            raise ValueError(
+                f"migration landing at {at} is in the past (now={self.now})")
+        key = next(self._tok)
+        self._mig_payloads[key] = (req, on_land)
+        heapq.heappush(self._heap,
+                       (max(at, self.now), next(self._seq), _MIGRATE, idx,
+                        key))
+
+    @property
+    def next_event_at(self) -> float:
+        """Cycle time of the earliest pending event (inf when idle) —
+        the cluster-level lockstep driver advances whichever core's
+        simulator is globally earliest."""
+        return self._heap[0][0] if self._heap else math.inf
+
     # ------------------------------------------------------------------
     # event loop
     # ------------------------------------------------------------------
@@ -1312,6 +1400,15 @@ class Simulator:
         if kind == _ARRIVAL:
             # the token slot carries the per-request gen_len (-1: default)
             self.tenants[eid].arrive(t, gen_len=None if token < 0 else token)
+            return True
+        if kind == _MIGRATE:
+            req, on_land = self._mig_payloads.pop(token)
+            rt = self.tenants[eid]
+            rt.admit_migrated(t, req)
+            if not rt.removed:
+                self.policy_obj.on_request_migrated(self, rt, req)
+            if on_land is not None:
+                on_land(t)
             return True
         eng = (self.mes if kind == ME else self.ves)[eid]
         if eng.token != token:

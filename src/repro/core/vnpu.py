@@ -218,6 +218,32 @@ class KVLedger:
         self.peak_segments = max(self.peak_segments, other.peak_segments)
         self._mark()
 
+    def migrate_entry_to(self, dst: "KVLedger", rid: int,
+                         dst_rid: Optional[int] = None) -> int:
+        """Cross-ledger transfer of ONE request's allocation (the
+        fabric's prefill->decode hand-off between cores): the
+        DESTINATION ledger is charged first, all-or-nothing, and only
+        then does the source free — a crash or reject mid-protocol
+        can never leak or double-count segments.
+
+        Returns the bytes moved, or -1 when the destination cannot
+        hold them (destination pressure: nothing changed on either
+        side — the caller falls back to local decode). Raises
+        :class:`KVLedgerError` for an unknown source rid, exactly
+        like :meth:`free`."""
+        if rid not in self.entries:
+            raise KVLedgerError(
+                f"migrate of unknown/already-freed rid {rid}")
+        n = self.entries[rid]
+        if dst is self:
+            return n                   # same ledger: nothing to move
+        if dst_rid is None:
+            dst_rid = rid
+        if not dst.alloc(dst_rid, n):
+            return -1                  # reject: both ledgers untouched
+        self.free(rid)
+        return n
+
     def _mark(self) -> None:
         used = self.reserved + self.in_use
         if used > self.peak_bytes:

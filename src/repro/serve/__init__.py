@@ -1,5 +1,6 @@
 from repro.serve.engine import ServeEngine
 from repro.serve.session import (
+    FabricTenant,
     GenLenDistribution,
     NPUCluster,
     PoissonArrivals,
@@ -14,6 +15,7 @@ from repro.serve.vserve import MultiTenantServer, Tenant
 
 __all__ = [
     "ServeEngine",
+    "FabricTenant",
     "GenLenDistribution",
     "NPUCluster",
     "ServingSession",

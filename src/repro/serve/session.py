@@ -8,7 +8,11 @@ Layered request-level API over the policy-agnostic simulator:
   registered :class:`~repro.core.policies.SchedulerPolicy` name (or
   class) selects the mapping scheme and compiler front-end.
 * :class:`ServingSession` — the request plane: an *open-loop* run on
-  one pNPU core. Requests arrive from Poisson or trace-driven arrival
+  a pNPU cluster (one live simulator per core, lockstep-driven;
+  :meth:`ServingSession.register_generative` with a ``placement``
+  disaggregates prefill/decode pools across cores with priced
+  cross-core KV hand-offs). Requests arrive from Poisson or
+  trace-driven arrival
   processes (or one at a time via :meth:`ServingSession.submit`),
   queue per tenant, and are scheduled at μTOp granularity by the
   cluster's policy. Tenants can be registered, deregistered, and
@@ -34,18 +38,21 @@ Example::
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, fields as _dc_fields
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.allocator import (Allocation, allocate_for_trace,
-                                  estimate_memory, eu_utilization)
+                                  estimate_memory, eu_utilization,
+                                  place_phase_pair)
 from repro.core.compiler import CompiledRequestPlan, ProgramCache
+from repro.core.fabric import FabricTopology, Placement, random_phase_pair
 from repro.core.mapper import ReconfigureError, VNPUManager
 from repro.core.policies import PolicyLike, resolve_policy
-from repro.core.simulator import SimResult, Simulator, TenantSpec
+from repro.core.simulator import (SimResult, Simulator, TenantSpec,
+                                  TenantStats)
 from repro.core.stats import percentile
 from repro.core.vnpu import VNPU, VNPUConfig
 from repro.npu.cost_model import RequestPlan, WorkloadTrace
@@ -100,6 +107,14 @@ class TenantHandle:
     vnpu: Optional[VNPU] = None
     sim_idx: int = -1            # index in the live simulator (-1: none)
     attached_at: float = 0.0     # cycles when the session attached it
+    # ---- cluster fabric (multi-pNPU sessions) ----
+    core_idx: int = 0            # core whose per-core simulator owns it
+    core_hint: Optional[int] = None  # placement pin: resizes must stay
+                                 # on this core (a live per-core sim
+                                 # cannot follow a silent core hop)
+    fabric_role: str = ""        # "" | "prefill" | "decode" — set when
+                                 # the handle is one side of a
+                                 # disaggregated FabricTenant pair
     # ---- generative tenants (phase-structured requests) ----
     plan: Optional[RequestPlan] = None
     gen_lens: Optional[GenLenDistribution] = None
@@ -159,6 +174,12 @@ class TenantReport:
     kv_rejected: int = 0         # admission-rejected (prompt can never fit)
     kv_restarts: int = 0         # reject-policy victims re-queued from 0
     kv_truncated: int = 0        # force-finished (single-request OOM)
+    # ---- cross-core fabric migration (zero off-fabric) ----
+    kv_migrations: int = 0       # prefill->decode hand-offs to another core
+    kv_migrated_bytes: float = 0.0  # KV bytes moved over inter-core links
+    cross_core_hops: int = 0     # cumulative fabric hops those moves took
+    kv_migration_rejects: int = 0  # hand-offs refused on destination
+                                 # pressure (decoded locally instead)
 
 
 # ----------------------------------------------------------------------
@@ -200,9 +221,27 @@ class NPUCluster:
     more pNPUs, under a pluggable scheduler policy."""
 
     def __init__(self, core: NPUCoreConfig = DEFAULT_CORE,
-                 n_pnpus: int = 1, policy: PolicyLike = "neu10"):
+                 n_pnpus: int = 1, policy: PolicyLike = "neu10",
+                 topology: Optional[FabricTopology] = None):
+        """``topology`` wires the pNPUs into a cluster fabric
+        (:class:`~repro.core.fabric.FabricTopology`): it fixes the
+        core count and prices every cross-core KV hand-off. Default:
+        a single core, or — for ``n_pnpus > 1`` with no explicit
+        fabric — a fully-connected one-hop fabric (the degenerate
+        pre-fabric behavior)."""
         self.policy_cls = type(resolve_policy(policy))
         self.core = core
+        if topology is not None:
+            if n_pnpus not in (1, topology.n_cores):
+                raise ValueError(
+                    f"n_pnpus={n_pnpus} contradicts the "
+                    f"{topology.n_cores}-core topology")
+            n_pnpus = topology.n_cores
+        elif n_pnpus == 1:
+            topology = FabricTopology.single()
+        else:
+            topology = FabricTopology.fully_connected(n_pnpus)
+        self.topology = topology
         self.manager = VNPUManager(n_pnpus=n_pnpus, core=core)
         self.tenants: List[TenantHandle] = []
         # per-(phase, context-bucket) compiled programs, shared across
@@ -241,7 +280,8 @@ class NPUCluster:
                  slo_ttft_ms: Optional[float] = None,
                  slo_tbt_ms: Optional[float] = None,
                  kv_policy: Optional[str] = None,
-                 hbm_bytes: Optional[int] = None) -> TenantHandle:
+                 hbm_bytes: Optional[int] = None,
+                 core_hint: Optional[int] = None) -> TenantHandle:
         """Pay-as-you-go entry point: the tenant buys `eu_budget` EUs;
         the allocator picks the ME/VE split from the compile-time
         profile (§III-B). Generative tenants pass ``plan`` (the trace
@@ -253,7 +293,11 @@ class NPUCluster:
         (``"evict"`` | ``"reject"``) turns on live KV-cache
         accounting against that allocation: the plan's weights are
         reserved up front and every request's KV is charged to the
-        vNPU's :class:`~repro.core.vnpu.KVLedger` as it runs."""
+        vNPU's :class:`~repro.core.vnpu.KVLedger` as it runs.
+
+        ``core_hint`` pins placement (and every later resize) to one
+        core index — the fabric control plane's topology-aware
+        choice."""
         if kv_policy and (plan is None or plan.kv_token_bytes <= 0):
             raise ValueError(
                 f"kv_policy={kv_policy!r} needs a generative plan with "
@@ -268,7 +312,7 @@ class NPUCluster:
                 VNPUConfig(n_me=alloc.n_me, n_ve=alloc.n_ve,
                            sram_bytes=sram, hbm_bytes=hbm,
                            priority=priority),
-                name=name, mapping=self.mapping)
+                name=name, mapping=self.mapping, core_hint=core_hint)
         except RuntimeError:
             # admission control: the unconstrained Eq.-4 pick doesn't
             # fit next to existing tenants — re-allocate over the
@@ -276,7 +320,7 @@ class NPUCluster:
             # recovers most of the gap at runtime (§III-B).
             alloc, vnpu = self._constrained_register(
                 trace, alloc, eu_budget, priority, name,
-                hbm_override=hbm_bytes)
+                hbm_override=hbm_bytes, core_hint=core_hint)
         if kv_policy:
             # weights are resident for the tenant's lifetime; the
             # remainder of the segment allocation is the KV budget
@@ -295,7 +339,8 @@ class NPUCluster:
                          slo_tbt_ms=slo_tbt_ms,
                          kv_policy=kv_policy or "",
                          hbm_bytes=(int(hbm_bytes)
-                                    if hbm_bytes is not None else None))
+                                    if hbm_bytes is not None else None),
+                         core_hint=core_hint)
         self.tenants.append(h)
         return h
 
@@ -360,9 +405,12 @@ class NPUCluster:
 
     def _constrained_register(self, trace, alloc, eu_budget, priority,
                               name, hbm_override: Optional[int] = None,
+                              core_hint: Optional[int] = None,
                               ) -> Tuple[Allocation, VNPU]:
+        cores = (self.manager.cores if core_hint is None
+                 else [self.manager.cores[core_hint]])
         feasible = set()
-        for cs in self.manager.cores:
+        for cs in cores:
             free_me, free_ve = len(cs.free_mes), len(cs.free_ves)
             for n_me in range(1, free_me + 1):
                 for n_ve in range(1, free_ve + 1):
@@ -381,14 +429,14 @@ class NPUCluster:
             hbm = int(hbm_override)
         # cap the memory ask to what remains (§III-B: oversized models
         # fall back to tensor swapping / multi-vNPU allocation)
-        free_hbm = max(len(cs.free_hbm_segs) for cs in self.manager.cores)
-        free_sram = max(len(cs.free_sram_segs) for cs in self.manager.cores)
+        free_hbm = max(len(cs.free_hbm_segs) for cs in cores)
+        free_sram = max(len(cs.free_sram_segs) for cs in cores)
         hbm = min(hbm, free_hbm * self.core.hbm_segment)
         sram = min(sram, free_sram * self.core.sram_segment)
         vnpu = self.manager.create(
             VNPUConfig(n_me=n_me, n_ve=n_ve, sram_bytes=sram,
                        hbm_bytes=hbm, priority=priority),
-            name=name, mapping=self.mapping)
+            name=name, mapping=self.mapping, core_hint=core_hint)
         new_alloc = Allocation(
             n_me, n_ve, eu_utilization(alloc.m, alloc.v, n_me, n_ve),
             alloc.k_star, alloc.m, alloc.v)
@@ -448,7 +496,8 @@ class NPUCluster:
                 handle.vnpu, VNPUConfig(
                     n_me=alloc.n_me, n_ve=alloc.n_ve,
                     sram_bytes=sram, hbm_bytes=hbm,
-                    priority=handle.priority))
+                    priority=handle.priority),
+                core_hint=handle.core_hint)
         except ReconfigureError as exc:
             handle.vnpu = exc.restored
             alloc = self._constrained_resize(handle, eu_budget, alloc, exc)
@@ -516,7 +565,8 @@ class NPUCluster:
         handle.vnpu = self.manager.reconfigure(
             handle.vnpu, VNPUConfig(n_me=n_me, n_ve=n_ve,
                                     sram_bytes=sram, hbm_bytes=hbm,
-                                    priority=handle.priority))
+                                    priority=handle.priority),
+            core_hint=handle.core_hint)
         return Allocation(
             n_me, n_ve, eu_utilization(alloc.m, alloc.v, n_me, n_ve),
             alloc.k_star, alloc.m, alloc.v)
@@ -598,7 +648,30 @@ def _tenant_report(h: TenantHandle, st, ms: float,
         kv_rejected=st.kv_rejected,
         kv_restarts=st.kv_restarts,
         kv_truncated=st.kv_truncated,
+        kv_migrations=st.kv_migrations,
+        kv_migrated_bytes=st.kv_migrated_bytes,
+        cross_core_hops=st.cross_core_hops,
+        kv_migration_rejects=st.kv_migration_rejects,
     )
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class FabricTenant:
+    """A disaggregated generative tenant on the cluster fabric: a
+    prefill pool and a decode pool, each its own :class:`TenantHandle`
+    on its own core, joined by the priced cross-core KV hand-off
+    (:meth:`ServingSession.register_generative` with ``placement=``).
+    ``in_transit`` counts hand-offs currently on the wire (charged to
+    the destination ledger, not yet landed in its decode batch)."""
+
+    name: str
+    prefill: TenantHandle
+    decode: TenantHandle
+    prefill_core: int
+    decode_core: int
+    hops: int                    # fabric hops each hand-off traverses
+    in_transit: int = 0
 
 
 # ----------------------------------------------------------------------
@@ -606,7 +679,12 @@ class SLOAutoscaler:
     """SLO-aware autoscaling as a session hook (replaces the ad-hoc
     ``autoscale_to_slo`` loop): after each window, if a tenant's
     recent p95 violates its SLO, grow its EU budget by ``step_eus``
-    up to ``max_eus``. Returns the new budget, or None to hold."""
+    up to ``max_eus``. Returns the new budget, or None to hold.
+
+    Fabric phase pairs are judged PER CORE through
+    :meth:`decide_phase`: a TTFT violation grows the prefill-side
+    vNPU on the prefill core, a TBT violation the decode-side one —
+    never the wrong pool on the wrong core."""
 
     def __init__(self, step_eus: int = 2, max_eus: int = 8,
                  window: int = 16, min_samples: int = 4):
@@ -628,6 +706,21 @@ class SLOAutoscaler:
             return None
         return min(handle.eu_budget + self.step_eus, self.max_eus)
 
+    def decide_phase(self, session: "ServingSession", handle: TenantHandle,
+                     recent_ms: Sequence[float],
+                     slo_ms: Optional[float]) -> Optional[int]:
+        """Per-phase variant for fabric pairs: judge ``recent_ms``
+        (TTFT samples for a prefill pool, TBT samples for a decode
+        pool) against that phase's own SLO, growing only ``handle`` —
+        the vNPU on the violating core."""
+        if slo_ms is None or handle.eu_budget >= self.max_eus:
+            return None
+        if len(recent_ms) < self.min_samples:
+            return None
+        if percentile(recent_ms[-self.window:], 0.95) <= slo_ms:
+            return None
+        return min(handle.eu_budget + self.step_eus, self.max_eus)
+
 
 AutoscaleHook = Callable[["ServingSession", TenantHandle, Sequence[float]],
                          Optional[int]]
@@ -635,36 +728,49 @@ AutoscaleHook = Callable[["ServingSession", TenantHandle, Sequence[float]],
 
 # ----------------------------------------------------------------------
 class ServingSession:
-    """Request plane: an open-loop serving run on one pNPU core.
+    """Request plane: an open-loop serving run on a pNPU cluster.
 
-    The session owns a live :class:`Simulator` for the cluster's
-    policy; requests are injected at arrival timestamps and the
-    simulation advances with :meth:`run_until` / :meth:`drain`.
-    Between advances, tenants can be registered, deregistered, and
-    re-sized without restarting — in-flight work continues."""
+    The session owns ONE live :class:`Simulator` per physical core,
+    driven in lockstep by a cluster-level scheduler (:meth:`_advance`:
+    always advance the globally-earliest core, so a cross-core
+    hand-off can never land in another core's past). Requests are
+    injected at arrival timestamps and the simulation advances with
+    :meth:`run_until` / :meth:`drain`. Between advances, tenants can
+    be registered, deregistered, and re-sized without restarting —
+    in-flight work continues. A single-core cluster drives its one
+    simulator directly (bit-identical to the pre-fabric engine).
+
+    Disaggregated serving: :meth:`register_generative` with a
+    :class:`~repro.core.fabric.Placement` splits a generative tenant
+    into a prefill pool and a decode pool on (topology-aware) separate
+    cores; every finished prefill hands its request — and its live KV
+    bytes — to the decode core over the priced fabric link."""
 
     def __init__(self, cluster: NPUCluster, hbm_scale: float = 1.0,
                  fair_slice: float = 50_000.0,
                  autoscaler: Optional[AutoscaleHook] = None):
-        if len(cluster.manager.cores) != 1:
-            raise ValueError(
-                "ServingSession simulates a single pNPU core; shard "
-                "multi-pNPU fleets into one session per core")
         self.cluster = cluster
         self.autoscaler = autoscaler
-        self.sim = Simulator((), policy=cluster.policy_cls,
-                             core=cluster.core, hbm_scale=hbm_scale,
-                             fair_slice=fair_slice)
-        self._autoscale_cursor: Dict[int, int] = {}  # sim_idx -> consumed
+        self.sims: List[Simulator] = [
+            Simulator((), policy=cluster.policy_cls, core=cluster.core,
+                      hbm_scale=hbm_scale, fair_slice=fair_slice)
+            for _ in cluster.manager.cores
+        ]
+        self.sim = self.sims[0]   # single-core back-compat alias
+        self.fabric_tenants: List[FabricTenant] = []
+        # autoscale windows consumed, keyed (core_idx, sim_idx[, series])
+        self._autoscale_cursor: Dict[Tuple, int] = {}
         for h in cluster.tenants:
             self._attach(h)
 
     # ------------------------------------------------------------------
     @property
     def now_s(self) -> float:
-        """Current simulated time in SECONDS (the simulator's clock is
-        cycles; the session API is seconds everywhere)."""
-        return self.sim.now / self.cluster.core.freq_hz
+        """Current simulated time in SECONDS (the simulators' clock is
+        cycles; the session API is seconds everywhere). Multi-core:
+        the furthest-advanced core's clock — lockstep driving keeps
+        every core at most one pending event apart."""
+        return max(s.now for s in self.sims) / self.cluster.core.freq_hz
 
     def _cycles(self, t_s: float) -> float:
         """Seconds (session API) -> cycles (simulator domain)."""
@@ -679,16 +785,31 @@ class ServingSession:
         else:
             prog = self.cluster.compile(handle.trace)
             spec = TenantSpec(prog, handle.vnpu, weight=handle.priority)
-        handle.sim_idx = self.sim.add_tenant(spec, open_loop=True)
-        handle.attached_at = self.sim.now
-        self._autoscale_cursor[handle.sim_idx] = 0
+        handle.core_idx = self.cluster.manager.core_index_of(handle.vnpu)
+        if handle.core_hint is None:
+            # pin resizes to this core: the live per-core simulator
+            # owns the tenant, so a reconfigure must not core-hop
+            handle.core_hint = handle.core_idx
+        sim = self.sims[handle.core_idx]
+        handle.sim_idx = sim.add_tenant(spec, open_loop=True)
+        handle.attached_at = sim.now
+        self._autoscale_cursor[(handle.core_idx, handle.sim_idx)] = 0
+
+    def _sim_of(self, handle: TenantHandle) -> Simulator:
+        return self.sims[handle.core_idx]
 
     def _rt(self, handle: TenantHandle):
         if handle.sim_idx < 0:
             raise ValueError(
                 f"tenant {handle.name!r} is not attached to this session "
                 f"(register it through the session, not the bare cluster)")
-        return self.sim.tenants[handle.sim_idx]
+        return self.sims[handle.core_idx].tenants[handle.sim_idx]
+
+    @staticmethod
+    def _ingress(handle: Union[TenantHandle, FabricTenant]) -> TenantHandle:
+        """Request-facing side of a tenant: a fabric pair admits every
+        request at its prefill pool."""
+        return handle.prefill if isinstance(handle, FabricTenant) else handle
 
     # ---------------- tenant lifecycle (all legal mid-run) ----------------
     def register(self, name: str, trace: WorkloadTrace, eu_budget: int,
@@ -710,22 +831,144 @@ class ServingSession:
         return h
 
     def register_generative(self, name: str, cfg: ModelConfig,
-                            **kw) -> TenantHandle:
+                            placement: Optional[Placement] = None,
+                            **kw) -> Union[TenantHandle, FabricTenant]:
         """Register a phase-structured LLM tenant mid-run (prefill +
         gen-length-distributed decode chain; see
-        :meth:`NPUCluster.register_generative`)."""
+        :meth:`NPUCluster.register_generative`).
+
+        ``placement`` disaggregates the tenant across the cluster
+        fabric: a prefill pool and a decode pool are registered as
+        separate vNPUs on separate cores (chosen topology-aware by
+        default — see :class:`~repro.core.fabric.Placement`), and
+        every request that finishes prefill migrates its KV to the
+        decode core over the priced link model. Returns a
+        :class:`FabricTenant` in that case."""
+        if placement is not None:
+            return self._register_fabric(name, cfg, placement, **kw)
         h = self.cluster.register_generative(name, cfg, **kw)
         self._attach(h)
         return h
 
-    def deregister(self, handle: TenantHandle) -> None:
+    def _register_fabric(self, name: str, cfg: ModelConfig,
+                         placement: Placement, eu_budget: int = 4,
+                         **kw) -> FabricTenant:
+        """Split one generative tenant into a cross-core phase pair.
+
+        The EU budget splits between the pools (half/half unless the
+        placement overrides); the TTFT SLO follows the prefill pool,
+        the TBT / e2e SLOs the decode pool. Core choice: explicit
+        placement > ``strategy="random"`` seeded pick >
+        topology-aware :func:`~repro.core.allocator.place_phase_pair`
+        (hand-off cost x load, the Eq. 1-4 allocator's fabric
+        companion)."""
+        topo = self.cluster.topology
+        man = self.cluster.manager
+        pre_eus = placement.prefill_eus or max(eu_budget // 2, 2)
+        dec_eus = placement.decode_eus or max(eu_budget - pre_eus, 2)
+        if (placement.prefill_core is not None
+                and placement.decode_core is not None):
+            cp, cd = placement.prefill_core, placement.decode_core
+        elif placement.strategy == "random":
+            cp, cd = random_phase_pair(topo, placement.seed)
+        else:
+            # price the pair by one request's hand-off payload: the
+            # whole prompt's KV plus the first token's
+            probe = request_plan(cfg, kw.get("batch", 1),
+                                 kw.get("prompt_len", 512), 1,
+                                 core=self.cluster.core)
+            kv_req = probe.kv_token_bytes * (kw.get("prompt_len", 512) + 1)
+            loads = [cs.eu_used_frac + cs.mem_used_frac
+                     for cs in man.cores]
+            cp, cd = place_phase_pair(topo, loads=loads, kv_bytes=kv_req)
+        pre_kw = dict(kw)
+        dec_kw = dict(kw)
+        pre_kw.pop("slo_tbt_ms", None)    # decode-side SLO
+        dec_kw.pop("slo_ttft_ms", None)   # prefill-side SLO
+        if placement.prefill_hbm_bytes is not None:
+            pre_kw["hbm_bytes"] = placement.prefill_hbm_bytes
+        if placement.decode_hbm_bytes is not None:
+            dec_kw["hbm_bytes"] = placement.decode_hbm_bytes
+        hp = self.register_generative(f"{name}/prefill", cfg,
+                                      eu_budget=pre_eus, core_hint=cp,
+                                      **pre_kw)
+        try:
+            hd = self.register_generative(f"{name}/decode", cfg,
+                                          eu_budget=dec_eus, core_hint=cd,
+                                          **dec_kw)
+        except Exception:
+            self.deregister(hp)   # all-or-nothing registration
+            raise
+        hp.fabric_role, hd.fabric_role = "prefill", "decode"
+        ft = FabricTenant(name=name, prefill=hp, decode=hd,
+                          prefill_core=cp, decode_core=cd,
+                          hops=int(topo.hops(cp, cd)))
+        self._rt(hp).migrate_hook = self._make_migrator(ft)
+        self.fabric_tenants.append(ft)
+        return ft
+
+    def _make_migrator(self, ft: FabricTenant):
+        """The cross-core hand-off protocol, installed as the prefill
+        runtime's ``migrate_hook``. Ordering is the all-or-nothing
+        ledger rule: the DESTINATION ledger is charged first; only on
+        success does the source free — a reject on destination
+        pressure leaves both ledgers untouched and the request decodes
+        locally on the prefill core (``kv_migration_rejects``)."""
+        topo = self.cluster.topology
+        cp, cd, hops = ft.prefill_core, ft.decode_core, ft.hops
+
+        def migrate(src_rt, req, t: float) -> bool:
+            hd = ft.decode
+            if hd.sim_idx < 0:
+                return False           # decode pool gone: stay local
+            dst_sim = self.sims[hd.core_idx]
+            dst_rt = dst_sim.tenants[hd.sim_idx]
+            if dst_rt.removed:
+                return False
+            mreq = dst_rt.clone_inbound(req)
+            src_led = src_rt._kv_led()
+            nbytes = (src_led.bytes_of(req.rid) if src_led is not None
+                      else src_rt.plan.kv_prompt_bytes)
+            dst_led = dst_rt._kv_led()
+            if dst_led is not None:
+                if not dst_rt._kv_charge(dst_led, mreq, nbytes):
+                    src_rt.stats.kv_migration_rejects += 1
+                    return False
+            if src_led is not None:
+                src_led.release(req.rid)   # free AFTER the dst charge
+            st = src_rt.stats
+            st.kv_migrations += 1
+            st.kv_migrated_bytes += nbytes
+            st.cross_core_hops += hops
+            ft.in_transit += 1
+
+            def land(_t: float) -> None:
+                ft.in_transit -= 1
+
+            delay = topo.transfer_cycles(cp, cd, nbytes)
+            dst_sim.inject_migration(hd.sim_idx, t + delay, mreq,
+                                     on_land=land)
+            return True
+
+        return migrate
+
+    def deregister(self,
+                   handle: Union[TenantHandle, FabricTenant]) -> None:
         """Remove a tenant mid-run: queued + in-flight requests are
         dropped, its engines free immediately, its stats survive in
-        the session report."""
+        the session report. A :class:`FabricTenant` removes both pool
+        handles (hand-offs still on the wire land on a removed tenant
+        and are dropped — the ledger clear already released them)."""
+        if isinstance(handle, FabricTenant):
+            self._rt(handle.prefill).migrate_hook = None
+            self.fabric_tenants.remove(handle)
+            self.deregister(handle.prefill)
+            self.deregister(handle.decode)
+            return
         if handle not in self.cluster.tenants:
             raise ValueError(f"tenant {handle.name!r} is not registered")
         if handle.sim_idx >= 0:
-            self.sim.remove_tenant(handle.sim_idx)
+            self._sim_of(handle).remove_tenant(handle.sim_idx)
         self.cluster.deregister(handle)
 
     def set_iteration_token_budget(self, handle: TenantHandle,
@@ -780,7 +1023,8 @@ class ServingSession:
             # keep the live sim consistent with whatever vNPU the
             # handle ended up on (new or restored-after-failure)
             if handle.sim_idx >= 0:
-                self.sim.update_tenant_vnpu(handle.sim_idx, handle.vnpu)
+                self._sim_of(handle).update_tenant_vnpu(
+                    handle.sim_idx, handle.vnpu)
         return handle
 
     # ---------------- request admission ----------------
@@ -796,31 +1040,37 @@ class ServingSession:
         handle.submitted += 1
         return lens
 
-    def submit(self, handle: TenantHandle, at_s: Optional[float] = None,
+    def submit(self, handle: Union[TenantHandle, FabricTenant],
+               at_s: Optional[float] = None,
                gen_len: Optional[int] = None) -> None:
         """Admit one request for ``handle`` at ``at_s`` seconds
         (default: now). ``gen_len`` pins this request's token count;
-        otherwise the handle's distribution (or plan default) rules."""
+        otherwise the handle's distribution (or plan default) rules.
+        Fabric tenants admit at their prefill pool."""
+        handle = self._ingress(handle)
         self._rt(handle)
-        at = self.sim.now if at_s is None else self._cycles(at_s)
-        if at < self.sim.now - 1e-9:
+        sim = self._sim_of(handle)
+        at = sim.now if at_s is None else self._cycles(at_s)
+        if at < sim.now - 1e-9:
             raise ValueError(
                 f"arrival at t={at_s}s is in the past "
                 f"(session time {self.now_s:.6f}s)")
         if gen_len is None:
             gen_len = self._gen_lens_for(handle, 1)[0]
-        self.sim.inject_request(handle.sim_idx, at, gen_len=gen_len)
+        sim.inject_request(handle.sim_idx, at, gen_len=gen_len)
 
-    def submit_arrivals(self, handle: TenantHandle,
+    def submit_arrivals(self, handle: Union[TenantHandle, FabricTenant],
                         arrivals: "ArrivalProcess") -> int:
         """Admit a whole arrival process (Poisson / trace-driven);
         returns the number of requests injected."""
+        handle = self._ingress(handle)
         self._rt(handle)
+        sim = self._sim_of(handle)
         times = arrivals.times_s()
         lens = self._gen_lens_for(handle, len(times))
         for t_s, g in zip(times, lens):
-            self.sim.inject_request(handle.sim_idx, self._cycles(float(t_s)),
-                                    gen_len=g)
+            sim.inject_request(handle.sim_idx, self._cycles(float(t_s)),
+                               gen_len=g)
         return len(times)
 
     # ---------------- driving ----------------
@@ -828,63 +1078,180 @@ class ServingSession:
         """Advance the simulation to ``t_s`` seconds, then give the
         autoscale hook a chance to act on each tenant's latency tail.
         Returns the new session time (seconds)."""
-        self.sim.run_until(self._cycles(t_s))
+        self._advance(self._cycles(t_s))
         self._autoscale_step()
         return self.now_s
 
     def drain(self) -> float:
         """Process every injected arrival and all in-flight work."""
-        self.sim.run_until(math.inf)
+        self._advance(math.inf)
         return self.now_s
+
+    def _advance(self, t_end: float) -> None:
+        """Cluster-level lockstep scheduler: repeatedly advance the
+        core simulator holding the globally-earliest pending event.
+        Every cross-core hand-off is injected at
+        ``t_handoff + transfer >= t_handoff``, and no simulator's
+        clock ever passes the global event frontier — so a migration
+        can never land in a destination core's past. Single-core
+        sessions drive their one simulator directly (bit-identical to
+        the pre-fabric engine)."""
+        sims = self.sims
+        if len(sims) == 1:
+            sims[0].run_until(t_end)
+            return
+        while True:
+            target = min(sims, key=lambda s: s.next_event_at)
+            nxt = target.next_event_at
+            if nxt > t_end or not math.isfinite(nxt):
+                break
+            target.run_until(nxt)
+        if math.isfinite(t_end):
+            for s in sims:
+                s.run_until(t_end)   # clock alignment; no events left
 
     def _autoscale_step(self) -> None:
         if self.autoscaler is None:
             return
         ms = 1e3 / self.cluster.core.freq_hz
         for h in list(self.cluster.tenants):
-            if h.sim_idx < 0:
-                continue
-            stats = self.sim.tenants[h.sim_idx].stats
-            cursor = self._autoscale_cursor.get(h.sim_idx, 0)
+            if h.sim_idx < 0 or h.fabric_role:
+                continue   # fabric pools scale per phase below
+            stats = self._rt(h).stats
+            key = (h.core_idx, h.sim_idx)
+            cursor = self._autoscale_cursor.get(key, 0)
             recent = [x * ms for x in stats.latencies[cursor:]]
             new_budget = self.autoscaler(self, h, recent)
             if new_budget is not None and new_budget != h.eu_budget:
-                self._autoscale_cursor[h.sim_idx] = len(stats.latencies)
+                self._autoscale_cursor[key] = len(stats.latencies)
                 try:
                     self.resize(h, new_budget)
                 except ReconfigureError:
                     pass  # no room to grow; hold at current size
+        for ft in self.fabric_tenants:
+            self._autoscale_fabric(ft, ms)
+
+    def _autoscale_fabric(self, ft: FabricTenant, ms: float) -> None:
+        """Per-core phase-pair autoscaling: TTFT violations grow the
+        PREFILL pool on the prefill core, TBT violations the decode
+        pool on the decode core — each side judged on its own series
+        against its own SLO (hooks without :meth:`decide_phase` skip
+        fabric pairs)."""
+        decide = getattr(self.autoscaler, "decide_phase", None)
+        if decide is None:
+            return
+        for h, series_name, slo in (
+                (ft.prefill, "ttft", ft.prefill.slo_ttft_ms),
+                (ft.decode, "tbt", ft.decode.slo_tbt_ms)):
+            if h.sim_idx < 0 or slo is None:
+                continue
+            series = getattr(self._rt(h).stats, series_name)
+            key = (h.core_idx, h.sim_idx, series_name)
+            cursor = self._autoscale_cursor.get(key, 0)
+            recent = [x * ms for x in series[cursor:]]
+            new_budget = decide(self, h, recent, slo)
+            if new_budget is not None and new_budget != h.eu_budget:
+                self._autoscale_cursor[key] = len(series)
+                try:
+                    self.resize(h, new_budget)
+                except ReconfigureError:
+                    pass  # the pinned core is full; hold at size
 
     # ---------------- accounting ----------------
-    def report(self, handle: Optional[TenantHandle] = None
+    def report(self,
+               handle: Union[TenantHandle, FabricTenant, None] = None
                ) -> List[TenantReport]:
         """Per-request latency accounting for live (and, while their
         handles are kept, deregistered) tenants. Latencies are
         reported in milliseconds (see :class:`TenantReport` for the
         unit convention); throughput is requests per second of
         simulated time since the tenant attached (the 1-cycle clamp
-        only guards the no-time-elapsed division)."""
+        only guards the no-time-elapsed division).
+
+        Fabric tenants report as ONE merged row per pair (named after
+        the pair, counters summed, TTFT from the prefill side, e2e
+        latencies from whichever core completed each request); the
+        default listing hides the raw per-pool sub-handles — pass one
+        explicitly for a per-core view."""
+        if isinstance(handle, FabricTenant):
+            return [self._fabric_report(handle)]
         if handle is not None:
             handles = [handle]
         else:  # bare-cluster registrations have no runtime to report on
-            handles = [h for h in self.cluster.tenants if h.sim_idx >= 0]
+            handles = [h for h in self.cluster.tenants
+                       if h.sim_idx >= 0 and not h.fabric_role]
         core = self.cluster.core
         ms = 1e3 / core.freq_hz
         out = []
         for h in handles:
             rt = self._rt(h)
-            elapsed_s = max(self.sim.now - h.attached_at, 1.0) / core.freq_hz
+            now = self._sim_of(h).now
+            elapsed_s = max(now - h.attached_at, 1.0) / core.freq_hz
             out.append(_tenant_report(
                 h, rt.stats, ms, rt.stats.requests_done / elapsed_s,
                 queued=rt.in_flight))
+        if handle is None:
+            out.extend(self._fabric_report(ft)
+                       for ft in self.fabric_tenants)
         return out
 
-    def latencies_ms(self, handle: TenantHandle) -> List[float]:
+    # stats where the pair-wise merge is a max, not a sum
+    _MERGE_MAX = frozenset({"max_decode_batch", "max_piggyback_batch",
+                            "kv_peak_bytes", "kv_peak_segments"})
+
+    def _fabric_report(self, ft: FabricTenant) -> TenantReport:
+        """One merged report for a disaggregated phase pair: latency /
+        TBT series concatenate (a request completes on exactly one
+        core), TTFT comes from the prefill side alone (sampled there),
+        scalar counters sum except the peaks (max — the pools hold
+        separate ledgers), and ``queued`` counts both pools' in-flight
+        requests plus hand-offs still on the wire."""
+        core = self.cluster.core
+        ms = 1e3 / core.freq_hz
+        hp, hd = ft.prefill, ft.decode
+        rp, rd = self._rt(hp), self._rt(hd)
+        sp, sd = rp.stats, rd.stats
+        merged = TenantStats(name=ft.name)
+        for f in _dc_fields(TenantStats):
+            if f.name == "name":
+                continue
+            a, b = getattr(sp, f.name), getattr(sd, f.name)
+            if isinstance(a, list):
+                setattr(merged, f.name, a + b)
+            elif f.name in self._MERGE_MAX:
+                setattr(merged, f.name, max(a, b))
+            else:
+                setattr(merged, f.name, a + b)
+        merged.ttft = list(sp.ttft)   # sampled on the prefill core only
+        shim = TenantHandle(
+            name=ft.name, trace=hp.trace,
+            eu_budget=hp.eu_budget + hd.eu_budget,
+            slo_p95_ms=hd.slo_p95_ms, slo_ttft_ms=hp.slo_ttft_ms,
+            slo_tbt_ms=hd.slo_tbt_ms, vnpu=hp.vnpu, plan=hp.plan)
+        attached = min(hp.attached_at, hd.attached_at)
+        now = max(self._sim_of(hp).now, self._sim_of(hd).now)
+        elapsed_s = max(now - attached, 1.0) / core.freq_hz
+        rep = _tenant_report(
+            shim, merged, ms, merged.requests_done / elapsed_s,
+            queued=rp.in_flight + rd.in_flight + ft.in_transit)
+        rep.n_me = hp.vnpu.config.n_me + hd.vnpu.config.n_me
+        rep.n_ve = hp.vnpu.config.n_ve + hd.vnpu.config.n_ve
+        return rep
+
+    def latencies_ms(self, handle: Union[TenantHandle, FabricTenant]
+                     ) -> List[float]:
         """Completed requests' end-to-end latencies in milliseconds
-        (arrival -> completion, queueing included)."""
+        (arrival -> completion, queueing included). Fabric pairs merge
+        both pools' completions (each request finishes on exactly one
+        core)."""
         ms = 1e3 / self.cluster.core.freq_hz
+        if isinstance(handle, FabricTenant):
+            return [x * ms
+                    for x in (self._rt(handle.prefill).stats.latencies
+                              + self._rt(handle.decode).stats.latencies)]
         return [x * ms for x in self._rt(handle).stats.latencies]
 
     def result(self) -> SimResult:
-        """Raw simulator snapshot (cycles domain)."""
+        """Raw simulator snapshot (cycles domain; core 0 — per-core
+        snapshots come from ``session.sims[i].result()``)."""
         return self.sim.result()

@@ -1,0 +1,332 @@
+"""Cluster fabric: topology pricing, topology-aware placement, and
+the cross-core prefill->decode migration protocol.
+
+Property tests prove the satellite invariant: cross-core migrations
+CONSERVE total physical segments across every ledger involved, never
+double-free, and a destination-pressure reject leaves both ledgers
+untouched. Session-level tests replay deterministic recipes with
+real per-core simulators driven in lockstep."""
+import math
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.configs.qwen2_0_5b import SMOKE as CHAT
+from repro.core.allocator import place_phase_pair
+from repro.core.fabric import (FabricLink, FabricTopology, Placement,
+                               random_phase_pair)
+from repro.core.vnpu import KVLedger, KVLedgerError
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.serve.session import (NPUCluster, PoissonArrivals, SLOAutoscaler,
+                                 ServingSession)
+
+SEG = 64 * 1024
+# shrunken core so KV pressure is reachable with tiny prompts
+CORE = DEFAULT_CORE.with_(hbm_bytes=1024 * SEG, hbm_segment=SEG)
+
+
+def _fabric_session(topo, **kw):
+    return ServingSession(
+        NPUCluster(core=CORE, policy="neu10", topology=topo), **kw)
+
+
+# ----------------------------------------------------------------------
+# topology
+# ----------------------------------------------------------------------
+def test_topology_shapes_and_hops():
+    ring = FabricTopology.ring(6)
+    assert ring.kind == "ring" and ring.n_cores == 6
+    assert ring.hops(0, 3) == 3          # around either way
+    assert ring.hops(0, 5) == 1          # wrap link
+    assert ring.neighbors(0) == (1, 5)
+
+    mesh = FabricTopology.mesh(4)        # 2x2 grid
+    assert mesh.hops(0, 3) == 2          # diagonal = 2 manhattan hops
+    assert mesh.neighbors(0) == (1, 2)
+
+    line = FabricTopology.mesh(3)        # prime n degenerates to a line
+    assert line.hops(0, 2) == 2
+
+    fc = FabricTopology.fully_connected(5)
+    assert all(fc.hops(a, b) == 1
+               for a in range(5) for b in range(5) if a != b)
+
+    single = FabricTopology.single()
+    assert single.transfer_cycles(0, 0, 1e12) == 0.0
+
+
+def test_topology_rejects_bad_links():
+    with pytest.raises(ValueError, match="bad link"):
+        FabricTopology(2, {(0, 2): FabricLink()})
+    with pytest.raises(ValueError, match="bad link"):
+        FabricTopology(2, {(0, 0): FabricLink()})
+    with pytest.raises(ValueError, match="bandwidth"):
+        FabricLink(bandwidth=0.0)
+
+
+def test_transfer_pricing_is_store_and_forward():
+    link = FabricLink(bandwidth=10.0, latency=100.0)
+    ring = FabricTopology.ring(4, link)
+    # 2 hops, each paying latency + nbytes/bandwidth
+    assert ring.transfer_cycles(0, 2, 1000) == pytest.approx(
+        2 * (100.0 + 1000 / 10.0))
+    # symmetric, and zero for src == dst
+    assert ring.transfer_cycles(2, 0, 1000) == ring.transfer_cycles(
+        0, 2, 1000)
+    assert ring.transfer_cycles(1, 1, 1000) == 0.0
+    # unreachable pair: infinite hop count, unpriceable path
+    sparse = FabricTopology(4, {(0, 1): link})
+    assert sparse.hops(0, 3) == math.inf
+    with pytest.raises(ValueError, match="not connected"):
+        sparse.path_links(0, 3)
+
+
+def test_place_phase_pair_prefers_neighbors_then_load():
+    ring = FabricTopology.ring(4)
+    a, b = place_phase_pair(ring, kv_bytes=SEG)
+    assert ring.hops(a, b) == 1
+    # cores 0/1 are loaded: the idle neighboring pair wins
+    a, b = place_phase_pair(ring, loads=[5.0, 5.0, 0.0, 0.0],
+                            kv_bytes=SEG)
+    assert (a, b) == (2, 3)
+    # disconnected cores are never paired
+    sparse = FabricTopology(4, {(0, 1): FabricLink()})
+    assert set(place_phase_pair(sparse, kv_bytes=SEG)) == {0, 1}
+    with pytest.raises(ValueError, match="no connected"):
+        place_phase_pair(FabricTopology(2, {}), kv_bytes=1.0)
+    with pytest.raises(ValueError, match="loads"):
+        place_phase_pair(ring, loads=[0.0], kv_bytes=1.0)
+
+
+def test_random_phase_pair_is_seeded_and_distinct():
+    topo = FabricTopology.ring(8)
+    pairs = {random_phase_pair(topo, seed=s) for s in range(16)}
+    assert all(a != b for a, b in pairs)
+    assert len(pairs) > 1                       # actually random
+    assert (random_phase_pair(topo, seed=3)
+            == random_phase_pair(topo, seed=3))  # deterministic
+
+
+def test_placement_validates_strategy():
+    with pytest.raises(ValueError, match="strategy"):
+        Placement(strategy="greedy")
+
+
+# ----------------------------------------------------------------------
+# ledger migration protocol (satellite: conservation property)
+# ----------------------------------------------------------------------
+def test_migrate_entry_reject_leaves_both_untouched():
+    src = KVLedger(8 * SEG, SEG)
+    dst = KVLedger(2 * SEG, SEG)
+    assert src.alloc(1, 4 * SEG)
+    # destination pressure: -1, NOTHING moved on either side
+    assert src.migrate_entry_to(dst, 1) == -1
+    assert src.bytes_of(1) == 4 * SEG and src.in_use == 4 * SEG
+    assert dst.in_use == 0 and dst.entries == {}
+    # roomy destination: all-or-nothing move under a fresh rid
+    dst2 = KVLedger(8 * SEG, SEG)
+    assert src.migrate_entry_to(dst2, 1, dst_rid=9) == 4 * SEG
+    assert src.in_use == 0 and dst2.bytes_of(9) == 4 * SEG
+    # the source entry is gone: a second migrate is a double-free
+    with pytest.raises(KVLedgerError, match="migrate"):
+        src.migrate_entry_to(dst2, 1)
+
+
+_MIG_OPS = st.lists(
+    st.tuples(
+        st.sampled_from(["alloc", "free", "migrate"]),
+        st.integers(min_value=0, max_value=2),   # src ledger
+        st.integers(min_value=0, max_value=2),   # dst ledger (migrate)
+        st.integers(min_value=0, max_value=5),   # request id
+        st.integers(min_value=0, max_value=3 * SEG),  # bytes (alloc)
+    ),
+    max_size=60,
+)
+
+
+@given(ops=_MIG_OPS,
+       caps=st.lists(st.integers(min_value=1, max_value=10),
+                     min_size=3, max_size=3))
+@settings(max_examples=150, deadline=None)
+def test_cross_ledger_migration_conserves_segments(ops, caps):
+    """Any interleaving of alloc / free / cross-ledger migrate against
+    three ledgers: per-ledger bookkeeping matches a mirror model, a
+    reject changes nothing, and the cluster-wide total is conserved
+    across every successful migration (no leak, no double-count)."""
+    pytest.importorskip("hypothesis")
+    leds = [KVLedger(c * SEG, SEG) for c in caps]
+    mirrors = [dict() for _ in leds]
+    for op, i, j, rid, n in ops:
+        src, msrc = leds[i], mirrors[i]
+        dst, mdst = leds[j], mirrors[j]
+        if op == "alloc":
+            if src.alloc(rid, n):
+                msrc[rid] = msrc.get(rid, 0) + n
+        elif op == "free":
+            if rid in msrc:
+                assert src.free(rid) == msrc.pop(rid)
+            else:
+                with pytest.raises(KVLedgerError):
+                    src.free(rid)
+        else:  # migrate
+            if rid not in msrc:
+                with pytest.raises(KVLedgerError):
+                    src.migrate_entry_to(dst, rid)
+                continue
+            before = sum(led.in_use for led in leds)
+            held = msrc[rid]
+            moved = src.migrate_entry_to(dst, rid)
+            if i == j:                       # same ledger: no-op
+                assert moved == held
+            elif moved == -1:                # destination pressure
+                assert held > dst.capacity - dst.reserved - dst.in_use
+                assert src.bytes_of(rid) == held
+            else:
+                assert moved == held
+                mdst[rid] = mdst.get(rid, 0) + held
+                del msrc[rid]
+            # conservation: a migration moves bytes, never mints them
+            assert sum(led.in_use for led in leds) == before
+        for led, mir in zip(leds, mirrors):
+            assert led.reserved + led.in_use <= led.capacity
+            assert led.in_use == sum(mir.values())
+            assert led.entries == mir
+
+
+# ----------------------------------------------------------------------
+# session-level migration (per-core simulators in lockstep)
+# ----------------------------------------------------------------------
+def test_fabric_migration_round_trip():
+    """Every request prefills on core A, migrates its KV over the
+    fabric, decodes on core B, and both ledgers drain to zero."""
+    sess = _fabric_session(FabricTopology.mesh(4))
+    ft = sess.register_generative(
+        "chat", CHAT, prompt_len=128, gen_lens=8, eu_budget=4,
+        placement=Placement(), kv_policy="evict", hbm_bytes=256 * SEG)
+    assert ft.prefill_core != ft.decode_core
+    assert ft.hops == 1                 # topo-aware: neighboring cores
+    assert ft.prefill.core_idx == ft.prefill_core
+    assert ft.decode.core_idx == ft.decode_core
+    sess.submit_arrivals(ft, PoissonArrivals(rate_rps=200.0, n=20, seed=1))
+    sess.drain()
+    r = sess.report(ft)[0]
+    assert r.requests_done == 20
+    assert r.kv_migrations == 20        # every hand-off crossed cores
+    assert r.cross_core_hops == 20
+    assert r.kv_migrated_bytes > 0
+    assert r.kv_migration_rejects == 0
+    assert r.queued == 0 and ft.in_transit == 0
+    # zero KV leak on either side
+    assert ft.prefill.vnpu.kv_ledger.in_use == 0
+    assert ft.decode.vnpu.kv_ledger.in_use == 0
+    # the default listing shows ONE merged row named after the pair
+    assert [x.name for x in sess.report()] == ["chat"]
+    assert len(sess.latencies_ms(ft)) == 20
+
+
+def test_fabric_reject_falls_back_to_local_decode():
+    """Destination pressure: a squeezed decode-side ledger rejects
+    some hand-offs; those requests decode locally on the prefill core
+    and STILL complete, with zero leak on both sides."""
+    # size the decode pool to hold weights + ~1.2 prompts of KV
+    from repro.npu.trace import request_plan
+    probe = request_plan(CHAT, 1, 256, 1, core=CORE)
+    dec_hbm = -(-int(probe.weight_bytes
+                     + 1.2 * probe.kv_prompt_bytes) // SEG) * SEG
+    sess = _fabric_session(FabricTopology.ring(4))
+    ft = sess.register_generative(
+        "chat", CHAT, prompt_len=256, gen_lens=32, eu_budget=4,
+        placement=Placement(decode_hbm_bytes=dec_hbm),
+        kv_policy="evict", hbm_bytes=512 * SEG)
+    sess.submit_arrivals(ft, PoissonArrivals(rate_rps=3000.0, n=16, seed=3))
+    sess.drain()
+    r = sess.report(ft)[0]
+    assert r.requests_done == 16        # rejects completed locally
+    assert r.kv_migration_rejects >= 1
+    assert r.kv_migrations >= 1
+    assert r.kv_migrations + r.kv_migration_rejects == 16
+    assert ft.prefill.vnpu.kv_ledger.in_use == 0
+    assert ft.decode.vnpu.kv_ledger.in_use == 0
+    # capacity was never breached while squeezing (per-core invariant)
+    led = ft.decode.vnpu.kv_ledger
+    assert led.peak_bytes <= led.capacity
+
+
+def test_fabric_transfer_delay_prices_into_latency():
+    """A slower link makes the same workload's e2e tail strictly
+    worse — the hand-off is PRICED, not teleported."""
+    def p95_with(link):
+        sess = _fabric_session(FabricTopology.ring(2, link))
+        ft = sess.register_generative(
+            "chat", CHAT, prompt_len=64, gen_lens=4, eu_budget=4,
+            placement=Placement(prefill_core=0, decode_core=1),
+            kv_policy="evict", hbm_bytes=256 * SEG)
+        sess.submit_arrivals(ft, PoissonArrivals(rate_rps=500.0, n=8,
+                                                 seed=2))
+        sess.drain()
+        r = sess.report(ft)[0]
+        assert r.requests_done == 8 and r.kv_migrations == 8
+        return r.p95_ms
+
+    fast = p95_with(FabricLink(bandwidth=1e9, latency=0.0))
+    slow = p95_with(FabricLink(bandwidth=4.0, latency=2_000_000.0))
+    assert slow > fast * 1.5
+
+
+def test_fabric_policy_hook_fires_on_landing():
+    sess = _fabric_session(FabricTopology.ring(2))
+    ft = sess.register_generative(
+        "chat", CHAT, prompt_len=64, gen_lens=4, eu_budget=4,
+        placement=Placement(prefill_core=0, decode_core=1),
+        kv_policy="evict", hbm_bytes=256 * SEG)
+    landed = []
+    pol = sess.sims[ft.decode.core_idx].policy_obj
+    pol.on_request_migrated = (
+        lambda sim, rt, req: landed.append(req.rid))
+    sess.submit(ft, at_s=0.0)
+    sess.drain()
+    assert len(landed) == 1
+    assert sess.report(ft)[0].requests_done == 1
+
+
+def test_fabric_deregister_removes_both_pools():
+    sess = _fabric_session(FabricTopology.mesh(4))
+    ft = sess.register_generative(
+        "chat", CHAT, prompt_len=64, gen_lens=4, eu_budget=4,
+        placement=Placement(), kv_policy="evict", hbm_bytes=256 * SEG)
+    assert ft.prefill in sess.cluster.tenants
+    sess.deregister(ft)
+    assert ft.prefill not in sess.cluster.tenants
+    assert ft.decode not in sess.cluster.tenants
+    assert ft not in sess.fabric_tenants
+    # the engines freed: a full-size tenant fits again on either core
+    sess.register_generative("next", CHAT, prompt_len=64, eu_budget=4)
+
+
+def test_fabric_autoscaler_grows_prefill_side_only():
+    """Satellite: the per-core SLOAutoscaler judges TTFT on the
+    prefill pool and grows THAT vNPU on THAT core — the decode pool
+    (huge TBT SLO) holds its size."""
+    auto = SLOAutoscaler(step_eus=2, max_eus=6, window=8, min_samples=2)
+    sess = _fabric_session(FabricTopology.mesh(4), autoscaler=auto)
+    ft = sess.register_generative(
+        "chat", CHAT, prompt_len=256, gen_lens=4, eu_budget=4,
+        placement=Placement(),
+        slo_ttft_ms=1e-6,       # unreachable: every window violates
+        slo_tbt_ms=1e9)         # never violates
+    assert ft.prefill.slo_ttft_ms == 1e-6
+    assert ft.decode.slo_ttft_ms is None    # phase SLOs split per pool
+    assert ft.decode.slo_tbt_ms == 1e9
+    pre0, dec0 = ft.prefill.eu_budget, ft.decode.eu_budget
+    sess.submit_arrivals(ft, PoissonArrivals(rate_rps=500.0, n=12, seed=0))
+    t = 0.0
+    for _ in range(6):
+        t += 0.01
+        sess.run_until(t)
+    sess.drain()
+    assert ft.prefill.eu_budget > pre0      # TTFT violation grew it
+    assert ft.decode.eu_budget == dec0      # decode pool untouched
+    # the growth stayed on the prefill core (core_hint pin)
+    assert (sess.cluster.manager.core_index_of(ft.prefill.vnpu)
+            == ft.prefill_core)
+    assert sess.report(ft)[0].requests_done == 12

@@ -201,9 +201,19 @@ def test_run_requires_closed_loop_tenants():
         sim2.run()
 
 
-def test_session_rejects_multi_core_cluster():
-    with pytest.raises(ValueError):
-        ServingSession(NPUCluster(n_pnpus=2))
+def test_session_multi_core_cluster():
+    """Multi-pNPU clusters now construct (PR 6 fabric): one live
+    simulator per core, and tenants attach to the core their vNPU
+    mapped on with resizes pinned there."""
+    sess = ServingSession(NPUCluster(n_pnpus=2))
+    assert len(sess.sims) == 2
+    assert sess.sim is sess.sims[0]
+    a = sess.register("a", _trace("a"), eu_budget=4)
+    assert a.core_idx == sess.cluster.manager.core_index_of(a.vnpu)
+    assert a.core_hint == a.core_idx
+    sess.submit(a, at_s=0.001)
+    sess.drain()
+    assert sess.report(a)[0].requests_done == 1
 
 
 def test_inject_guards():
