@@ -2,13 +2,63 @@
 policy across the 9 pairs.
 
 Accepts any set of registry policies: ``run(policies=(..., "mine"))``.
+
+Also carries the fluid-grid row: the same 9-pair utilization grid
+(harvest on vs off — the neu10 vs neu10_nh axis) evaluated as ONE
+jitted ``sweep_collocations`` program, timed against the discrete
+grid above it.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Sequence
 
 from benchmarks.common import (BenchRow, PAPER_PAIRS, POLICIES, geomean,
                                run_pair, timed)
+from repro.core.policies import resolve_policy
+from repro.core.sim_jax import sweep_collocations
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.npu.workloads import get_workload
+
+
+def _fluid_grid_row(discrete_wall_s: float) -> BenchRow:
+    """The 9-pair utilization grid through the fluid fleet model: one
+    ``sweep_collocations`` dispatch per harvest setting (the spatial
+    policies differ only in that flag there), vs the wall the
+    discrete per-cell grid above took. The discrete run stays the
+    oracle — this row tracks how much of the figure's outer loop the
+    vectorized path absorbs."""
+    core = DEFAULT_CORE
+    pol = resolve_policy("neu10")
+    progs = {}
+    for w1, w2, _ in PAPER_PAIRS:
+        for w in (w1, w2):
+            if w not in progs:
+                progs[w] = pol.compile_program(get_workload(w, core), core)
+    pairs = [(progs[w1], progs[w2]) for w1, w2, _ in PAPER_PAIRS]
+    splits = (((2, 2), (2, 2)),)   # the §V-A half/half split
+
+    def sweep():
+        outs = [sweep_collocations(pairs, splits, bw_points=(1.0,),
+                                   n_requests=6, harvest=h, core=core)
+                for h in (True, False)]
+        outs[0]["makespan"].block_until_ready()
+        outs[1]["makespan"].block_until_ready()
+        return outs
+
+    sweep()   # warm-up: XLA compilation paid once
+    wall = 1e9
+    for _ in range(3):
+        t0 = time.time()
+        harvest_on, harvest_off = sweep()
+        wall = min(wall, time.time() - t0)
+    me_on = float(harvest_on["me_util"].mean())
+    me_off = float(harvest_off["me_util"].mean())
+    speedup = discrete_wall_s / max(wall, 1e-9)
+    return BenchRow(
+        "fig22/fluid_grid", wall * 1e6,
+        f"speedup={speedup:.1f}x meU_harvest={me_on:.3f} "
+        f"meU_nh={me_off:.3f} pairs={len(pairs)}")
 
 
 def run(policies: Sequence[str] = POLICIES) -> List[BenchRow]:
@@ -16,6 +66,7 @@ def run(policies: Sequence[str] = POLICIES) -> List[BenchRow]:
     me: Dict[str, List[float]] = {p: [] for p in policies}
     ve: Dict[str, List[float]] = {p: [] for p in policies}
     n_pairs = len(PAPER_PAIRS)
+    t0 = time.time()
     for w1, w2, _ in PAPER_PAIRS:
         for p in policies:
             us, r = timed(lambda a=w1, b=w2, pp=p: run_pair(a, b, pp))
@@ -24,6 +75,7 @@ def run(policies: Sequence[str] = POLICIES) -> List[BenchRow]:
             rows.append(BenchRow(
                 f"fig22/{w1}+{w2}/{p}", us,
                 f"meU={r.me_utilization():.3f} veU={r.ve_utilization():.3f}"))
+    discrete_wall_s = time.time() - t0
     for p in policies:
         rows.append(BenchRow(
             f"fig22/mean/{p}", 0.0,
@@ -34,6 +86,7 @@ def run(policies: Sequence[str] = POLICIES) -> List[BenchRow]:
                  / max(sum(me["pmt"]) / n_pairs, 1e-9))
         rows.append(BenchRow("fig22/neu10_vs_pmt_meU", 0.0, f"{ratio:.3f}x"))
         assert ratio > 1.1
+    rows.append(_fluid_grid_row(discrete_wall_s))
     return rows
 
 

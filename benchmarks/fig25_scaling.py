@@ -2,26 +2,53 @@
 grows (2ME/2VE .. 8ME/8VE, split evenly between the two vNPUs).
 Paper claim: more MEs/VEs -> more benefit from μTOp scheduling.
 
-Also carries the simulator fast-path micro-benchmark: the largest
-sweep (8ME/8VE, the heaviest event load) re-runs with
-``fast_path=False`` (reference implementations: unmemoized dispatch
-durations, engine-scan HBM pressure, reference neu10 schedule pass)
-vs the default fast path, asserting the SimResults are IDENTICAL and
-the wall-clock speedup is >= 1.3x (min-of-N timings to reject
-machine noise)."""
+Also carries the simulator perf micro-benchmarks:
+
+* fast path — the largest sweep (8ME/8VE, the heaviest event load)
+  re-runs with ``fast_path=False`` (reference implementations:
+  unmemoized dispatch durations, engine-scan HBM pressure, reference
+  neu10 schedule pass) vs the default fast path, asserting the
+  SimResults are IDENTICAL and the wall-clock speedup is >= 1.3x
+  (min-of-N timings to reject machine noise).
+* sched_incremental — the same sweep with the dirty-set incremental
+  scheduling core (cohort dispatch + free-engine index) vs both the
+  reference and the PR-4 fast-path baselines, again with a 3-way
+  SimResult identity proof.
+* fleet_sweep — the fig25 outer grid (pairs × EU splits × bandwidth
+  points) as ONE jitted ``sweep_collocations`` XLA program vs the
+  discrete simulator running the same grid one cell at a time; this
+  is the row CI's benchmark-smoke asserts a >= 3x floor on (locally
+  the single-dispatch sweep is >= 10x)."""
 from __future__ import annotations
 
 import time
 from typing import List
 
-from benchmarks.common import BenchRow, geomean, run_pair, timed
+from benchmarks.common import BenchRow, build_pair_specs, geomean, \
+    run_pair, timed
+from repro.core.policies import resolve_policy
+from repro.core.sim_jax import sweep_collocations
+from repro.core.simulator import Simulator
+from repro.core.vnpu import VNPUConfig
 from repro.npu.hw_config import NPUCoreConfig
+from repro.npu.workloads import get_workload
+from repro.serve.session import NPUCluster, run_closed_loop
 
 PAIRS = [("ENet", "TFMR"), ("RNRS", "RtNt"), ("BERT", "ENet")]
 SIZES = [2, 4, 8]
 
 FAST_PATH_GAIN = 1.3   # required wall-clock speedup, largest sweep
 FAST_PATH_REPS = 5     # min-of-N per variant (noise rejection)
+
+INCREMENTAL_GAIN = 1.05   # incremental core vs the fast-path baseline
+FLEET_SWEEP_GAIN = 3.0    # jitted grid vs per-cell discrete (CI floor)
+
+# fleet-sweep grid: pairs × EU splits × HBM-bandwidth points on the
+# 8ME/8VE core (per-tenant (ME, VE) engine counts; asymmetric splits
+# exercise the collocation-search question the sweep exists for)
+SWEEP_SPLITS = (((4, 4), (4, 4)), ((6, 2), (6, 2)), ((2, 6), (2, 6)))
+SWEEP_BW = (0.5, 1.0, 2.0)
+SWEEP_REQUESTS = 4
 
 
 def _fast_path_row() -> BenchRow:
@@ -51,6 +78,105 @@ def _fast_path_row() -> BenchRow:
         f"ref_us={min(times[False]) * 1e6:.0f}")
 
 
+def _sched_incremental_row() -> BenchRow:
+    """The incremental dirty-set scheduling core on the largest sweep
+    vs BOTH baselines — the reference schedule pass and the PR-4 fast
+    path — with a 3-way SimResult identity proof. Specs compile ONCE
+    (``build_pair_specs``) so only ``Simulator(...).run()`` is
+    timed."""
+    core = NPUCoreConfig(n_me=8, n_ve=8)
+    specs = build_pair_specs("BERT", "ENet", "neu10", core=core,
+                             me_ve=(4, 4), n_requests=6)
+    variants = {"ref": (False, False), "fast": (True, False),
+                "inc": (True, True)}
+    times = {k: [] for k in variants}
+    results = {}
+    for _ in range(FAST_PATH_REPS):
+        for k, (fast, inc) in variants.items():
+            t0 = time.time()
+            res = Simulator(specs, policy="neu10", core=core,
+                            fast_path=fast, incremental=inc).run()
+            times[k].append(time.time() - t0)
+            results[k] = res
+    assert results["inc"] == results["ref"] == results["fast"], (
+        "incremental scheduling core diverged from the reference")
+    t = {k: min(v) for k, v in times.items()}
+    vs_ref = t["ref"] / max(t["inc"], 1e-9)
+    vs_fast = t["fast"] / max(t["inc"], 1e-9)
+    assert vs_fast >= INCREMENTAL_GAIN, (
+        f"incremental core {vs_fast:.2f}x < required "
+        f"{INCREMENTAL_GAIN}x over the fast path")
+    return BenchRow(
+        "fig25/sched_incremental/BERT+ENet/8ME8VE",
+        t["inc"] * 1e6,
+        f"speedup_vs_ref={vs_ref:.2f}x speedup_vs_fast={vs_fast:.2f}x "
+        f"identical=True ref_us={t['ref'] * 1e6:.0f} "
+        f"fast_us={t['fast'] * 1e6:.0f}")
+
+
+def _fleet_sweep_row() -> BenchRow:
+    """The fig25 outer grid (pair × EU split × HBM bandwidth) two
+    ways: the discrete simulator one cell at a time vs ONE jitted
+    ``sweep_collocations`` dispatch covering the whole lattice. The
+    sweep call is warmed once (XLA compile amortizes over every later
+    grid at these shapes) and timed min-of-N; the discrete grid runs
+    each cell as a fresh event loop, exactly how the figures drive
+    it. Both sides answer the same capacity-planning query — the
+    discrete engine stays the validated oracle (the fluid model's
+    ordering is pinned against it in tests/test_sim_jax.py)."""
+    core = NPUCoreConfig(n_me=8, n_ve=8)
+    pol = resolve_policy("neu10")
+    progs = {n: pol.compile_program(get_workload(n, core), core)
+             for n in {w for pair in PAIRS for w in pair}}
+    prog_pairs = [(progs[a], progs[b]) for a, b in PAIRS]
+
+    def discrete_cell(pair, split, bw):
+        (m1, m2), (v1, v2) = split
+        cluster = NPUCluster(core=core, policy="neu10")
+        for name, m, v in ((pair[0], m1, v1), (pair[1], m2, v2)):
+            cluster.register_vnpu(
+                name, get_workload(name, core),
+                VNPUConfig(n_me=m, n_ve=v,
+                           hbm_bytes=core.hbm_bytes // 2,
+                           sram_bytes=core.sram_bytes // 2))
+        res, _ = run_closed_loop(cluster, n_requests=SWEEP_REQUESTS,
+                                 hbm_scale=bw)
+        return res
+
+    t0 = time.time()
+    for pair in PAIRS:
+        for split in SWEEP_SPLITS:
+            for bw in SWEEP_BW:
+                discrete_cell(pair, split, bw)
+    discrete_wall = time.time() - t0
+
+    def sweep():
+        out = sweep_collocations(prog_pairs, SWEEP_SPLITS,
+                                 bw_points=SWEEP_BW,
+                                 n_requests=SWEEP_REQUESTS, core=core)
+        out["makespan"].block_until_ready()
+        return out
+
+    sweep()   # warm-up: XLA compilation paid once
+    sweep_wall = 1e9
+    for _ in range(3):
+        t0 = time.time()
+        out = sweep()
+        sweep_wall = min(sweep_wall, time.time() - t0)
+    n_cells = len(PAIRS) * len(SWEEP_SPLITS) * len(SWEEP_BW)
+    assert out["makespan"].shape == (len(PAIRS), len(SWEEP_SPLITS),
+                                     len(SWEEP_BW))
+    speedup = discrete_wall / max(sweep_wall, 1e-9)
+    assert speedup >= FLEET_SWEEP_GAIN, (
+        f"vectorized fleet sweep {speedup:.1f}x < required "
+        f"{FLEET_SWEEP_GAIN}x over the per-cell discrete grid")
+    return BenchRow(
+        "fig25/fleet_sweep/grid",
+        sweep_wall * 1e6,
+        f"speedup={speedup:.1f}x cells={n_cells} "
+        f"discrete_us={discrete_wall * 1e6:.0f}")
+
+
 def run() -> List[BenchRow]:
     rows: List[BenchRow] = []
     gains_by_size = {}
@@ -73,6 +199,8 @@ def run() -> List[BenchRow]:
     # scaling trend: benefit at 8 engines >= benefit at 2 engines
     assert gains_by_size[8] >= gains_by_size[2] - 0.05
     rows.append(_fast_path_row())
+    rows.append(_sched_incremental_row())
+    rows.append(_fleet_sweep_row())
     return rows
 
 

@@ -9,7 +9,10 @@ Prints ``name,us_per_call,derived`` CSV rows.
 machine-readable: each record carries the suite, row name,
 ``us_per_call``, the raw derived string AND a ``metrics`` dict parsed
 from its ``key=value`` pairs (numeric values with their unit suffixes
-stripped). CI's benchmark-smoke job uploads the file as an artifact.
+stripped). The top-level ``wall_s`` map records each suite's total
+wall-clock seconds, so suite-level runtime regressions are tracked
+alongside the per-row numbers. CI's benchmark-smoke job uploads the
+file as an artifact.
 """
 from __future__ import annotations
 
@@ -85,6 +88,7 @@ def main(argv: Optional[List[str]] = None) -> None:
     print("name,us_per_call,derived")
     failures = []
     records = []
+    wall_s: Dict[str, float] = {}
     for key in selected:
         mod = SUITES[key]
         t0 = time.time()
@@ -98,15 +102,18 @@ def main(argv: Optional[List[str]] = None) -> None:
                     "derived": row.derived,
                     "metrics": parse_metrics(row.derived),
                 })
+            wall_s[key] = round(time.time() - t0, 3)
             print(f"{key}/TOTAL,{(time.time()-t0)*1e6:.0f},ok", flush=True)
         except Exception as e:
             traceback.print_exc()
+            wall_s[key] = round(time.time() - t0, 3)
             print(f"{key}/TOTAL,0,FAILED: {e}", flush=True)
             failures.append(key)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"schema": 1, "suites": selected,
-                       "failures": failures, "rows": records},
+                       "failures": failures, "wall_s": wall_s,
+                       "rows": records},
                       f, indent=1, sort_keys=True)
             f.write("\n")
         print(f"# wrote {len(records)} records to {args.json}", flush=True)

@@ -39,6 +39,7 @@ Policy API surface on the simulator (stable for third parties):
 """
 from __future__ import annotations
 
+import heapq
 from abc import ABC, abstractmethod
 from collections import deque
 from typing import (TYPE_CHECKING, Callable, Deque, Dict, Optional, Tuple,
@@ -47,7 +48,7 @@ from typing import (TYPE_CHECKING, Callable, Deque, Dict, Optional, Tuple,
 from repro.core.compiler import (PIGGYBACK, PREFILL, ProgramCache,
                                  compile_neuisa, compile_request_plan,
                                  compile_vliw)
-from repro.core.neuisa import ME, FusedIssueGroup, form_fused_group
+from repro.core.neuisa import ME, VE, FusedIssueGroup, form_fused_group
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.simulator import Simulator
@@ -174,7 +175,25 @@ class SchedulerPolicy(ABC):
     # ---------------- the actual scheduler ----------------
     @abstractmethod
     def schedule(self, sim: "Simulator", t: float) -> None:
-        """Dispatch ready chunks onto free engines at time ``t``."""
+        """Dispatch ready chunks onto free engines at time ``t``.
+
+        Policies may ALSO define the opt-in hook::
+
+            def schedule_incremental(self, sim, t, dirty) -> None
+
+        When present (and the simulator runs with
+        ``fast_path=True, incremental=True``), the simulator calls it
+        instead of ``schedule`` and ONLY when the dirty set is
+        non-empty — ``dirty`` is the frozen set of tenant indices
+        whose scheduling inputs changed since the last pass (-1 marks
+        a global change). The hook must reach the same fixpoint a full
+        ``schedule`` pass would; a policy that keeps enabling state
+        outside the ready queues / engine pools must call
+        ``sim.mark_dirty`` when that state changes, or its work will
+        sit unscheduled until an unrelated event lands. Policies
+        without the hook (``pmt``/``v10``) transparently fall back to
+        a full ``schedule`` pass per event. See ``docs/architecture.md``
+        ("Event engine") for the marking contract."""
 
 
 # ----------------------------------------------------------------------
@@ -186,6 +205,19 @@ def _ve_drain_first(c) -> bool:
     operation scheduler's rule) — hoisted to module level so the hot
     schedule pass doesn't rebuild a closure per call."""
     return not c.from_me_group
+
+
+def _harvest_order_me(r) -> tuple:
+    """Harvest priority (ME pool): decode-phase tenants first, then
+    least-served — hoisted like :func:`_ve_drain_first`."""
+    return (not any(c.phase == "decode" for c in r.ready_me),
+            r.active_cycles)
+
+
+def _harvest_order_ve(r) -> tuple:
+    """Harvest priority (VE pool) — see :func:`_harvest_order_me`."""
+    return (not any(c.phase == "decode" for c in r.ready_ve),
+            r.active_cycles)
 
 
 
@@ -405,6 +437,224 @@ class _SpatialPolicy(SchedulerPolicy):
                             and chunk.phase == "decode"):
                         self._try_fuse(sim, chunk, e.owner, rt)
                     dispatch(chunk, e, t, harvested=True)
+
+    def schedule_incremental(self, sim: "Simulator", t: float,
+                             dirty) -> None:
+        """Dirty-set schedule pass (the incremental core's opt-in
+        hook): decision-for-decision identical to
+        :meth:`_schedule_fast` — the simulator already guarantees it
+        only runs when ``dirty`` is non-empty, i.e. something changed
+        a scheduling input since the last pass. On top of that gate it
+        (a) consumes the simulator's maintained per-owner free-engine
+        index instead of re-bucketing each pool, (b) inlines the
+        single-engine dispatch body (token issue, duration, heap
+        push), and (c) dispatches runs of identical compute-only
+        sibling chunks (a VE μTOp's slot chunks) as one *cohort*
+        sharing a single completion event — same end time, one heap
+        entry, per-chunk accounting replayed in engine order at
+        completion, and heap tie-order unchanged because the merged
+        entries' sequence numbers were consecutive. Cohort members run
+        on the owner's OWN engines, which this policy never preempts,
+        so the shared token is never partially invalidated.
+        ``dirty``'s content is not needed for correctness here — every
+        enabling transition for this policy lives in the ready queues
+        and engine pools, which the pass re-reads — but one re-mark
+        is: reclaim is bounded per pass (one ctx window per owner), so
+        an owner still squatted-on with leftover ready work re-marks
+        itself to keep the next pass coming. When ``dispatch`` is
+        overridden (spies/subclasses), the whole pass routes through
+        :meth:`_schedule_fast` so the documented API keeps seeing
+        every chunk."""
+        if ("dispatch" in sim.__dict__
+                or type(sim).dispatch is not type(sim)._dispatch):
+            self._schedule_fast(sim, t)
+            return
+        act = sim._act
+        harvest = self.harvest
+        heap = sim._heap
+        push = heapq.heappush
+        tok = sim._tok.__next__
+        seq = sim._seq.__next__
+        squat = sim._squat
+        duration = sim._duration
+        bw_register = sim._bw_register
+        bpc = sim._bpc
+        mes, ves = sim.mes, sim.ves
+        left_me = left_ve = False   # pool has leftover ready work
+                                    # after owner dispatch -> harvest
+        # 1) owner dispatch + 2) reclaim, MEs then VEs (the fast
+        # pass's structure; ready queues are stable list objects read
+        # live, exactly like the fast pass's work-list snapshot)
+        for is_ve in (False, True):
+            if is_ve:
+                free_own, kind, nd = sim._free_ve_own, VE, 0
+            else:
+                free_own, kind, nd = sim._free_me_own, ME, 0
+            for rt in act:
+                ready = rt.ready_ve if is_ve else rt.ready_me
+                if not ready:
+                    continue
+                if is_ve and len(ready) > 1:
+                    # operation scheduler: drains of ME groups first
+                    ready.sort(key=_ve_drain_first)
+                own = free_own.get(rt.idx)
+                if own:
+                    is_neu = rt.is_neuisa
+                    while own and ready:
+                        c = ready.pop(0)
+                        e = own[0]
+                        del own[0]
+                        nd += 1
+                        c.n_dispatched = 1
+                        token = tok()
+                        hbm = c.hbm_bytes
+                        # a non-contender μTOp (compute-bound: would
+                        # not pass _bw_register's test, same float
+                        # expression) has a pressure-stable duration —
+                        # identical consecutive siblings can form a
+                        # cohort around one completion event
+                        if is_neu and (hbm <= 0.0
+                                       or hbm / bpc < c.cycles):
+                            if hbm <= 0.0:
+                                end = t + c.cycles + c.penalty
+                            else:
+                                end = t + duration(c, 1)
+                            e.token = token
+                            e.chunk = c
+                            e.tenant = c.tenant
+                            e.start = t
+                            e.end = end
+                            e.harvested = False
+                            n = 1
+                            while own and ready:
+                                c2 = ready[0]
+                                if (c2.cycles != c.cycles
+                                        or c2.penalty != c.penalty
+                                        or c2.hbm_bytes != hbm):
+                                    break
+                                del ready[0]
+                                e2 = own[0]
+                                del own[0]
+                                nd += 1
+                                c2.n_dispatched = 1
+                                c2.cohort = 1   # member marker
+                                e2.token = token
+                                e2.chunk = c2
+                                e2.tenant = c2.tenant
+                                e2.start = t
+                                e2.end = end
+                                e2.harvested = False
+                                n += 1
+                            if n > 1:
+                                c.cohort = n
+                            push(heap, (end, seq(), kind, e.eid, token))
+                        else:
+                            dur = duration(c, 1)
+                            bw_register(c)
+                            e.token = token
+                            e.chunk = c
+                            e.tenant = c.tenant
+                            e.start = t
+                            end = t + dur
+                            e.end = end
+                            e.harvested = False
+                            push(heap, (end, seq(), kind, e.eid, token))
+                if harvest and ready and squat.get(rt.idx):
+                    pool = ves if is_ve else mes
+                    reclaimed = 0
+                    for e in pool:
+                        if reclaimed >= len(ready):
+                            break
+                        if (e.owner == rt.idx and e.token >= 0
+                                and e.chunk is not None
+                                and e.tenant != rt.idx):
+                            if e.chunk.fused:
+                                continue
+                            sim.preempt(e, t)
+                            reclaimed += 1
+                    if reclaimed:
+                        ctx = float(sim.core.ctx_switch_cycles
+                                    if not is_ve else 32)
+                        rt.stats.reclaim_blocked += ctx
+                        # the preempted remainder went back on the
+                        # VICTIM's ready queue (this pool): harvest
+                        # must still look at it
+                        if is_ve:
+                            left_ve = True
+                        else:
+                            left_me = True
+                    # reclaim is bounded per pass: if this owner is
+                    # still squatted-on with work left, the full pass
+                    # would reclaim again next event — keep that event
+                    # coming even if nothing else marks
+                    if ready and squat.get(rt.idx):
+                        sim._dirty.add(rt.idx)
+                if ready:
+                    # leftover ready work (or a reclaim preemption put
+                    # work back on a queue of this pool): the harvest
+                    # section below must look at this pool
+                    if is_ve:
+                        left_ve = True
+                    else:
+                        left_me = True
+            if is_ve:
+                sim._nfree_ve -= nd
+            else:
+                sim._nfree_me -= nd
+        if not harvest:
+            return
+        # 3) harvest — identical structure and order to _schedule_fast
+        # (the leftover flags + maintained free counters make the
+        # common nothing-to-harvest case two boolean checks per pool)
+        for is_ve in (False, True):
+            if not (left_ve if is_ve else left_me):
+                continue
+            if not (sim._nfree_ve if is_ve else sim._nfree_me):
+                continue
+            src = [rt for rt in act
+                   if (rt.ready_ve if is_ve else rt.ready_me)]
+            if not src:
+                continue
+            pool = ves if is_ve else mes
+            free_list = [e for e in pool if e.token < 0]
+            kind = VE if is_ve else ME
+            if len(src) > 1:
+                src.sort(key=_harvest_order_ve if is_ve
+                         else _harvest_order_me)
+            for rt in src:
+                ready = rt.ready_ve if is_ve else rt.ready_me
+                for e in free_list:
+                    if not ready:
+                        break
+                    if e.token >= 0 or e.owner == rt.idx:
+                        continue
+                    ow = e.owner
+                    owner = sim.tenants[ow] if ow is not None else None
+                    if owner is not None and (owner.ready_ve if is_ve
+                                              else owner.ready_me):
+                        continue  # owner will use it this round
+                    chunk = ready.pop(0)
+                    if (self.fuse and is_ve and owner is not None
+                            and chunk.phase == "decode"):
+                        self._try_fuse(sim, chunk, ow, rt)
+                    sim._free_idx_remove(e)
+                    if chunk.hbm_bytes <= 0.0 and rt.is_neuisa:
+                        dur = chunk.cycles + chunk.penalty
+                    else:
+                        dur = duration(chunk, 1)
+                        bw_register(chunk)
+                    chunk.n_dispatched = 1
+                    token = tok()
+                    e.token = token
+                    e.chunk = chunk
+                    e.tenant = chunk.tenant
+                    e.start = t
+                    end = t + dur
+                    e.end = end
+                    e.harvested = True
+                    if ow is not None:
+                        squat[ow] = squat.get(ow, 0) + 1
+                    push(heap, (end, seq(), kind, e.eid, token))
 
     def _try_fuse(self, sim: "Simulator", chunk, owner_idx: int, rt) -> None:
         """Fuse a harvested decode VE μTOp into the engine owner's

@@ -211,16 +211,11 @@ def simulate_pair(
     }
 
 
-def fleet_sweep(
-    pairs: List[Tuple[NeuISAProgram, NeuISAProgram]],
-    alloc_me=(2, 2),
-    alloc_ve=(2, 2),
-    n_requests: int = 6,
-    hbm_scales=(1.0,),
-    harvest: bool = True,
-    core: NPUCoreConfig = DEFAULT_CORE,
-):
-    """Every (pair × hbm_scale) cell in one jitted vmap nest."""
+def pack_batch(pairs: List[Tuple[NeuISAProgram, NeuISAProgram]]):
+    """Stack ``pack_pair`` outputs for a list of pairs into one
+    (P, 2, G) pytree, padding every program to the widest group
+    count (pad groups carry zero work and par=1, so they complete
+    instantly and never affect rates)."""
     packed = [pack_pair(a, b) for a, b in pairs]
     G = max(p["me"].shape[1] for p in packed)
 
@@ -233,8 +228,21 @@ def fleet_sweep(
             for k, v in p.items()
         }
 
-    batch = jax.tree_util.tree_map(
+    return jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *[pad(p) for p in packed])
+
+
+def fleet_sweep(
+    pairs: List[Tuple[NeuISAProgram, NeuISAProgram]],
+    alloc_me=(2, 2),
+    alloc_ve=(2, 2),
+    n_requests: int = 6,
+    hbm_scales=(1.0,),
+    harvest: bool = True,
+    core: NPUCoreConfig = DEFAULT_CORE,
+):
+    """Every (pair × hbm_scale) cell in one jitted vmap nest."""
+    batch = pack_batch(pairs)
     scales = jnp.asarray(hbm_scales)
     a_me = jnp.asarray(alloc_me, jnp.float32)
     a_ve = jnp.asarray(alloc_ve, jnp.float32)
@@ -250,3 +258,49 @@ def fleet_sweep(
         return jax.vmap(per_pair)(batch)
 
     return run_all(batch, scales)
+
+
+def sweep_collocations(
+    pairs: List[Tuple[NeuISAProgram, NeuISAProgram]],
+    eu_splits,                 # S ((me1, me2), (ve1, ve2)) splits
+    bw_points=(1.0,),          # B HBM-bandwidth scale factors
+    n_requests: int = 6,
+    harvest: bool = True,
+    core: NPUCoreConfig = DEFAULT_CORE,
+):
+    """The whole collocation-search grid — every workload pair ×
+    EU split × HBM-bandwidth point — as ONE jitted XLA program.
+
+    This is the fleet-planning query behind the fig22/fig25 outer
+    grids: "which pairs co-locate well at which splits, and how does
+    that ranking move under memory pressure". The discrete simulator
+    answers it one cell at a time (a fresh event loop per cell); here
+    the full (P, S, B) lattice is a single three-level vmap nest over
+    :func:`simulate_pair`, so XLA fuses every cell into one program
+    and one device dispatch.
+
+    ``eu_splits`` entries are ``((me1, me2), (ve1, ve2))`` engine
+    counts, one per collocated tenant. Returns the
+    :func:`simulate_pair` dict with every leaf shaped ``(P, S, B)``.
+    """
+    batch = pack_batch(pairs)
+    mes = jnp.asarray([s[0] for s in eu_splits], jnp.float32)   # (S, 2)
+    ves = jnp.asarray([s[1] for s in eu_splits], jnp.float32)   # (S, 2)
+    scales = jnp.asarray(bw_points)                             # (B,)
+
+    @jax.jit
+    def run_all(batch, mes, ves, scales):
+        def cell(prog, me, ve, s):
+            return simulate_pair(prog, me, ve, n_requests,
+                                 harvest=harvest, hbm_scale=s, core=core)
+
+        def per_split(prog, me, ve):
+            return jax.vmap(lambda s: cell(prog, me, ve, s))(scales)
+
+        def per_pair(prog):
+            return jax.vmap(
+                lambda me, ve: per_split(prog, me, ve))(mes, ves)
+
+        return jax.vmap(per_pair)(batch)
+
+    return run_all(batch, mes, ves, scales)

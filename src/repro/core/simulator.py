@@ -89,6 +89,7 @@ EPS = 1e-9
 
 _ARRIVAL = "arr"  # heap event kind for open-loop request arrivals
 _MIGRATE = "mig"  # heap event kind for cross-core decode hand-offs
+_MIXED = object()  # sentinel: cohort engines span several owners
                   # landing after their fabric transfer delay
 
 
@@ -150,6 +151,12 @@ class Chunk:
     n_dispatched: int = 1        # engines the chunk landed on (set by
                                  # dispatch; lets completion skip the
                                  # engine-pool scan for 1-engine μTOps)
+    cohort: int = 0              # >1 on the LEAD chunk of a cohort: n
+                                 # identical compute-only siblings
+                                 # dispatched together under one token
+                                 # and one completion event (each
+                                 # engine still carries its own chunk;
+                                 # set only by the incremental pass)
 
 
 @dataclass
@@ -426,6 +433,11 @@ class _TenantRT:
         self._t = 0.0                      # time of the current pick
         self.ready_me: List[Chunk] = []
         self.ready_ve: List[Chunk] = []
+        # incremental scheduling: the simulator swaps in its shared
+        # dirty set at add_tenant so ready-queue growth marks the
+        # tenant without a callback (standalone _TenantRT construction
+        # in tests keeps the private default)
+        self._dirty_sink: set = set()
         self.loop_remaining: Dict[int, int] = {}
         self.done = False                 # reached n_requests (keeps running)
         self.finished_at = math.inf
@@ -1003,10 +1015,22 @@ class _TenantRT:
             n = len(prog.groups)
             if self.cursor < 0:
                 return 0 if n else None
-            # loop control (uTop.nextGroup)
-            g = prog.groups[self.cursor]
-            tgt = next((u.next_group for u in g.all_utops()
-                        if u.next_group is not None), None)
+            # loop control (uTop.nextGroup). The per-group loop target
+            # is static program structure, so the fast path derives it
+            # once per program (cached like `_chunk_specs`) instead of
+            # walking every μTOp of the group on each replay.
+            if self.fast_path:
+                tbl = getattr(prog, "_next_tbl", None)
+                if tbl is None:
+                    tbl = [next((u.next_group for u in g.all_utops()
+                                 if u.next_group is not None), None)
+                           for g in prog.groups]
+                    prog._next_tbl = tbl
+                tgt = tbl[self.cursor]
+            else:
+                g = prog.groups[self.cursor]
+                tgt = next((u.next_group for u in g.all_utops()
+                            if u.next_group is not None), None)
             if tgt is not None:
                 trips = self.loop_remaining.get(
                     self.cursor, prog.loop_trips.get(self.cursor, 1))
@@ -1035,19 +1059,24 @@ class _TenantRT:
                 prog._chunk_specs = specs
             me_specs, ve_spec = specs[self.cursor]
             cursor, idx = self.cursor, self.idx
+            # positional construction (field order matches the Chunk
+            # dataclass) — this is the hottest allocation site in the
+            # simulator, one Chunk per μTOp replay
+            append_me = self.ready_me.append
             for cycles, hbm, name, n_eng in me_specs:
-                self.ready_me.append(Chunk(
-                    idx, ME, cycles, hbm, name, n_engines=n_eng,
-                    group_key=cursor, phase=phase))
+                append_me(Chunk(idx, ME, cycles, hbm, name, n_eng,
+                                0.0, cursor, False, phase))
                 made += 1
             if ve_spec is not None:
                 cycles, hbm, name, slots, from_me = ve_spec
+                append_ve = self.ready_ve.append
                 for _ in range(slots):
-                    self.ready_ve.append(Chunk(
-                        idx, VE, cycles, hbm, name, group_key=cursor,
-                        from_me_group=from_me, phase=phase))
+                    append_ve(Chunk(idx, VE, cycles, hbm, name, 1,
+                                    0.0, cursor, from_me, phase))
                     made += 1
             self.outstanding = made
+            if made:
+                self._dirty_sink.add(self.idx)
             return made > 0
         if self.is_neuisa:
             g: MuTOpGroup = prog.groups[self.cursor]
@@ -1082,6 +1111,8 @@ class _TenantRT:
                     group_key=self.cursor, phase=phase))
                 made += 1
         self.outstanding = made
+        if made:
+            self._dirty_sink.add(self.idx)
         return made > 0
 
     def chunk_done(self, t: float) -> None:
@@ -1130,6 +1161,11 @@ class Simulator:
     shared by collocated vNPU tenants, under any registered
     :class:`~repro.core.policies.SchedulerPolicy`."""
 
+    # heap compaction floor: below this many stale entries a sweep
+    # costs more than the lazy pops it saves (tests shrink it to
+    # exercise compaction on small runs)
+    HEAP_COMPACT_MIN = 64
+
     def __init__(
         self,
         tenants: Sequence[TenantSpec] = (),
@@ -1139,6 +1175,7 @@ class Simulator:
         fair_slice: float = 50_000.0,   # cycles of service imbalance
         max_events: int = 20_000_000,
         fast_path: bool = True,
+        incremental: bool = True,
     ):
         """``fast_path`` enables the wall-clock optimizations that are
         *result-identical* by construction: memoized per-(chunk shape,
@@ -1147,7 +1184,18 @@ class Simulator:
         tightened ``neu10`` schedule pass. ``False`` runs the
         reference implementations — kept so benchmarks/tests can
         prove byte-for-byte SimResult equality and measure the
-        speedup (``fig25_scaling``'s fast-path row)."""
+        speedup (``fig25_scaling``'s fast-path row).
+
+        ``incremental`` additionally enables dirty-set scheduling when
+        the policy opts in with ``schedule_incremental`` (see
+        ``docs/architecture.md`` "Event engine"): the schedule pass is
+        skipped outright while nothing marked a tenant dirty, runs
+        through the policy's incremental hook otherwise, and the event
+        loop/dispatch layers are fused into one frame. Policies
+        without the hook (``pmt``/``v10``) silently fall back to the
+        full pass per event. Result-identical by the same A/B proof
+        (``fig25``'s ``sched_incremental`` row + the churn property
+        test); requires ``fast_path``."""
         self.policy_obj = resolve_policy(policy)
         self.policy = self.policy_obj.name or type(self.policy_obj).__name__
         self.core = core
@@ -1165,6 +1213,10 @@ class Simulator:
         self._squat: Dict[int, int] = {}
         self.now = 0.0
         self.tenants: List[_TenantRT] = []
+        # maintained active-tenant cache (tenants minus removed, in
+        # index order) — the incremental pass iterates it every event,
+        # so it is kept up to date by add/remove instead of rebuilt
+        self._act: List[_TenantRT] = []
         self.mes = [_Engine(ME, i, None) for i in range(core.n_me)]
         self.ves = [_Engine(VE, i, None) for i in range(core.n_ve)]
         self._heap: List[Tuple[float, int, str, int, int]] = []
@@ -1175,6 +1227,27 @@ class Simulator:
         self._mig_payloads: Dict[int, Tuple["_Request",
                                             Optional[Callable]]] = {}
         self._events = 0
+        # lazy-deletion heap hygiene: count of stale entries (preempted
+        # or cancelled tokens) still sitting in the heap; compacted
+        # away past HEAP_COMPACT_MIN once they outnumber live entries
+        self._stale = 0
+        # incremental scheduling state: the shared dirty set (tenant
+        # indices; -1 = global change such as an unowned engine
+        # freeing) and the per-owner free-engine index the incremental
+        # pass consumes instead of scanning pools
+        self.incremental = incremental
+        self._dirty: set = set()
+        self._free_me_own: Dict[Optional[int], List[_Engine]] = {}
+        self._free_ve_own: Dict[Optional[int], List[_Engine]] = {}
+        # free-engine counters per pool (mirrors of the index) — one
+        # integer check gates the harvest section of the pass
+        self._nfree_me = 0
+        self._nfree_ve = 0
+        self._inc_fn = getattr(self.policy_obj, "schedule_incremental", None)
+        self._inc = bool(incremental and fast_path
+                         and self._inc_fn is not None)
+        if self._inc:
+            self._rebuild_free_index()
         self.policy_obj.on_attach(self)
         for s in tenants:
             self.add_tenant(s)
@@ -1192,6 +1265,7 @@ class Simulator:
         idx = len(self.tenants)
         rt = _TenantRT(idx, spec, self.core, open_loop=open_loop,
                        fast_path=self.fast_path)
+        rt._dirty_sink = self._dirty   # before any ready-queue fill
         # a late joiner starts from the lowest live fair-share counter,
         # not zero — otherwise it would starve everyone until it
         # "caught up" on service it never queued for
@@ -1199,6 +1273,7 @@ class Simulator:
         if live:
             rt.active_cycles = min(live)
         self.tenants.append(rt)
+        self._act.append(rt)
         if self.policy_obj.spatial:
             self._claim_engines(rt)
             if self.fast_path:
@@ -1207,6 +1282,11 @@ class Simulator:
                 # deregister released ownership, not the work) — the
                 # squatter counts must see them, like resize does
                 self._recount_squat()
+            if self._inc:
+                # ownership keys the free-engine index; claiming moved
+                # engines between owner buckets
+                self._rebuild_free_index()
+                self._dirty.add(-1)
         if not open_loop:
             rt.start_request(self.now)
         self.policy_obj.on_tenant_added(self, rt)
@@ -1219,8 +1299,12 @@ class Simulator:
         rt = self.tenants[idx]
         if rt.removed:
             return
+        cancelled: set = set()   # distinct tokens -> stale heap entries
         for e in self.mes + self.ves:
             if not e.free and e.chunk is not None and e.tenant == idx:
+                # one heap entry per token (VLIW multi-engine ops and
+                # incremental cohorts share a token across engines)
+                cancelled.add(e.token)
                 self._unsquat(e, idx)
                 e.token = -1       # pending completion event goes stale
                 e.chunk = None
@@ -1229,6 +1313,15 @@ class Simulator:
             if e.owner == idx:
                 e.owner = None
         self._squat.pop(idx, None)   # released engines reclaim nothing
+        if cancelled:
+            self._stale += len(cancelled)
+            self._maybe_compact()
+        if self._inc:
+            # cancelled engines freed and ownership released: the
+            # free-engine index is rebuilt, and everyone may now
+            # harvest the released engines
+            self._rebuild_free_index()
+            self._dirty.add(-1)
         rt.ready_me.clear()
         rt.ready_ve.clear()
         rt.waiting.clear()
@@ -1247,6 +1340,7 @@ class Simulator:
         rt.piggy_slice = 0
         rt.in_request = False
         rt.removed = True
+        self._act = [r for r in self.tenants if not r.removed]
         if self._bw_per_tenant.pop(idx, None) is not None:
             # cancelled chunks left the engines above: drop their
             # bandwidth-contention entries too
@@ -1274,6 +1368,9 @@ class Simulator:
                     e.owner = None
             self._claim_engines(rt)
             self._recount_squat()   # ownership moved under live chunks
+            if self._inc:
+                self._rebuild_free_index()
+                self._dirty.add(-1)
         self._schedule(self.now)
 
     def _claim_engines(self, rt: _TenantRT) -> None:
@@ -1352,14 +1449,17 @@ class Simulator:
                 "run() needs at least one closed-loop tenant; "
                 "open-loop simulations are driven with run_until()")
         self._schedule(self.now)
-        while self._heap:
-            t = self._step()
-            if t is None:
-                continue
-            if all(rt.done for rt in closed):
-                break
-            self._schedule(t)
-            self._check_liveness(t)
+        if self._inc:
+            self._drain_fast(math.inf, closed)
+        else:
+            while self._heap:
+                t = self._step()
+                if t is None:
+                    continue
+                if all(rt.done for rt in closed):
+                    break
+                self._schedule(t)
+                self._check_liveness(t)
         makespan = max((rt.finished_at for rt in closed), default=self.now)
         if not all(rt.done for rt in closed):
             makespan = self.now
@@ -1370,15 +1470,80 @@ class Simulator:
         (inclusive); returns the new simulation time. With no bound,
         drains every injected arrival and all in-flight work."""
         self._schedule(self.now)
-        while self._heap and self._heap[0][0] <= t_end + EPS:
-            t = self._step()
-            if t is None:
-                continue
-            self._schedule(t)
-            self._check_liveness(t)
+        if self._inc:
+            self._drain_fast(t_end, None)
+        else:
+            while self._heap and self._heap[0][0] <= t_end + EPS:
+                t = self._step()
+                if t is None:
+                    continue
+                self._schedule(t)
+                self._check_liveness(t)
         if math.isfinite(t_end) and t_end > self.now:
             self.now = t_end
         return self.now
+
+    def _drain_fast(self, t_end: float, closed) -> None:
+        """Incremental-path event loop: event semantics identical to
+        ``_step``/``_schedule``/``_check_liveness`` (stale pops skip
+        scheduling without advancing ``now``; same-time events batch
+        within EPS; ``closed`` — run()'s termination list, None for
+        run_until — is checked before scheduling), with the call
+        layers flattened and the schedule pass gated on the dirty
+        set."""
+        heap = self._heap
+        pop = heapq.heappop
+        mes, ves = self.mes, self.ves
+        sched = self._inc_fn
+        dirty = self._dirty
+        complete = self._complete
+        apply_ev = self._apply
+        max_events = self.max_events
+        bound = t_end + EPS
+        while heap and heap[0][0] <= bound:
+            self._events += 1
+            if self._events > max_events:
+                raise RuntimeError("simulator exceeded max_events")
+            t, _, kind, eid, token = pop(heap)
+            if kind == ME:
+                eng = mes[eid]
+            elif kind == VE:
+                eng = ves[eid]
+            else:
+                apply_ev(kind, eid, token, t)
+                eng = None
+            if eng is not None:
+                if eng.token != token:
+                    self._stale -= 1
+                    continue
+                complete(eng, t)
+            self.now = t
+            tb = t + EPS
+            while heap and heap[0][0] <= tb:
+                t2, _, k2, e2, tok2 = pop(heap)
+                if k2 == ME:
+                    eng = mes[e2]
+                elif k2 == VE:
+                    eng = ves[e2]
+                else:
+                    apply_ev(k2, e2, tok2, t2)
+                    continue
+                if eng.token == tok2:
+                    complete(eng, t2)
+                else:
+                    self._stale -= 1
+            if closed is not None:
+                for rt in closed:
+                    if not rt.done:
+                        break
+                else:
+                    return
+            if dirty:
+                snap = set(dirty)
+                dirty.clear()
+                sched(self, t, snap)
+            if not heap:
+                self._check_liveness(t)
 
     def _step(self) -> Optional[float]:
         """Pop and apply the next event (plus its same-time batch).
@@ -1412,6 +1577,7 @@ class Simulator:
             return True
         eng = (self.mes if kind == ME else self.ves)[eid]
         if eng.token != token:
+            self._stale -= 1
             return False  # stale (preempted / cancelled)
         self._complete(eng, t)
         return True
@@ -1442,25 +1608,49 @@ class Simulator:
     # ------------------------------------------------------------------
     def _complete(self, eng: _Engine, t: float) -> None:
         chunk, tenant = eng.chunk, eng.tenant
+        inc = self._inc
         if chunk is None:
             # context-switch drain window finished
             token = eng.token
             for e in self.mes + self.ves:
                 if e.token == token:
                     e.token = -1
+                    if inc:
+                        self._free_idx_add(e)
+                        self._dirty.add(-1 if e.owner is None else e.owner)
+            return
+        if chunk.cohort > 1:
+            # incremental cohort: n identical compute-only siblings
+            # under one token/event — replay per-chunk completion in
+            # engine order (== dispatch order == the order the
+            # reference's n consecutive events would complete in)
+            self._complete_cohort(eng.token, chunk.kind, tenant, t)
             return
         squat = self._squat
         if chunk.n_dispatched == 1:     # single-engine μTOp fast path
             if squat:
-                self._unsquat(eng, tenant)
+                # inlined _unsquat (hot path)
+                ow = eng.owner
+                if ow is not None and ow != tenant:
+                    ns = squat.get(ow, 0) - 1
+                    if ns <= 0:
+                        squat.pop(ow, None)
+                    else:
+                        squat[ow] = ns
             eng.token = -1
             eng.chunk = None
+            if inc:
+                self._free_idx_add(eng)
+                self._dirty.add(-1 if eng.owner is None else eng.owner)
         else:
             for e in self._engines_of(chunk):
                 if squat:
                     self._unsquat(e, tenant)
                 e.token = -1
                 e.chunk = None
+                if inc:
+                    self._free_idx_add(e)
+                    self._dirty.add(-1 if e.owner is None else e.owner)
         if self._bw_inflight:
             self._bw_unregister(chunk)
         rt = self.tenants[tenant]
@@ -1484,7 +1674,77 @@ class Simulator:
         # which is precisely V10's Fig. 27 pathology.
         rt.active_cycles += (cycles if chunk.n_engines <= 1
                              else cycles / chunk.n_engines)
-        rt.chunk_done(t)
+        # inlined chunk_done (hot path)
+        rt.outstanding -= 1
+        if rt.outstanding <= 0 and not rt.ready_me and not rt.ready_ve:
+            rt._advance(t)
+
+    def _complete_cohort(self, token: int, kind: str, tenant: int,
+                         t: float) -> None:
+        """Finish every member of a dispatch cohort (see
+        ``Chunk.cohort``): each engine carries its OWN chunk, so the
+        per-chunk accounting below is exactly what the reference's n
+        separate completion events do, in the same (engine-id) order.
+        Cohort chunks are compute-only (never bandwidth-registered),
+        single-engine, and run un-harvested on the owner's own engines
+        (so no squatter bookkeeping applies)."""
+        pool = self.mes if kind == ME else self.ves
+        rt = self.tenants[tenant]
+        st = rt.stats
+        dirty = self._dirty
+        is_me = kind == ME
+        n = 0
+        freed = []
+        for e in pool:
+            if e.token != token:
+                continue
+            cycles = e.chunk.cycles
+            e.token = -1
+            e.chunk = None
+            freed.append(e)
+            if is_me:
+                st.me_work += cycles
+            else:
+                st.ve_work += cycles
+            rt.active_cycles += cycles
+            n += 1
+        # batched free-index merge: members normally share one owner
+        # (they were dispatched off one owner bucket), and that bucket
+        # is normally empty now (the members WERE its contents) — one
+        # dict store replaces n shift inserts. A mid-flight resize can
+        # break either assumption; fall back to per-member inserts.
+        ow = freed[0].owner
+        for e in freed:
+            if e.owner != ow:
+                ow = _MIXED
+                break
+        if ow is not _MIXED:
+            d = self._free_me_own if is_me else self._free_ve_own
+            lst = d.get(ow)
+            if lst:
+                for e in freed:
+                    eid = e.eid
+                    i = len(lst)
+                    while i and lst[i - 1].eid > eid:
+                        i -= 1
+                    lst.insert(i, e)
+            else:
+                d[ow] = freed   # already in eid (pool-scan) order
+            if is_me:
+                self._nfree_me += n
+            else:
+                self._nfree_ve += n
+            dirty.add(-1 if ow is None else ow)
+        else:
+            for e in freed:
+                self._free_idx_add(e)
+                dirty.add(-1 if e.owner is None else e.owner)
+        # batched chunk_done: intermediate members can never trigger
+        # _advance (outstanding still counts their in-flight siblings),
+        # so one decrement + one check is state-identical to n calls
+        rt.outstanding -= n
+        if rt.outstanding <= 0 and not rt.ready_me and not rt.ready_ve:
+            rt._advance(t)
 
     def _engines_of(self, chunk: Chunk,
                     eng: Optional[_Engine] = None) -> List[_Engine]:
@@ -1629,7 +1889,10 @@ class Simulator:
         chunk.n_dispatched = n
         end = t + dur
         fast = self.fast_path
+        inc = self._inc
         for e in engines:
+            if inc:
+                self._free_idx_remove(e)
             e.token = token
             e.chunk = chunk
             e.tenant = chunk.tenant
@@ -1661,6 +1924,8 @@ class Simulator:
             if fast:
                 self._bw_register(chunk)
         chunk.n_dispatched = 1
+        if self._inc:
+            self._free_idx_remove(e)
         e.token = token
         e.chunk = chunk
         e.tenant = chunk.tenant
@@ -1691,6 +1956,16 @@ class Simulator:
         ``blocked_owner``: tenant reclaiming its engine — it eats the
         drain window (Table III 'blocked because harvested')."""
         chunk = eng.chunk
+        if chunk.cohort:
+            # members carry 1, the lead carries n: either way the
+            # engine shares its completion token with siblings, and
+            # preempting one would orphan the rest. Unreachable from
+            # the in-tree policies (cohorts run on the owner's OWN
+            # engines, which reclaim never targets) — fail loudly for
+            # third-party policies instead of hanging.
+            raise RuntimeError(
+                "cannot preempt a cohort member: cohorts run on owner "
+                "engines, which policies must not reclaim")
         engines = self._engines_of(chunk, eng)
         if self._bw_inflight:
             self._bw_unregister(chunk)
@@ -1735,13 +2010,121 @@ class Simulator:
             self._heap,
             (t + ctx, next(self._seq), engines[0].kind, engines[0].eid,
              token))
+        # the preempted chunk's pending completion entry is now stale
+        # (engines carry the drain token); its remaining work landed
+        # back on the tenant's ready queue
+        self._stale += 1
+        if self._inc:
+            self._dirty.add(chunk.tenant)
+        self._maybe_compact()
 
     # back-compat aliases (pre-registry internal names)
     _dispatch = dispatch
     _preempt = preempt
 
+    # ------------------------------------------------------------------
+    # incremental scheduling plumbing (see docs/architecture.md,
+    # "Event engine")
+    # ------------------------------------------------------------------
+    def mark_dirty(self, idx: int = -1) -> None:
+        """Force the next schedule pass to run. Third-party policies
+        using ``schedule_incremental`` must call this whenever they
+        stash enabling state OUTSIDE the ready queues / engine pools
+        (those are marked automatically); ``idx`` is the affected
+        tenant, -1 for a global change."""
+        self._dirty.add(idx)
+
+    def _rebuild_free_index(self) -> None:
+        """Recompute the per-owner free-engine index from engine state
+        (ownership changed — tenant add/remove/resize)."""
+        me: Dict[Optional[int], List[_Engine]] = {}
+        for e in self.mes:
+            if e.token < 0:
+                me.setdefault(e.owner, []).append(e)
+        ve: Dict[Optional[int], List[_Engine]] = {}
+        for e in self.ves:
+            if e.token < 0:
+                ve.setdefault(e.owner, []).append(e)
+        self._free_me_own = me
+        self._free_ve_own = ve
+        self._nfree_me = sum(len(v) for v in me.values())
+        self._nfree_ve = sum(len(v) for v in ve.values())
+
+    def _free_idx_add(self, e: _Engine) -> None:
+        """Engine freed: insert into its owner's bucket keeping eid
+        order (buckets are at most pool-sized, so a shift insert beats
+        re-sorting)."""
+        if e.kind == ME:
+            d = self._free_me_own
+            self._nfree_me += 1
+        else:
+            d = self._free_ve_own
+            self._nfree_ve += 1
+        lst = d.get(e.owner)
+        if lst is None:
+            d[e.owner] = [e]
+            return
+        eid = e.eid
+        i = len(lst)
+        while i and lst[i - 1].eid > eid:
+            i -= 1
+        lst.insert(i, e)
+
+    def _free_idx_remove(self, e: _Engine) -> None:
+        """Engine goes busy: drop it from its owner's bucket."""
+        if e.kind == ME:
+            self._free_me_own[e.owner].remove(e)
+            self._nfree_me -= 1
+        else:
+            self._free_ve_own[e.owner].remove(e)
+            self._nfree_ve -= 1
+
+    def _maybe_compact(self) -> None:
+        if (self._stale >= self.HEAP_COMPACT_MIN
+                and self._stale * 2 >= len(self._heap)):
+            self._compact_heap()
+
+    def _compact_heap(self) -> None:
+        """Sweep lazily-deleted entries (stale engine tokens) out of
+        the event heap. Pop ORDER of surviving entries is unchanged —
+        the heap orders on the (t, seq) prefix, which compaction
+        preserves — so results are identical; only ``max_events``
+        accounting changes (stale pops no longer count).
+
+        Compaction mutates ``self._heap`` IN PLACE: the event loop and
+        scheduling passes bind local aliases to the heap list, and a
+        compaction can fire mid-pass (``preempt`` during a reclaim).
+        Rebinding to a fresh list would split pushes and pops across
+        two heaps and silently drop live events."""
+        mes, ves = self.mes, self.ves
+        keep = []
+        for ev in self._heap:
+            kind = ev[2]
+            if kind == ME:
+                if mes[ev[3]].token != ev[4]:
+                    continue
+            elif kind == VE:
+                if ves[ev[3]].token != ev[4]:
+                    continue
+            keep.append(ev)
+        self._heap[:] = keep
+        heapq.heapify(self._heap)
+        self._stale = 0
+
     def _schedule(self, t: float) -> None:
-        self.policy_obj.schedule(self, t)
+        if self._inc:
+            d = self._dirty
+            if not d:
+                return
+            # snapshot-and-clear keeps the set OBJECT alive (tenant
+            # sinks hold a reference); marks made during the pass
+            # (reclaim preemptions) land in the live set and trigger
+            # the next one
+            snap = set(d)
+            d.clear()
+            self._inc_fn(self, t, snap)
+        else:
+            self.policy_obj.schedule(self, t)
 
 
 # ----------------------------------------------------------------------

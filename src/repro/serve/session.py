@@ -37,6 +37,7 @@ Example::
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, fields as _dc_fields
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -575,16 +576,13 @@ class NPUCluster:
 # ----------------------------------------------------------------------
 # closed-loop helper (paper figures, legacy MultiTenantServer)
 # ----------------------------------------------------------------------
-def run_closed_loop(cluster: NPUCluster, n_requests: int = 8,
-                    hbm_scale: float = 1.0, fast_path: bool = True,
-                    ) -> Tuple[SimResult, List[TenantReport]]:
-    """Batch-mode run: every registered tenant replays its program
-    ``n_requests`` times back to back (the paper's §V-A methodology).
-    Generative tenants replay their full phase chain (prefill + the
-    default generation length of decode steps) per request.
-    ``fast_path=False`` selects the simulator's reference
-    implementations (result-identical; see :class:`Simulator`) — the
-    fig25 fast-path benchmark row uses it for its A/B proof."""
+def build_closed_loop_specs(cluster: NPUCluster,
+                            n_requests: int = 8) -> List[TenantSpec]:
+    """Compile every registered tenant into the :class:`TenantSpec`
+    list a closed-loop :class:`Simulator` consumes. Split out of
+    :func:`run_closed_loop` so benchmark A/B rows can compile once and
+    time only ``Simulator(...).run()`` (specs are read-only to the
+    simulator — safe to reuse across runs)."""
     specs = []
     for h in cluster.tenants:
         if h.plan is not None:
@@ -595,8 +593,26 @@ def run_closed_loop(cluster: NPUCluster, n_requests: int = 8,
         else:
             specs.append(TenantSpec(cluster.compile(h.trace), h.vnpu,
                                     n_requests, weight=h.priority))
+    return specs
+
+
+def run_closed_loop(cluster: NPUCluster, n_requests: int = 8,
+                    hbm_scale: float = 1.0, fast_path: bool = True,
+                    incremental: bool = True,
+                    ) -> Tuple[SimResult, List[TenantReport]]:
+    """Batch-mode run: every registered tenant replays its program
+    ``n_requests`` times back to back (the paper's §V-A methodology).
+    Generative tenants replay their full phase chain (prefill + the
+    default generation length of decode steps) per request.
+    ``fast_path=False`` selects the simulator's reference
+    implementations (result-identical; see :class:`Simulator`) — the
+    fig25 fast-path benchmark row uses it for its A/B proof;
+    ``incremental=False`` likewise disables the dirty-set scheduling
+    core (the ``sched_incremental`` row's baseline)."""
+    specs = build_closed_loop_specs(cluster, n_requests)
     res = Simulator(specs, policy=cluster.policy_cls, core=cluster.core,
-                    hbm_scale=hbm_scale, fast_path=fast_path).run()
+                    hbm_scale=hbm_scale, fast_path=fast_path,
+                    incremental=incremental).run()
     return res, reports_from_result(cluster.tenants, res, cluster.core)
 
 
@@ -748,16 +764,22 @@ class ServingSession:
 
     def __init__(self, cluster: NPUCluster, hbm_scale: float = 1.0,
                  fair_slice: float = 50_000.0,
-                 autoscaler: Optional[AutoscaleHook] = None):
+                 autoscaler: Optional[AutoscaleHook] = None,
+                 incremental: bool = True):
         self.cluster = cluster
         self.autoscaler = autoscaler
         self.sims: List[Simulator] = [
             Simulator((), policy=cluster.policy_cls, core=cluster.core,
-                      hbm_scale=hbm_scale, fair_slice=fair_slice)
+                      hbm_scale=hbm_scale, fair_slice=fair_slice,
+                      incremental=incremental)
             for _ in cluster.manager.cores
         ]
         self.sim = self.sims[0]   # single-core back-compat alias
         self.fabric_tenants: List[FabricTenant] = []
+        # core indices whose event horizon a cross-core hand-off just
+        # pulled EARLIER — the cluster event heap in _advance must
+        # re-key them before its next pop (see _make_migrator)
+        self._pending_bumps: List[int] = []
         # autoscale windows consumed, keyed (core_idx, sim_idx[, series])
         self._autoscale_cursor: Dict[Tuple, int] = {}
         for h in cluster.tenants:
@@ -948,6 +970,9 @@ class ServingSession:
             delay = topo.transfer_cycles(cp, cd, nbytes)
             dst_sim.inject_migration(hd.sim_idx, t + delay, mreq,
                                      on_land=land)
+            # the injection may have pulled the destination core's
+            # horizon earlier than its cluster-heap entry
+            self._pending_bumps.append(hd.core_idx)
             return True
 
         return migrate
@@ -1095,17 +1120,49 @@ class ServingSession:
         clock ever passes the global event frontier — so a migration
         can never land in a destination core's past. Single-core
         sessions drive their one simulator directly (bit-identical to
-        the pre-fabric engine)."""
+        the pre-fabric engine).
+
+        Multi-core driving uses a cluster event heap keyed on each
+        core's ``next_event_at`` instead of a min() scan per event:
+        a core's entry is re-pushed only when its horizon changes —
+        after it runs, or when a cross-core hand-off pulls its
+        horizon earlier (``_pending_bumps``, appended by the
+        migration hook). Superseded entries are dropped lazily via
+        the ``keyed`` horizon array. Ties pop lowest core index
+        first, matching the min() scan, so drive order — and every
+        SimResult — is unchanged."""
         sims = self.sims
         if len(sims) == 1:
             sims[0].run_until(t_end)
+            self._pending_bumps.clear()   # same-core hand-offs
             return
-        while True:
-            target = min(sims, key=lambda s: s.next_event_at)
-            nxt = target.next_event_at
-            if nxt > t_end or not math.isfinite(nxt):
-                break
-            target.run_until(nxt)
+        bumps = self._pending_bumps
+        bumps.clear()
+        keyed = [s.next_event_at for s in sims]
+        heap = [(keyed[i], i) for i in range(len(sims))
+                if math.isfinite(keyed[i])]
+        heapq.heapify(heap)
+
+        def push(i: int, horizon: float) -> None:
+            keyed[i] = horizon
+            if math.isfinite(horizon):
+                heapq.heappush(heap, (horizon, i))
+
+        while heap:
+            h, i = heapq.heappop(heap)
+            if h != keyed[i]:
+                continue              # superseded by a later re-key
+            nxt = sims[i].next_event_at
+            if nxt != h:
+                push(i, nxt)          # horizon moved; re-key
+                continue
+            if nxt > t_end:
+                break                 # heap min: every core is beyond
+            sims[i].run_until(nxt)
+            for j in bumps:
+                push(j, sims[j].next_event_at)
+            bumps.clear()
+            push(i, sims[i].next_event_at)
         if math.isfinite(t_end):
             for s in sims:
                 s.run_until(t_end)   # clock alignment; no events left

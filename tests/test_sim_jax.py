@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 
 from repro.core import (TenantSpec, VNPUConfig, VNPUManager, compile_neuisa)
-from repro.core.sim_jax import fleet_sweep, pack_pair, simulate_pair
+from repro.core.sim_jax import (fleet_sweep, pack_pair, simulate_pair,
+                                sweep_collocations)
 from repro.core.simulator import Simulator
 from repro.npu.hw_config import DEFAULT_CORE
 from repro.npu.workloads import get_workload
@@ -75,3 +76,31 @@ def test_fleet_sweep_one_program():
     # more bandwidth never slows a fleet cell down
     ms = np.asarray(out["makespan"])
     assert np.all(ms[:, 0] >= ms[:, 2] * 0.999)
+
+
+def test_sweep_collocations_matches_oracle_and_orders():
+    """The 3-level (pair × split × bandwidth) collocation sweep:
+    the no-harvest half-split column is EXACT against the discrete
+    oracle per pair (same guarantee as simulate_pair — it's the same
+    kernel under two more vmap levels), so the sweep RANKS pairs the
+    way the oracle does; bandwidth stays monotone along its axis."""
+    core = DEFAULT_CORE
+    progs = [
+        (compile_neuisa(get_workload(a, core), core),
+         compile_neuisa(get_workload(b, core), core))
+        for a, b in PAIRS
+    ]
+    splits = (((2, 2), (2, 2)), ((3, 1), (3, 1)))
+    out = sweep_collocations(progs, splits, bw_points=(0.75, 1.0, 2.0),
+                             n_requests=4, harvest=False, core=core)
+    assert out["makespan"].shape == (len(PAIRS), len(splits), 3)
+    oracle_ms = [_oracle(*p, "neu10_nh").makespan for p in PAIRS]
+    sweep_ms = np.asarray(out["makespan"])[:, 0, 1]   # half split, bw=1
+    for pair, o, s in zip(PAIRS, oracle_ms, sweep_ms):
+        assert 0.98 < float(s) / o < 1.02, (pair, float(s) / o)
+    # capacity-planning semantics: pair ranking == oracle ranking
+    assert (np.argsort(oracle_ms).tolist()
+            == np.argsort(sweep_ms).tolist())
+    # more bandwidth never slows any cell down
+    ms = np.asarray(out["makespan"])
+    assert np.all(ms[:, :, 0] >= ms[:, :, 2] * 0.999)

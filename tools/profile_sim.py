@@ -1,0 +1,93 @@
+"""cProfile harness over the simulator's heaviest sweep.
+
+Profiles the ``fig25`` largest configuration (8ME/8VE BERT+ENet under
+neu10 — the event-loop load the fast-path and incremental-dispatch
+rows benchmark) and prints the top cumulative hotspots, so perf PRs
+measure BEFORE touching the loop and the profile is comparable
+across PRs.
+
+  PYTHONPATH=src python tools/profile_sim.py            # top 20
+  PYTHONPATH=src python tools/profile_sim.py --top 40
+  PYTHONPATH=src python tools/profile_sim.py --mode ref # reference
+  PYTHONPATH=src python tools/profile_sim.py -o prof.txt
+
+Modes select the simulator variant (``Simulator(fast_path=...)`` +
+the policy's schedule implementation):
+
+* ``incremental`` (default) — the dirty-set dispatch core.
+* ``fast``                  — PR-4 fast path with incremental
+                              dispatch disabled (full schedule pass
+                              per event).
+* ``ref``                   — reference implementations everywhere.
+
+CI's benchmark-smoke job uploads the ``--output`` file as an
+artifact next to BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import io
+import pstats
+import sys
+import time
+
+
+def run_sweep(mode: str, n_requests: int) -> float:
+    """One fig25 largest-sweep run; returns wall seconds."""
+    from benchmarks.common import run_pair
+    from repro.npu.hw_config import NPUCoreConfig
+
+    core = NPUCoreConfig(n_me=8, n_ve=8)
+    kw = {}
+    if mode == "ref":
+        kw["fast_path"] = False
+    t0 = time.time()
+    res = run_pair("BERT", "ENet", "neu10", core=core, me_ve=(4, 4),
+                   n_requests=n_requests, incremental=(mode == "incremental"),
+                   **kw)
+    dt = time.time() - t0
+    assert res.makespan > 0
+    return dt
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="tools/profile_sim.py",
+        description="cProfile the fig25 8ME8VE sweep")
+    ap.add_argument("--top", type=int, default=20,
+                    help="hotspot rows to print (default 20)")
+    ap.add_argument("--mode", default="incremental",
+                    choices=("incremental", "fast", "ref"),
+                    help="simulator variant to profile")
+    ap.add_argument("--n-requests", type=int, default=6,
+                    help="closed-loop requests per tenant (default 6, "
+                         "the fig25 setting)")
+    ap.add_argument("-o", "--output", default=None, metavar="PATH",
+                    help="also write the report to PATH")
+    args = ap.parse_args(argv)
+
+    # warm the program caches outside the profile window so compile
+    # cost doesn't drown the event-loop hotspots being measured
+    run_sweep(args.mode, 1)
+
+    prof = cProfile.Profile()
+    prof.enable()
+    wall = run_sweep(args.mode, args.n_requests)
+    prof.disable()
+
+    buf = io.StringIO()
+    stats = pstats.Stats(prof, stream=buf)
+    stats.strip_dirs().sort_stats("cumulative").print_stats(args.top)
+    report = (f"# fig25 8ME8VE BERT+ENet neu10 mode={args.mode} "
+              f"n_requests={args.n_requests} wall_s={wall:.3f}\n"
+              + buf.getvalue())
+    sys.stdout.write(report)
+    if args.output:
+        with open(args.output, "w") as f:
+            f.write(report)
+        print(f"# wrote profile to {args.output}")
+
+
+if __name__ == "__main__":
+    main()
