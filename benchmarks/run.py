@@ -34,6 +34,7 @@ from benchmarks import (
     fig_colocation,
     fig_fabric,
     fig_kv_pressure,
+    fig_prefix_cache,
     table3_harvest_overhead,
 )
 
@@ -49,6 +50,7 @@ SUITES = {
     "fig_chunked_prefill": fig_chunked_prefill,
     "fig_fabric": fig_fabric,
     "fig_kv_pressure": fig_kv_pressure,
+    "fig_prefix_cache": fig_prefix_cache,
 }
 
 # "chat_ttft_p95=0.0063ms" / "speedup=1.50x" / "interleaved=9" ->

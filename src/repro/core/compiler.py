@@ -30,7 +30,8 @@ from repro.core.neuisa import (
     VLIWOp,
     VLIWProgram,
 )
-from repro.npu.cost_model import Operator, RequestPlan, WorkloadTrace
+from repro.npu.cost_model import (PIGGYBACK_POS_QUANT, Operator, RequestPlan,
+                                  WorkloadTrace)
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 
 
@@ -161,6 +162,7 @@ PREFILL = "prefill"
 DECODE = "decode"
 PIGGYBACK = "piggyback"   # one fused prefill-chunk + decode-batch program
 SWAPIN = "swapin"         # KV restore of an evicted (swapped) request
+PREFIX = "prefix"         # suffix-only prefill over a shared resident prefix
 
 
 @dataclass
@@ -229,6 +231,13 @@ class CompiledRequestPlan:
     _swapin: Optional[Callable[[int], AnyProgram]] = \
         field(default=None, repr=False, compare=False)
     _swapin_memo: Dict[int, CompiledPhase] = \
+        field(default_factory=dict, repr=False, compare=False)
+    # cross-request shared KV prefix (0 = off); `_prefix` builds the
+    # suffix-only prefill program for a quantized cached-token count
+    prefix_len: int = 0
+    _prefix: Optional[Callable[[int], AnyProgram]] = \
+        field(default=None, repr=False, compare=False)
+    _prefix_memo: Dict[int, CompiledPhase] = \
         field(default_factory=dict, repr=False, compare=False)
 
     @property
@@ -337,6 +346,32 @@ class CompiledRequestPlan:
             self._swapin_memo[bucket] = ph
         return ph
 
+    @property
+    def can_prefix(self) -> bool:
+        """True when on-demand shared-prefix programs are available."""
+        return self._prefix is not None
+
+    def prefix_phase(self, cached_tokens: int) -> CompiledPhase:
+        """Suffix-only prefill phase for a request whose leading
+        ``cached_tokens`` are already resident in a shared ledger
+        entry. The cached count quantizes DOWN to the
+        ``PIGGYBACK_POS_QUANT`` grid (never skipping tokens the cost
+        proxy didn't pay for), so the memo holds one program per grid
+        point; the ledger's byte bookkeeping stays exact."""
+        if self._prefix is None:
+            raise ValueError(
+                f"plan {self.name!r} was compiled without a prefix "
+                f"builder (no shared-prefix support)")
+        q = PIGGYBACK_POS_QUANT
+        cached = max(min(int(cached_tokens), self.prompt_len - 1), 0)
+        cached = (cached // q) * q
+        ph = self._prefix_memo.get(cached)
+        if ph is None:
+            ph = CompiledPhase(PREFIX, self._prefix(cached),
+                               context=self.prompt_len)
+            self._prefix_memo[cached] = ph
+        return ph
+
 
 class ProgramCache:
     """Per-(phase, context-bucket) compiled-program cache (§III-D).
@@ -431,6 +466,13 @@ def compile_request_plan(
         def swapin(context: int) -> AnyProgram:
             return cache.compile(swapin_builder(context), core, isa)
 
+    prefix = None
+    if plan.prefix_builder is not None and plan.prefix_len > 0:
+        prefix_builder = plan.prefix_builder
+
+        def prefix(cached: int) -> AnyProgram:
+            return cache.compile(prefix_builder(cached), core, isa)
+
     return CompiledRequestPlan(
         name=plan.name, prefill=prefill, decode=decode,
         prompt_len=plan.prompt_len, gen_len=plan.gen_len,
@@ -440,6 +482,8 @@ def compile_request_plan(
         kv_token_bytes=plan.kv_token_bytes,
         weight_bytes=plan.weight_bytes,
         _swapin=swapin,
+        prefix_len=plan.prefix_len if plan.prefix_builder is not None else 0,
+        _prefix=prefix,
     )
 
 

@@ -92,6 +92,10 @@ class VNPUManager:
             for c in range(cores_per_pnpu)
         ]
         self.vnpus: Dict[int, VNPU] = {}
+        # cross-tenant HBM loans: (lender vnpu_id, borrower vnpu_id)
+        # -> bytes. The ledgers carry only their lent/borrowed totals;
+        # this table is the authority on who owes whom.
+        self._loans: Dict[Tuple[int, int], int] = {}
 
     # ------------------------------------------------------------------
     def create(self, cfg: VNPUConfig, name: str = "",
@@ -107,11 +111,15 @@ class VNPUManager:
         self._map(v, core_hint=core_hint)
         return v
 
-    def destroy(self, v: VNPU) -> None:
+    def destroy(self, v: VNPU, _settle_loans: bool = True) -> None:
         """vNPU deallocation: clean the context, release EUs+segments,
-        tear down the (modeled) DMA mappings."""
+        tear down the (modeled) DMA mappings. Outstanding HBM loans
+        are settled first (``reconfigure`` opts out: the re-placed
+        vNPU inherits them via the ledger migration + loan re-key)."""
         if v.state == VNPUState.DESTROYED:
             return
+        if _settle_loans:
+            self._settle_loans(v)
         cs = self._core_of(v)
         if cs is not None:
             if v.mapping == "spatial":
@@ -150,13 +158,15 @@ class VNPUManager:
         mapping = v.mapping
         old_cfg = v.config
         old_ledger = v.kv_ledger
-        self.destroy(v)
+        old_id = v.vnpu_id
+        self.destroy(v, _settle_loans=False)
 
         def _restore() -> VNPU:
             restored = self.create(old_cfg, name=v.name, mapping=mapping,
                                    core_hint=core_hint)
             if old_ledger is not None:
                 restored.kv_ledger.migrate_from(old_ledger)
+            self._rekey_loans(old_id, restored.vnpu_id)
             return restored
 
         try:
@@ -171,10 +181,11 @@ class VNPUManager:
             try:
                 nv.kv_ledger.migrate_from(old_ledger)
             except KVLedgerError as exc:
-                self.destroy(nv)
+                self.destroy(nv, _settle_loans=False)
                 raise ReconfigureError(
                     f"reconfigure of vNPU {v.name!r} rejected: {exc}; "
                     f"previous mapping restored", _restore()) from exc
+        self._rekey_loans(old_id, nv.vnpu_id)
         return nv
 
     # ------------------------------------------------------------------
@@ -257,3 +268,111 @@ class VNPUManager:
         if cs is None:
             return []
         return [self.vnpus[i] for i in cs.residents if i != v.vnpu_id]
+
+    # ------------------------------------------------------------------
+    # cross-tenant HBM borrowing (reclaim-on-pressure protocol)
+    # ------------------------------------------------------------------
+    def borrow_hbm(self, v: VNPU, nbytes: int) -> int:
+        """Borrow up to ``nbytes`` (rounded up to whole isolation
+        segments) of IDLE HBM from co-resident vNPUs' ledgers for
+        ``v``. Deterministic: lenders are scanned in vnpu_id order,
+        each granting as many idle segments as it can spare. Returns
+        the bytes actually granted (0 when no co-resident has an idle
+        segment)."""
+        led = v.kv_ledger
+        if led is None or nbytes <= 0:
+            return 0
+        seg = led.segment_bytes
+        need_segs = -(-int(nbytes) // seg)
+        got = 0
+        for peer in sorted(self.collocated(v), key=lambda p: p.vnpu_id):
+            if need_segs <= 0:
+                break
+            plend = peer.kv_ledger
+            if plend is None:
+                continue
+            idle_segs = max(plend.available, 0) // seg
+            take_segs = min(need_segs, idle_segs)
+            if take_segs <= 0:
+                continue
+            take = take_segs * seg
+            if not plend.lend(take):      # pragma: no cover (idle-checked)
+                continue
+            led.grant(take)
+            key = (peer.vnpu_id, v.vnpu_id)
+            self._loans[key] = self._loans.get(key, 0) + take
+            got += take
+            need_segs -= take_segs
+        return got
+
+    def reclaim_hbm(self, v: VNPU, nbytes: int) -> int:
+        """Reclaim-on-pressure: pull back up to ``nbytes`` that ``v``
+        lent out, BEFORE its own admission blocks. Only the idle share
+        of each loan can return (live KV on a borrowed segment stays
+        until the borrower frees it). Returns the bytes reclaimed."""
+        led = v.kv_ledger
+        if led is None or nbytes <= 0 or led.lent <= 0:
+            return 0
+        got = 0
+        for key in sorted(k for k in self._loans if k[0] == v.vnpu_id):
+            if got >= nbytes:
+                break
+            borrower = self.vnpus.get(key[1])
+            bled = None if borrower is None else borrower.kv_ledger
+            if bled is None:
+                continue
+            back = bled.revoke(min(self._loans[key], int(nbytes) - got))
+            if back <= 0:
+                continue
+            led.reclaim_lent(back)
+            self._loans[key] -= back
+            if self._loans[key] <= 0:
+                del self._loans[key]
+            got += back
+        return got
+
+    def loans_of(self, v: VNPU) -> Tuple[int, int]:
+        """(bytes lent out, bytes borrowed) per the loan table."""
+        lent = sum(n for (l, _), n in self._loans.items()
+                   if l == v.vnpu_id)
+        borrowed = sum(n for (_, b), n in self._loans.items()
+                       if b == v.vnpu_id)
+        return lent, borrowed
+
+    def _settle_loans(self, v: VNPU) -> None:
+        """Unwind every loan involving ``v`` (destroy path). As a
+        borrower, its grant vanishes with it — the lender gets its
+        bytes back in full. As a lender, the borrower must be able to
+        give the idle bytes back; live KV stranded on a dying lender's
+        segments is a control-plane bug and raises."""
+        for key in sorted(k for k in self._loans if v.vnpu_id in k):
+            n = self._loans.pop(key)
+            lender = self.vnpus.get(key[0])
+            borrower = self.vnpus.get(key[1])
+            if key[1] == v.vnpu_id:       # v borrowed: return in full
+                if v.kv_ledger is not None:
+                    v.kv_ledger.borrowed = max(v.kv_ledger.borrowed - n, 0)
+                if lender is not None and lender.kv_ledger is not None:
+                    lender.kv_ledger.reclaim_lent(n)
+                continue
+            # v lent: the borrower must release the idle capacity now
+            bled = None if borrower is None else borrower.kv_ledger
+            back = 0 if bled is None else bled.revoke(n)
+            if bled is not None and back < n:
+                raise KVLedgerError(
+                    f"vNPU {v.name!r} destroyed with {n - back} B of its "
+                    f"segments still holding live borrowed KV; drain the "
+                    f"borrower first")
+            if v.kv_ledger is not None:
+                v.kv_ledger.reclaim_lent(n if bled is None else back)
+
+    def _rekey_loans(self, old_id: int, new_id: int) -> None:
+        """Reconfigure carried a ledger (and its loan counters) to a
+        new vNPU id: move the loan-table keys with it. Session resizes
+        are core-pinned, so co-residency — the physical premise of a
+        loan — survives the re-placement."""
+        for key in [k for k in self._loans if old_id in k]:
+            n = self._loans.pop(key)
+            nk = (new_id if key[0] == old_id else key[0],
+                  new_id if key[1] == old_id else key[1])
+            self._loans[nk] = self._loans.get(nk, 0) + n

@@ -810,7 +810,7 @@ def estimated_remaining_cycles(plan, req, context: int) -> float:
     return steps * max(plan.decode_phase_for(context).est_cycles, 1.0)
 
 
-def pick_eviction_victim(requests, plan, context_of):
+def pick_eviction_victim(requests, plan, context_of, shared_refs_of=None):
     """Choose which in-flight decoding request loses its KV segments
     when a tenant's continuous batch outgrows its HBM budget: the one
     with the LARGEST estimated remaining service (it would occupy the
@@ -818,11 +818,21 @@ def pick_eviction_victim(requests, plan, context_of):
     short requests whose TBT the SLO watches — PREMA's
     estimate-driven preemption applied to memory instead of compute).
     Deterministic: ties break toward the latest arrival, then the
-    candidate list order."""
+    candidate list order.
+
+    ``shared_refs_of`` (``req -> int``, optional) marks requests
+    holding a shared KV prefix entry: a holder whose entry is still
+    referenced by OTHER live requests (refs > 1) is picked LAST —
+    evicting it cannot free the shared segments (the refcount keeps
+    them resident), so it frees the least bytes per eviction. With the
+    callback omitted the ordering is identical to the pre-sharing
+    picker."""
     best, best_key = None, None
     for i, req in enumerate(requests):
         key = (estimated_remaining_cycles(plan, req, context_of(req)),
                req.arrival, i)
+        if shared_refs_of is not None:
+            key = (0 if shared_refs_of(req) > 1 else 1,) + key
         if best_key is None or key > best_key:
             best, best_key = req, key
     return best

@@ -73,8 +73,8 @@ from dataclasses import dataclass, field
 from typing import (Callable, Deque, Dict, List, Optional, Sequence, Tuple,
                     Union)
 
-from repro.core.compiler import (DECODE, PIGGYBACK, SWAPIN, CompiledPhase,
-                                 CompiledRequestPlan)
+from repro.core.compiler import (DECODE, PIGGYBACK, PREFIX, SWAPIN,
+                                 CompiledPhase, CompiledRequestPlan)
 from repro.core.neuisa import ME, VE, MuTOpGroup, NeuISAProgram, VLIWProgram
 from repro.core.policies import (PolicyLike, pick_eviction_victim,
                                  resolve_policy)
@@ -88,6 +88,9 @@ from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 EPS = 1e-9
 
 _ARRIVAL = "arr"  # heap event kind for open-loop request arrivals
+_ARRIVAL_K = "arrk"  # arrival carrying a shared-prefix key (payload
+                  # side-table, like _MIGRATE — the plain _ARRIVAL
+                  # path stays byte-identical when sharing is unused)
 _MIGRATE = "mig"  # heap event kind for cross-core decode hand-offs
 _MIXED = object()  # sentinel: cohort engines span several owners
                   # landing after their fabric transfer delay
@@ -200,9 +203,10 @@ class _Request:
 
     __slots__ = ("arrival", "gen_len", "tokens_done", "last_token_t",
                  "chunks_done", "prefill_done", "rid", "ttft_seen",
-                 "kv_swapped")
+                 "kv_swapped", "prefix_key", "prefix_ref", "prefix_cached")
 
-    def __init__(self, arrival: float, gen_len: int = 1, rid: int = 0):
+    def __init__(self, arrival: float, gen_len: int = 1, rid: int = 0,
+                 prefix_key: int = 0):
         self.arrival = arrival
         self.gen_len = max(int(gen_len), 1)
         self.tokens_done = 0
@@ -214,6 +218,11 @@ class _Request:
                                      # reject-mode restart must not
                                      # re-sample TTFT)
         self.kv_swapped = 0          # bytes to restore on swap-in resume
+        self.prefix_key = prefix_key  # shared-prefix group id (0 = none)
+        self.prefix_ref = None       # ledger key of the held shared
+                                     # entry (None while not admitted)
+        self.prefix_cached = 0       # prefix tokens skipped on a hit
+                                     # (0 on first-fill: full prefill)
 
 
 @dataclass
@@ -262,6 +271,16 @@ class TenantStats:
     kv_truncated: int = 0            # requests force-finished early: no
                                      # co-tenant victim left to evict
     kv_swapped_bytes: float = 0.0    # cumulative bytes swapped out
+    # ---- cross-request shared KV prefix (zero with sharing off) ----
+    kv_prefix_hits: int = 0          # admissions that found their prefix
+                                     # resident (suffix-only prefill)
+    kv_shared_bytes: float = 0.0     # cumulative prefix bytes those hits
+                                     # did NOT re-charge (re-use volume)
+    # ---- cross-tenant HBM borrowing (zero with borrowing off) ----
+    kv_borrowed_bytes: float = 0.0   # cumulative bytes granted to this
+                                     # tenant from idle peer segments
+    kv_reclaimed_bytes: float = 0.0  # cumulative lent bytes pulled back
+                                     # when this tenant hit pressure
     # ---- cross-core fabric migration (zero off-fabric) ----
     kv_migrations: int = 0           # prefill->decode hand-offs this
                                      # tenant's requests took to another
@@ -423,6 +442,17 @@ class _TenantRT:
                 f"kv_policy='evict' needs one (compile the plan from a "
                 f"trace-layer request_plan)")
         self.swapped: List[_Request] = []  # evicted, awaiting swap-in
+        # cross-request shared KV prefix: on when the plan carries a
+        # prefix builder AND KV accounting is live (sharing is a
+        # ledger feature); requests opt in per-arrival via prefix_key
+        self.prefix_enabled = (self.kv_enabled and self.plan.prefix_len > 0
+                               and self.plan.can_prefix)
+        # cross-tenant HBM borrowing: the serving layer installs a
+        # relief callback (needed_bytes -> bytes freed); a failed
+        # ledger charge retries ONCE after the hook reclaims lent
+        # segments and/or borrows idle peer segments. None (default)
+        # keeps every charge path bit-identical.
+        self.kv_pressure_hook: Optional[Callable[[float], float]] = None
         # cluster fabric: called when a request finishes prefill and
         # decode steps remain — returning True means the hand-off was
         # taken (the request continues on another core's decode pool);
@@ -461,15 +491,19 @@ class _TenantRT:
         """KV context of the request's NEXT decode step."""
         return self.plan.prompt_len + req.tokens_done + 1
 
-    def _new_request(self, arrival: float, gen_len: int) -> _Request:
-        return _Request(arrival, gen_len, rid=next(self._rid))
+    def _new_request(self, arrival: float, gen_len: int,
+                     prefix_key: int = 0) -> _Request:
+        return _Request(arrival, gen_len, rid=next(self._rid),
+                        prefix_key=prefix_key)
 
     def start_request(self, t: float, arrival: Optional[float] = None,
-                      gen_len: Optional[int] = None) -> None:
+                      gen_len: Optional[int] = None,
+                      prefix_key: int = 0) -> None:
         """Admit one request (closed-loop kick / legacy entry point)."""
         self.waiting.append(self._new_request(
             t if arrival is None else arrival,
-            self.plan.gen_len if gen_len is None else gen_len))
+            self.plan.gen_len if gen_len is None else gen_len,
+            prefix_key=prefix_key))
         if not self.in_request:
             self._start_iteration(t)
 
@@ -544,17 +578,72 @@ class _TenantRT:
 
     def _kv_charge(self, led, req: _Request, nbytes: float) -> bool:
         """Charge ``nbytes`` of KV growth to ``req``; mirrors the
-        ledger's peak occupancy into the tenant stats."""
+        ledger's peak occupancy into the tenant stats. A failed charge
+        retries ONCE after the serving layer's pressure hook (reclaim
+        lent segments / borrow idle peer segments) frees bytes."""
         if nbytes <= 0:
             return True
         if not led.alloc(req.rid, nbytes):
-            return False
+            hook = self.kv_pressure_hook
+            if hook is None or hook(nbytes - led.available) <= 0:
+                return False
+            if not led.alloc(req.rid, nbytes):
+                return False
+        self._kv_mark_peaks(led)
+        return True
+
+    def _kv_mark_peaks(self, led) -> None:
         st = self.stats
         if led.peak_bytes > st.kv_peak_bytes:
             st.kv_peak_bytes = led.peak_bytes
         if led.peak_segments > st.kv_peak_segments:
             st.kv_peak_segments = led.peak_segments
-        return True
+
+    # ---------------- cross-request shared KV prefix ----------------
+    def _kv_prefix_bytes(self) -> float:
+        return self.plan.prefix_len * self.plan.kv_token_bytes
+
+    def _kv_prefix_attach(self, led, req: _Request) -> Optional[str]:
+        """Transactionally take a shared-prefix reference for ``req``'s
+        admission attempt. Returns ``"hit"`` (prefix resident: bump the
+        refcount, the prefill skips the cached tokens and the rid
+        charge covers only the suffix), ``"fill"`` (first holder: the
+        prefix bytes charge all-or-nothing into the shared entry, the
+        request runs full prefill but its rid still carries only the
+        suffix), or None (no room to first-fill even after pressure
+        relief — the caller proceeds unshared). The caller MUST undo a
+        successful attach with :meth:`_kv_prefix_release` if the rest
+        of the admission fails, so a parked request never pins the
+        sole reference to an entry nobody is using. Hit stats are the
+        caller's job (counted once, on the attempt that admits)."""
+        key = req.prefix_key
+        pbytes = self._kv_prefix_bytes()
+        if led.shared_refs(key) > 0:
+            led.acquire_shared(key, pbytes)
+            req.prefix_ref = key
+            req.prefix_cached = self.plan.prefix_len
+            return "hit"
+        if not led.acquire_shared(key, pbytes):
+            hook = self.kv_pressure_hook
+            if hook is None or hook(pbytes - led.available) <= 0:
+                return None
+            if not led.acquire_shared(key, pbytes):
+                return None
+        req.prefix_ref = key
+        req.prefix_cached = 0
+        self._kv_mark_peaks(led)
+        return "fill"
+
+    def _kv_prefix_release(self, led, req: _Request) -> float:
+        """Drop ``req``'s shared-prefix reference (no-op when it holds
+        none). Returns the bytes freed (non-zero only on the LAST
+        release)."""
+        if req.prefix_ref is None or led is None:
+            return 0.0
+        freed = led.release_shared(req.prefix_ref)
+        req.prefix_ref = None
+        req.prefix_cached = 0
+        return freed
 
     def _kv_phase_tokens(self, req: _Request) -> int:
         """Prompt tokens the request's NEXT prefill phase ingests
@@ -577,18 +666,34 @@ class _TenantRT:
         cands = [r for r in self.decoding if r is not exclude]
         if not cands:
             return False
-        victim = pick_eviction_victim(cands, self.plan, self._context_of)
-        self.decoding.remove(victim)
         led = self._kv_led()
+        refs_of = None
+        if self.prefix_enabled:
+            # shared-prefix holders whose entry other live requests
+            # still reference go LAST: evicting them cannot free the
+            # shared segments (the refcount keeps them resident)
+            def refs_of(r):
+                return (led.shared_refs(r.prefix_ref)
+                        if r.prefix_ref is not None else 0)
+        victim = pick_eviction_victim(cands, self.plan, self._context_of,
+                                      shared_refs_of=refs_of)
+        self.decoding.remove(victim)
         freed = led.release(victim.rid)
         st = self.stats
         st.kv_evictions += 1
         if self.kv_policy == "evict":
+            if (victim.prefix_ref is not None
+                    and led.shared_refs(victim.prefix_ref) <= 1):
+                # sole holder: the shared entry swaps out with it (the
+                # resume recharges prefix + suffix through the rid;
+                # sharing for this key restarts at the next first-fill)
+                freed += self._kv_prefix_release(led, victim)
             victim.kv_swapped = freed
             st.kv_swapped_bytes += freed
             self.swapped.append(victim)
         else:
             st.kv_restarts += 1
+            self._kv_prefix_release(led, victim)
             victim.tokens_done = 0
             victim.prefill_done = 0
             victim.chunks_done = 0
@@ -666,27 +771,54 @@ class _TenantRT:
         if req.prefill_done:
             # budget knob disabled mid-slice: ingestion restarts from
             # token 0 (same rule as _pick_phase) — the partial KV is
-            # dropped, so its ledger share frees too
+            # dropped, so its ledger share (and any shared-prefix
+            # reference the slices held) frees too
             req.prefill_done = 0
             led.release(req.rid)
+            self._kv_prefix_release(led, req)
         tokens = self._kv_phase_tokens(req)
+        attach = None
+        if (self.prefix_enabled and req.prefix_key
+                and not self.plan.chunked and req.chunks_done == 0):
+            attach = self._kv_prefix_attach(led, req)
+            if attach is not None:
+                # the prefix bytes live in the shared entry (first-fill
+                # charged them there just now, or a hit found them
+                # resident): the rid carries only the unshared suffix
+                tokens -= self.plan.prefix_len
         need = tokens * self.plan.kv_token_bytes
         if self._kv_charge(led, req, need):
             self.active = [req]
-            phases = self.plan.prefill_phases()
-            ph = phases[min(req.chunks_done, len(phases) - 1)]
+            if attach == "hit":
+                self.stats.kv_prefix_hits += 1
+                self.stats.kv_shared_bytes += self._kv_prefix_bytes()
+                ph = self.plan.prefix_phase(req.prefix_cached)
+            else:
+                phases = self.plan.prefill_phases()
+                ph = phases[min(req.chunks_done, len(phases) - 1)]
             self.active_kind = ph.kind
             self.cur_program = ph.program
             return True
-        if self.plan.kv_prompt_bytes > led.capacity - led.reserved:
-            # the WHOLE prompt can never fit this tenant's segments
+        # cumulative fit check: can the request's UNSHARED bytes (plus
+        # the prefix share a first-fill would hold) ever fit? With no
+        # shared reference this is the whole prompt — the pre-sharing
+        # rule verbatim.
+        cum = self.plan.kv_prompt_bytes
+        if attach == "hit":
+            cum = need
+        if cum > led.capacity - led.reserved:
+            # the request can never fit this tenant's segments
             # (checked cumulatively, not per chunk — a request whose
             # chunks fit one at a time but whose total cannot would
             # otherwise wedge mid-prefill holding partial KV):
             # admission reject, surfaced through kv_rejected
             led.release(req.rid)
+            self._kv_prefix_release(led, req)
             self.stats.kv_rejected += 1
             return None
+        # blocked on memory: undo the attach (a parked request must
+        # not pin the sole reference) and keep FIFO order
+        self._kv_prefix_release(led, req)
         if from_prefilling:
             self.prefilling.insert(0, req)
         else:
@@ -802,22 +934,51 @@ class _TenantRT:
                 req = self.prefilling.pop(0)
             else:
                 req = self.waiting.popleft()
+            attach = None
+            if (self.prefix_enabled and req.prefix_key and led is not None
+                    and req.prefill_done == 0 and req.prefix_ref is None):
+                attach = self._kv_prefix_attach(led, req)
+                if attach == "hit":
+                    # resident prefix: slices start past the cached
+                    # tokens (the quantized piggyback grid prices the
+                    # suffix at its true kv_prior position)
+                    req.prefill_done = req.prefix_cached
+            shared_skip = (self.plan.prefix_len
+                           if req.prefix_ref is not None else 0)
             remaining = max(self.plan.prompt_len - req.prefill_done, 1)
             slice_ = min(max(slice_, min(PIGGYBACK_CHUNK_FLOOR, remaining)),
                          remaining)
             if led is not None:
                 per = self.plan.kv_token_bytes
                 floor_tok = min(PIGGYBACK_CHUNK_FLOOR, remaining)
-                if self.plan.kv_prompt_bytes > led.capacity - led.reserved:
-                    # the whole prompt can never fit (cumulative
-                    # check, like _kv_admit_prefill): reject
+                cum = self.plan.kv_prompt_bytes
+                if attach == "hit":
+                    cum = (self.plan.prompt_len - shared_skip) * per
+                if cum > led.capacity - led.reserved:
+                    # the request's unshared bytes can never fit
+                    # (cumulative check, like _kv_admit_prefill):
+                    # reject
                     led.release(req.rid)
+                    self._kv_prefix_release(led, req)
                     self.stats.kv_rejected += 1
                     continue
-                fit = int(led.available // per) if per > 0 else slice_
+                # tokens below the shared boundary are already paid in
+                # the shared entry: they cost the rid nothing, so the
+                # slice fit is free tokens + what the available bytes
+                # cover (identical to the pre-sharing rule when no
+                # reference is held)
+                free_tok = max(shared_skip - req.prefill_done, 0)
+                fit = (free_tok + int(led.available // per)
+                       if per > 0 else slice_)
                 if fit < floor_tok:
                     # no memory for even a floored slice: the prompt
-                    # waits for admission; decode cadence keeps running
+                    # waits for admission (dropping a just-taken
+                    # reference so it never pins the sole holder);
+                    # decode cadence keeps running
+                    if attach is not None:
+                        self._kv_prefix_release(led, req)
+                        if attach == "hit":
+                            req.prefill_done = 0
                     if from_prefilling:
                         self.prefilling.insert(0, req)
                     else:
@@ -827,7 +988,12 @@ class _TenantRT:
                         return True
                     return False
                 slice_ = min(slice_, fit)
-                self._kv_charge(led, req, slice_ * per)
+                lo = req.prefill_done
+                chargeable = max(lo + slice_ - max(lo, shared_skip), 0)
+                self._kv_charge(led, req, chargeable * per)
+                if attach == "hit":
+                    self.stats.kv_prefix_hits += 1
+                    self.stats.kv_shared_bytes += self._kv_prefix_bytes()
             final = req.prefill_done + slice_ >= self.plan.prompt_len
             q = PIGGYBACK_TOKEN_QUANT
             cost_tokens = -(-slice_ // q) * q
@@ -986,6 +1152,7 @@ class _TenantRT:
             led = self._kv_led()
             if led is not None:
                 led.release(req.rid)   # exact free of the request's KV
+                self._kv_prefix_release(led, req)
         self.stats.latencies.append(t - req.arrival)
         self.stats.completions.append(t)
         self.stats.requests_done += 1
@@ -1120,12 +1287,16 @@ class _TenantRT:
         if self.outstanding <= 0 and not self.ready_me and not self.ready_ve:
             self._advance(t)
 
-    def arrive(self, t: float, gen_len: Optional[int] = None) -> None:
+    def arrive(self, t: float, gen_len: Optional[int] = None,
+               prefix_key: int = 0) -> None:
         """Open-loop request arrival at time t; ``gen_len`` overrides
-        the plan's default generation length for this request."""
+        the plan's default generation length for this request.
+        ``prefix_key`` != 0 marks the request as sharing its prompt
+        prefix with every other request carrying the same key."""
         if self.removed:
             return
-        self.start_request(t, arrival=t, gen_len=gen_len)
+        self.start_request(t, arrival=t, gen_len=gen_len,
+                           prefix_key=prefix_key)
 
     # ---------------- cluster-fabric migration ----------------
     def clone_inbound(self, req: _Request) -> _Request:
@@ -1135,7 +1306,8 @@ class _TenantRT:
         preserved so end-to-end latency still spans the original
         arrival and the first decode token's TBT sample carries the
         fabric transfer gap."""
-        m = _Request(req.arrival, req.gen_len, rid=next(self._rid))
+        m = _Request(req.arrival, req.gen_len, rid=next(self._rid),
+                     prefix_key=req.prefix_key)
         m.tokens_done = req.tokens_done
         m.last_token_t = req.last_token_t
         m.ttft_seen = req.ttft_seen     # TTFT sampled on the prefill core
@@ -1226,6 +1398,9 @@ class Simulator:
         # is (request clone, optional landing callback)
         self._mig_payloads: Dict[int, Tuple["_Request",
                                             Optional[Callable]]] = {}
+        # prefix-keyed arrivals keyed by token: (gen_len, prefix_key)
+        # — plain arrivals keep riding the _ARRIVAL token slot
+        self._arr_payloads: Dict[int, Tuple[int, int]] = {}
         self._events = 0
         # lazy-deletion heap hygiene: count of stale entries (preempted
         # or cancelled tokens) still sitting in the heap; compacted
@@ -1384,11 +1559,17 @@ class Simulator:
                     e.owner = rt.idx
 
     def inject_request(self, idx: int, at: float,
-                       gen_len: Optional[int] = None) -> None:
+                       gen_len: Optional[int] = None,
+                       prefix_key: int = 0) -> None:
         """Open-loop arrival: tenant ``idx`` receives a request at
         cycle ``at`` (>= now). ``gen_len`` overrides the tenant plan's
         default generation length for this request (generation-length
-        distributions sample it per request at the serving layer)."""
+        distributions sample it per request at the serving layer).
+        ``prefix_key`` != 0 marks the request's prompt prefix as
+        shared with every other same-key request (refcounted in the
+        tenant's KV ledger); the tenant's plan must carry a prefix
+        builder. Key-less arrivals take the original event path
+        byte-for-byte."""
         rt = self.tenants[idx]
         if not rt.open_loop:
             raise ValueError(f"tenant {idx} is closed-loop")
@@ -1402,6 +1583,19 @@ class Simulator:
             raise ValueError(
                 f"tenant {idx} has no decode phases; gen_len={gen_len} "
                 f"would be silently truncated to 1 token")
+        if prefix_key:
+            if not rt.prefix_enabled:
+                raise ValueError(
+                    f"tenant {idx} has no shared-prefix support "
+                    f"(plan prefix_len=0 or KV accounting off); "
+                    f"prefix_key={prefix_key} would be silently ignored")
+            key = next(self._tok)
+            self._arr_payloads[key] = (
+                -1 if gen_len is None else int(gen_len), int(prefix_key))
+            heapq.heappush(self._heap,
+                           (max(at, self.now), next(self._seq), _ARRIVAL_K,
+                            idx, key))
+            return
         heapq.heappush(self._heap,
                        (max(at, self.now), next(self._seq), _ARRIVAL, idx,
                         -1 if gen_len is None else int(gen_len)))
@@ -1565,6 +1759,11 @@ class Simulator:
         if kind == _ARRIVAL:
             # the token slot carries the per-request gen_len (-1: default)
             self.tenants[eid].arrive(t, gen_len=None if token < 0 else token)
+            return True
+        if kind == _ARRIVAL_K:
+            g, pk = self._arr_payloads.pop(token)
+            self.tenants[eid].arrive(t, gen_len=None if g < 0 else g,
+                                     prefix_key=pk)
             return True
         if kind == _MIGRATE:
             req, on_land = self._mig_payloads.pop(token)

@@ -106,15 +106,35 @@ class KVLedger:
     the resident working set that is not per-request (weights); every
     other byte is owned by exactly one request id.
 
+    Beyond per-request entries the ledger carries two optional pools,
+    both empty (and cost-free) unless a control plane turns them on:
+
+    * SHARED entries — refcounted segments keyed by prefix hash
+      (cross-request KV prefix caching). The FIRST ``acquire_shared``
+      of a key charges its bytes all-or-nothing; later acquires only
+      bump the refcount; ``release_shared`` frees the bytes exactly
+      when the last holder lets go.
+    * BORROWED/LENT bytes — cross-tenant segment borrowing
+      (:meth:`VNPUManager.borrow_hbm`): ``lend`` parks idle bytes of
+      THIS ledger for a co-resident borrower (they stop being
+      allocatable here), ``grant`` extends the borrower's effective
+      capacity by the same amount. The manager keeps the loan table;
+      the ledger only carries the two counters.
+
     Invariants (proven by the property tests):
 
-    * ``reserved + in_use <= capacity`` at all times — an ``alloc``
-      that would exceed returns False and changes nothing;
+    * ``reserved + in_use + shared_in_use + lent <= capacity +
+      borrowed`` at all times — an ``alloc``/``acquire_shared``/
+      ``lend`` that would exceed returns False and changes nothing;
     * frees are exact: ``free(rid)`` returns precisely the bytes
       ``rid`` holds and removes the entry; freeing an unknown rid
       raises :class:`KVLedgerError` (no silent double-free);
-    * conservation: ``sum(entries) == in_use`` across any sequence of
-      alloc/grow/free/clear/migrate.
+    * refcounts never go negative: ``release_shared`` of an unknown
+      key raises; a key's entry disappears exactly when its refcount
+      reaches zero;
+    * conservation: ``sum(entries) == in_use`` and
+      ``sum(shared bytes) == shared_in_use`` across any sequence of
+      alloc/grow/free/acquire/release/clear/migrate.
 
     Units: every quantity is BYTES except ``used_segments`` /
     ``peak_segments`` (counts of ``segment_bytes``-sized isolation
@@ -129,6 +149,12 @@ class KVLedger:
         self.reserved = 0
         self.in_use = 0
         self.entries: Dict[int, int] = {}
+        # refcounted cross-request prefix segments: key -> [bytes, refs]
+        self.shared: Dict[int, List[int]] = {}
+        self.shared_in_use = 0
+        # cross-tenant segment borrowing (manager-mediated)
+        self.borrowed = 0      # extra capacity granted BY co-residents
+        self.lent = 0          # own bytes parked FOR co-residents
         self.peak_bytes = 0
         self.peak_segments = 0
         if reserved_bytes:
@@ -137,13 +163,23 @@ class KVLedger:
     # ------------------------------------------------------------------
     @property
     def available(self) -> int:
-        """Bytes still allocatable (capacity minus reserved + live)."""
-        return self.capacity - self.reserved - self.in_use
+        """Bytes still allocatable: effective capacity (own segments
+        plus borrowed ones) minus everything resident or lent away."""
+        return (self.capacity + self.borrowed - self.reserved
+                - self.in_use - self.shared_in_use - self.lent)
+
+    @property
+    def occupancy(self) -> int:
+        """Bytes a resize must keep: weights + per-request KV + shared
+        prefix segments + bytes lent to co-residents (lent segments
+        host ANOTHER tenant's live KV — they cannot be shrunk away
+        until the loan is reclaimed)."""
+        return self.reserved + self.in_use + self.shared_in_use + self.lent
 
     @property
     def used_segments(self) -> int:
         """HBM isolation segments the live occupancy covers."""
-        return -(-(self.reserved + self.in_use) // self.segment_bytes)
+        return -(-self.occupancy // self.segment_bytes)
 
     def fits(self, nbytes: float) -> bool:
         return nbytes <= self.available
@@ -153,9 +189,10 @@ class KVLedger:
         ``nbytes`` absolute; raises if it cannot fit next to the live
         allocations."""
         nbytes = int(nbytes)
-        if nbytes < 0 or nbytes + self.in_use > self.capacity:
+        live = self.in_use + self.shared_in_use + self.lent
+        if nbytes < 0 or nbytes + live > self.capacity + self.borrowed:
             raise KVLedgerError(
-                f"cannot reserve {nbytes} B: {self.in_use} B live KV in a "
+                f"cannot reserve {nbytes} B: {live} B live KV in a "
                 f"{self.capacity} B ledger")
         self.reserved = nbytes
         self._mark()
@@ -193,27 +230,142 @@ class KVLedger:
             return 0
         return self.free(rid)
 
+    # ------------------------------------------------------------------
+    # refcounted shared prefix entries
+    # ------------------------------------------------------------------
+    def acquire_shared(self, key: int, nbytes: float) -> bool:
+        """Attach one holder to the shared entry ``key``.
+
+        A resident key only bumps its refcount — a prefix HIT costs no
+        bytes. An absent key is FIRST-FILLED all-or-nothing: ``nbytes``
+        are charged (False — and nothing changes — when they don't
+        fit), then the entry starts at refcount 1. ``nbytes`` of later
+        acquires must match the resident size (the prefix hash keys
+        the exact token range, so a size mismatch is a caller bug)."""
+        n = int(nbytes)
+        if n <= 0:
+            raise KVLedgerError(
+                f"shared entry {key} needs positive bytes, got {n}")
+        ent = self.shared.get(key)
+        if ent is not None:
+            if ent[0] != n:
+                raise KVLedgerError(
+                    f"shared entry {key} holds {ent[0]} B; acquire asked "
+                    f"for {n} B (prefix-hash collision?)")
+            ent[1] += 1
+            return True
+        if n > self.available:
+            return False
+        self.shared[key] = [n, 1]
+        self.shared_in_use += n
+        self._mark()
+        return True
+
+    def release_shared(self, key: int) -> int:
+        """Drop one holder of ``key``. The last release frees the
+        entry's bytes exactly and returns them; earlier releases
+        return 0. Raises on an unknown key (refcount underflow)."""
+        ent = self.shared.get(key)
+        if ent is None:
+            raise KVLedgerError(
+                f"release of unknown/already-freed shared key {key}")
+        ent[1] -= 1
+        if ent[1] > 0:
+            return 0
+        n = ent[0]
+        del self.shared[key]
+        self.shared_in_use -= n
+        return n
+
+    def shared_refs(self, key: int) -> int:
+        """Holders of shared entry ``key`` (0 when absent)."""
+        ent = self.shared.get(key)
+        return 0 if ent is None else ent[1]
+
+    def shared_bytes_of(self, key: int) -> int:
+        ent = self.shared.get(key)
+        return 0 if ent is None else ent[0]
+
+    # ------------------------------------------------------------------
+    # cross-tenant borrowing (counters only; the VNPUManager owns the
+    # loan table and pairs every lend() with a grant() on the borrower)
+    # ------------------------------------------------------------------
+    def lend(self, nbytes: int) -> bool:
+        """Park ``nbytes`` of THIS ledger's idle capacity for a
+        co-resident borrower. All-or-nothing against ``available``."""
+        n = int(nbytes)
+        if n < 0:
+            raise KVLedgerError(f"negative lend ({n} B)")
+        if n > self.available:
+            return False
+        self.lent += n
+        self._mark()
+        return True
+
+    def reclaim_lent(self, nbytes: int) -> None:
+        """Take back ``nbytes`` previously lent (the borrower's grant
+        was revoked first — manager-ordered, so the segments are idle
+        again by the time they return)."""
+        n = int(nbytes)
+        if n < 0 or n > self.lent:
+            raise KVLedgerError(
+                f"reclaim of {n} B exceeds the {self.lent} B lent out")
+        self.lent -= n
+
+    def grant(self, nbytes: int) -> None:
+        """Extend effective capacity by ``nbytes`` borrowed from a
+        co-resident ledger (paired with that ledger's ``lend``)."""
+        n = int(nbytes)
+        if n < 0:
+            raise KVLedgerError(f"negative grant ({n} B)")
+        self.borrowed += n
+
+    def revoke(self, nbytes: int) -> int:
+        """Give back up to ``nbytes`` of borrowed capacity — only what
+        is IDLE (not holding live KV) can leave. Returns the bytes
+        actually revoked; the manager reclaims exactly that much on
+        the lender side."""
+        n = int(nbytes)
+        if n < 0:
+            raise KVLedgerError(f"negative revoke ({n} B)")
+        take = min(n, self.borrowed, max(self.available, 0))
+        self.borrowed -= take
+        return take
+
     def clear(self) -> int:
-        """Release every per-request allocation (tenant teardown);
-        ``reserved`` stays until the vNPU itself is destroyed."""
-        n = self.in_use
+        """Release every per-request allocation AND every shared
+        prefix entry (tenant teardown); ``reserved`` stays until the
+        vNPU itself is destroyed, and any loan counters stay until the
+        manager settles them."""
+        n = self.in_use + self.shared_in_use
         self.entries.clear()
         self.in_use = 0
+        self.shared.clear()
+        self.shared_in_use = 0
         return n
 
     def migrate_from(self, other: "KVLedger") -> None:
         """Adopt ``other``'s live state (vNPU reconfigure carries the
         ledger to the re-placed vNPU). Raises when the live occupancy
-        does not fit the new capacity — the caller must evict or
-        reject the resize first."""
-        need = other.reserved + other.in_use
-        if need > self.capacity:
+        — per-request KV, shared prefix segments, AND bytes lent to
+        co-residents — does not fit the new capacity: shrinking a
+        refcounted or lent segment out from under its holders would
+        corrupt state, so the caller must drain/reclaim or reject the
+        resize first. Borrowed capacity carries over (the manager
+        re-keys its loan table to the new vNPU)."""
+        need = (other.reserved + other.in_use + other.shared_in_use
+                + other.lent)
+        if need > self.capacity + other.borrowed:
             raise KVLedgerError(
                 f"live occupancy {need} B exceeds the resized capacity "
                 f"{self.capacity} B; evict or reject the resize")
         self.reserved = other.reserved
         self.in_use = other.in_use
         self.entries = dict(other.entries)
+        self.shared = {k: list(v) for k, v in other.shared.items()}
+        self.shared_in_use = other.shared_in_use
+        self.borrowed = other.borrowed
+        self.lent = other.lent
         self.peak_bytes = max(self.peak_bytes, other.peak_bytes)
         self.peak_segments = max(self.peak_segments, other.peak_segments)
         self._mark()
@@ -245,7 +397,7 @@ class KVLedger:
         return n
 
     def _mark(self) -> None:
-        used = self.reserved + self.in_use
+        used = self.occupancy
         if used > self.peak_bytes:
             self.peak_bytes = used
         segs = self.used_segments

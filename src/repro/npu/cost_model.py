@@ -346,7 +346,11 @@ class RequestPlan:
     ``swapin_builder`` makes the HBM re-read trace an evicted
     request's KV restore pays on resume (one
     :func:`memory_op` over the context's KV bytes, built per decode
-    bucket).
+    bucket). ``prefix_len`` marks the leading prompt tokens that may be
+    shared across requests (refcounted in the ledger); on a prefix hit
+    the simulator runs the suffix-only trace from ``prefix_builder``
+    (``cached_tokens -> WorkloadTrace``) and charges only the unshared
+    suffix bytes. With ``prefix_len == 0`` the path is inert.
 
     Units: trace costs are engine cycles / HBM bytes (see
     :class:`Operator`); ``prompt_len`` / ``gen_len`` / ``max_gen`` /
@@ -376,6 +380,13 @@ class RequestPlan:
                                  # token (real context, unbucketed)
     weight_bytes: float = 0.0    # resident parameter bytes (ledger reserve)
     swapin_builder: Optional[Callable[[int], WorkloadTrace]] = \
+        field(default=None, repr=False, compare=False)
+    # cross-request shared KV prefix: leading tokens that may already be
+    # resident in a refcounted shared ledger entry (0 = no sharing); the
+    # builder makes the suffix-only prefill trace for a given cached
+    # prefix length
+    prefix_len: int = 0
+    prefix_builder: Optional[Callable[[int], WorkloadTrace]] = \
         field(default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:

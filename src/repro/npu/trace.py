@@ -362,6 +362,33 @@ def kv_swapin_trace(
     return tr
 
 
+def kv_prefix_trace(
+    cfg: ModelConfig,
+    batch: int,
+    prompt_len: int,
+    cached_tokens: int,
+    core: NPUCoreConfig = DEFAULT_CORE,
+    include_head: bool = True,
+) -> WorkloadTrace:
+    """Prefix-aware prefill: the first ``cached_tokens`` of the prompt
+    are already resident in a SHARED KV entry (cross-request prefix
+    cache hit), so only the unshared suffix is ingested. The suffix
+    still attends causally over the cached prefix — identical cost
+    structure to a SARATHI chunk at prior context ``cached_tokens``
+    (causal-fraction attention + the per-chunk KV re-read streaming
+    the cached prefix), so a hit pays exactly what a chunked prefill
+    resuming at that position would, never less.
+
+    ``cached_tokens`` is clamped to ``prompt_len - 1``: even a fully
+    cached prompt runs a 1-token pass to emit the first token."""
+    cached = max(min(int(cached_tokens), prompt_len - 1), 0)
+    suffix = prompt_len - cached
+    tr = lm_trace(cfg, batch, suffix, "prefill", core,
+                  include_head=include_head, kv_prior=cached)
+    tr.name = f"{cfg.name}:prefix:b{batch}c{cached}+{suffix}"
+    return tr
+
+
 def piggyback_trace(
     cfg: ModelConfig,
     batch: int,
@@ -445,6 +472,7 @@ def request_plan(
     include_head: bool = True,
     prefill_chunk_tokens: int = 0,
     iteration_token_budget: int = 0,
+    prefix_len: int = 0,
 ) -> RequestPlan:
     """Phase-structured generation request: prefill over ``prompt_len``
     tokens (emits token 1) + decode steps against a growing KV cache.
@@ -474,6 +502,13 @@ def request_plan(
     also be raised from 0 live (``ServingSession.
     set_iteration_token_budget``); with the budget at 0 it is never
     invoked.
+
+    ``prefix_len`` > 0 declares the shared-prefix length (tokens) of
+    this tenant's prompts: requests tagged with a prefix key attach to
+    a refcounted shared KV entry of that many tokens, and a cache HIT
+    prefills only the unshared suffix via :func:`kv_prefix_trace` (the
+    ``prefix_builder`` attached here). 0 keeps the plan prefix-free —
+    bit-identical to the pre-sharing engine.
     """
     if iteration_token_budget and prefill_chunk_tokens:
         raise ValueError(
@@ -483,6 +518,12 @@ def request_plan(
         raise ValueError(
             f"iteration_token_budget must be >= 0 tokens, "
             f"got {iteration_token_budget}")
+    if prefix_len < 0:
+        raise ValueError(f"prefix_len must be >= 0 tokens, got {prefix_len}")
+    if prefix_len >= prompt_len > 0:
+        raise ValueError(
+            f"prefix_len={prefix_len} must leave at least one unshared "
+            f"suffix token of the {prompt_len}-token prompt")
     max_gen = max(max_gen, gen_len, 1)
     prefill = lm_trace(cfg, batch, prompt_len, "prefill", core,
                        include_head=include_head)
@@ -521,6 +562,10 @@ def request_plan(
     def _swapin(context: int) -> WorkloadTrace:
         return kv_swapin_trace(cfg, batch, context, core)
 
+    def _prefix(cached: int) -> WorkloadTrace:
+        return kv_prefix_trace(cfg, batch, prompt_len, cached, core,
+                               include_head=include_head)
+
     return RequestPlan(
         name=f"{cfg.name}:gen:b{batch}p{prompt_len}g{gen_len}",
         prefill=prefill, decode=decode, prompt_len=prompt_len,
@@ -532,6 +577,8 @@ def request_plan(
         kv_token_bytes=kv_tok,
         weight_bytes=float(cfg.param_count() * DTYPE),
         swapin_builder=_swapin if kv_tok > 0 else None,
+        prefix_len=int(prefix_len) if kv_tok > 0 else 0,
+        prefix_builder=_prefix if kv_tok > 0 else None,
     )
 
 

@@ -4,6 +4,7 @@ from repro.serve.session import (
     GenLenDistribution,
     NPUCluster,
     PoissonArrivals,
+    PrefixProfile,
     SLOAutoscaler,
     ServingSession,
     TenantHandle,
@@ -20,6 +21,7 @@ __all__ = [
     "NPUCluster",
     "ServingSession",
     "PoissonArrivals",
+    "PrefixProfile",
     "TraceArrivals",
     "SLOAutoscaler",
     "TenantHandle",

@@ -89,6 +89,48 @@ class GenLenDistribution:
         return np.clip(np.round(xs).astype(int), 1, self.max_len)
 
 
+@dataclass
+class PrefixProfile:
+    """Shared-prompt profile for a generative tenant (system prompts,
+    few-shot templates, RAG preambles): each injected request shares
+    its leading ``prefix_len`` prompt tokens with probability
+    ``share_ratio``, drawing one of ``n_prefixes`` hot prefix groups;
+    the rest of the prompt is always unique. Same-key requests
+    refcount ONE resident copy of the prefix KV in the tenant's ledger
+    — a hit admits charging only the unshared suffix and prefills only
+    the suffix positions.
+
+    Sampling is deterministic per (seed, stream) like
+    :class:`GenLenDistribution`, and monotone in ``share_ratio`` at a
+    fixed seed: raising the ratio only ADDS shared arrivals (the
+    uniform draw is compared against the ratio), so benchmark sweeps
+    see hit sets grow, never reshuffle."""
+
+    prefix_len: int
+    share_ratio: float = 0.5
+    n_prefixes: int = 1
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.prefix_len <= 0:
+            raise ValueError(
+                f"prefix_len must be > 0 tokens, got {self.prefix_len}")
+        if not 0.0 <= self.share_ratio <= 1.0:
+            raise ValueError(
+                f"share_ratio must be in [0, 1], got {self.share_ratio}")
+        if self.n_prefixes < 1:
+            raise ValueError(
+                f"n_prefixes must be >= 1, got {self.n_prefixes}")
+
+    def sample(self, n: int, stream: int = 0) -> np.ndarray:
+        """Per-request prefix-group keys: 0 = unique prompt, k >= 1 =
+        member of hot prefix group k."""
+        rng = np.random.default_rng([self.seed, stream])
+        u = rng.random(n)
+        g = rng.integers(1, self.n_prefixes + 1, size=n)
+        return np.where(u < self.share_ratio, g, 0).astype(int)
+
+
 # ----------------------------------------------------------------------
 @dataclass
 class TenantHandle:
@@ -130,6 +172,14 @@ class TenantHandle:
     # Resizes keep honoring it — a KV-pressure-constrained allocation
     # must not silently re-inflate to the estimate on the first resize.
     hbm_bytes: Optional[int] = None
+    # cross-request shared KV prefix: per-request prefix-group keys
+    # sampled from this profile alongside gen_lens (None = no sharing)
+    prefix_profile: Optional[PrefixProfile] = None
+    # cross-tenant HBM borrowing: under pressure this tenant may
+    # borrow idle segments from co-resident ledgers (whole-segment
+    # grants through VNPUManager.borrow_hbm, reclaimed when the owner
+    # itself hits pressure). False keeps every charge path identical.
+    kv_borrow: bool = False
 
     @property
     def generative(self) -> bool:
@@ -181,6 +231,12 @@ class TenantReport:
     cross_core_hops: int = 0     # cumulative fabric hops those moves took
     kv_migration_rejects: int = 0  # hand-offs refused on destination
                                  # pressure (decoded locally instead)
+    # ---- cross-request shared KV prefix (zero with sharing off) ----
+    kv_prefix_hits: int = 0      # admissions that found the prefix resident
+    kv_shared_bytes: float = 0.0  # prefix bytes those hits did not re-charge
+    # ---- cross-tenant HBM borrowing (zero with borrowing off) ----
+    kv_borrowed_bytes: float = 0.0  # bytes granted from idle peer segments
+    kv_reclaimed_bytes: float = 0.0  # lent bytes pulled back under pressure
 
 
 # ----------------------------------------------------------------------
@@ -282,7 +338,9 @@ class NPUCluster:
                  slo_tbt_ms: Optional[float] = None,
                  kv_policy: Optional[str] = None,
                  hbm_bytes: Optional[int] = None,
-                 core_hint: Optional[int] = None) -> TenantHandle:
+                 core_hint: Optional[int] = None,
+                 prefix_profile: Optional[PrefixProfile] = None,
+                 kv_borrow: bool = False) -> TenantHandle:
         """Pay-as-you-go entry point: the tenant buys `eu_budget` EUs;
         the allocator picks the ME/VE split from the compile-time
         profile (§III-B). Generative tenants pass ``plan`` (the trace
@@ -298,12 +356,41 @@ class NPUCluster:
 
         ``core_hint`` pins placement (and every later resize) to one
         core index — the fabric control plane's topology-aware
-        choice."""
+        choice.
+
+        ``prefix_profile`` (requires ``kv_policy`` and a plan built
+        with a matching ``prefix_len``) samples per-request shared-
+        prefix keys: same-key requests refcount one resident copy of
+        the prefix KV and admit charging only the unshared suffix.
+        ``kv_borrow`` lets the tenant borrow idle HBM segments from
+        co-resident ledgers under pressure (reclaimed whole when the
+        owner needs them back)."""
         if kv_policy and (plan is None or plan.kv_token_bytes <= 0):
             raise ValueError(
                 f"kv_policy={kv_policy!r} needs a generative plan with "
                 f"per-token KV bytes (attention-family request_plan); "
                 f"tenant {name!r} has none")
+        if prefix_profile is not None:
+            if not kv_policy:
+                raise ValueError(
+                    f"tenant {name!r}: prefix_profile needs live KV "
+                    f"accounting (set kv_policy='evict' or 'reject') — "
+                    f"prefix sharing is a ledger feature")
+            if plan is None or plan.prefix_len <= 0 \
+                    or plan.prefix_builder is None:
+                raise ValueError(
+                    f"tenant {name!r}: prefix_profile needs a plan built "
+                    f"with prefix_len > 0 (request_plan(prefix_len=...) "
+                    f"or register_generative(prefix_profile=...))")
+            if plan.prefix_len != prefix_profile.prefix_len:
+                raise ValueError(
+                    f"tenant {name!r}: profile prefix_len="
+                    f"{prefix_profile.prefix_len} does not match the "
+                    f"plan's prefix_len={plan.prefix_len}")
+        if kv_borrow and not kv_policy:
+            raise ValueError(
+                f"tenant {name!r}: kv_borrow needs live KV accounting "
+                f"(set kv_policy='evict' or 'reject')")
         alloc = allocate_for_trace(trace, eu_budget, self.core)
         sram, hbm = estimate_memory(trace, alloc.n_me, self.core)
         if hbm_bytes is not None:
@@ -341,7 +428,9 @@ class NPUCluster:
                          kv_policy=kv_policy or "",
                          hbm_bytes=(int(hbm_bytes)
                                     if hbm_bytes is not None else None),
-                         core_hint=core_hint)
+                         core_hint=core_hint,
+                         prefix_profile=prefix_profile,
+                         kv_borrow=bool(kv_borrow))
         self.tenants.append(h)
         return h
 
@@ -351,7 +440,8 @@ class NPUCluster:
         gen_lens: Union[int, GenLenDistribution] = 64,
         batch: int = 1, eu_budget: int = 4,
         bucket: int = 512, prefill_chunk_tokens: int = 0,
-        iteration_token_budget: int = 0, **kw,
+        iteration_token_budget: int = 0,
+        prefix_profile: Optional[PrefixProfile] = None, **kw,
     ) -> TenantHandle:
         """Register an LLM serving tenant with a phase-structured
         request lifecycle: prefill over ``prompt_len`` tokens, then a
@@ -385,6 +475,13 @@ class NPUCluster:
         PREMA-style victim is swapped out (resumed via an HBM
         re-read) or aborted back to admission.
 
+        ``prefix_profile`` (requires a ``kv_policy``) turns on
+        cross-request shared-prefix KV: the plan grows a suffix-only
+        prefill path over the profile's ``prefix_len`` leading tokens,
+        and arrivals sample prefix-group keys — same-key requests
+        refcount one resident copy of the prefix KV, so a hit admits
+        charging (and prefilling) only the unshared suffix.
+
         Units: ``prompt_len`` / ``gen_lens`` / ``bucket`` /
         ``prefill_chunk_tokens`` / ``iteration_token_budget`` are
         token counts; ``eu_budget`` is execution units (ME+VE
@@ -400,9 +497,13 @@ class NPUCluster:
         plan = request_plan(cfg, batch, prompt_len, gen_len,
                             core=self.core, max_gen=max_gen, bucket=bucket,
                             prefill_chunk_tokens=prefill_chunk_tokens,
-                            iteration_token_budget=iteration_token_budget)
+                            iteration_token_budget=iteration_token_budget,
+                            prefix_len=(prefix_profile.prefix_len
+                                        if prefix_profile is not None
+                                        else 0))
         return self.register(name, plan.profile_trace(), eu_budget,
-                             plan=plan, gen_lens=dist, **kw)
+                             plan=plan, gen_lens=dist,
+                             prefix_profile=prefix_profile, **kw)
 
     def _constrained_register(self, trace, alloc, eu_budget, priority,
                               name, hbm_override: Optional[int] = None,
@@ -508,14 +609,21 @@ class NPUCluster:
 
     def _kv_floor(self, handle: TenantHandle) -> int:
         """Bytes a resize of ``handle`` must keep: the live ledger
-        occupancy (reserved weights + in-flight KV), segment-rounded.
-        0 for tenants without KV accounting."""
+        occupancy (reserved weights + in-flight KV + refcounted shared
+        prefix segments + bytes lent to co-residents), segment-
+        rounded. 0 for tenants without KV accounting.
+
+        Using ``KVLedger.occupancy`` (not ``reserved + in_use``) is
+        load-bearing: a shrink computed from per-request KV alone
+        would strand live shared-prefix entries — and segments a
+        borrower's KV currently lives in — outside the new
+        allocation."""
         v = handle.vnpu
         if not handle.kv_policy or v is None or v.kv_ledger is None:
             return 0
         led = v.kv_ledger
         seg = self.core.hbm_segment
-        return -(-(led.reserved + led.in_use) // seg) * seg
+        return -(-led.occupancy // seg) * seg
 
     def _constrained_resize(self, handle: TenantHandle, eu_budget: int,
                             alloc: Allocation,
@@ -668,6 +776,10 @@ def _tenant_report(h: TenantHandle, st, ms: float,
         kv_migrated_bytes=st.kv_migrated_bytes,
         cross_core_hops=st.cross_core_hops,
         kv_migration_rejects=st.kv_migration_rejects,
+        kv_prefix_hits=st.kv_prefix_hits,
+        kv_shared_bytes=st.kv_shared_bytes,
+        kv_borrowed_bytes=st.kv_borrowed_bytes,
+        kv_reclaimed_bytes=st.kv_reclaimed_bytes,
     )
 
 
@@ -815,7 +927,42 @@ class ServingSession:
         sim = self.sims[handle.core_idx]
         handle.sim_idx = sim.add_tenant(spec, open_loop=True)
         handle.attached_at = sim.now
+        if handle.kv_policy:
+            # pressure relief: a failed ledger charge first reclaims
+            # segments this tenant lent out, then (kv_borrow only)
+            # borrows idle peer segments. With no loans and borrowing
+            # off the hook frees nothing, so the retry never fires and
+            # every charge path stays bit-identical.
+            sim.tenants[handle.sim_idx].kv_pressure_hook = \
+                self._make_kv_relief(handle)
         self._autoscale_cursor[(handle.core_idx, handle.sim_idx)] = 0
+
+    def _make_kv_relief(self, handle: TenantHandle):
+        """The cross-tenant HBM relief callback for one KV-accounted
+        tenant (installed as its runtime's ``kv_pressure_hook``).
+        Reclaim-before-borrow ordering: lent segments come home BEFORE
+        the owner's own admission blocks, and only then does the
+        tenant reach into co-resident ledgers for idle segments."""
+        man = self.cluster.manager
+
+        def relief(need: float) -> float:
+            if handle.vnpu is None or handle.sim_idx < 0:
+                return 0.0
+            want = int(math.ceil(max(need, 0.0)))
+            if want <= 0:
+                return 0.0
+            st = self._rt(handle).stats
+            freed = man.reclaim_hbm(handle.vnpu, want)
+            if freed:
+                st.kv_reclaimed_bytes += freed
+            if freed < want and handle.kv_borrow:
+                got = man.borrow_hbm(handle.vnpu, want - freed)
+                if got:
+                    st.kv_borrowed_bytes += got
+                freed += got
+            return float(freed)
+
+        return relief
 
     def _sim_of(self, handle: TenantHandle) -> Simulator:
         return self.sims[handle.core_idx]
@@ -952,22 +1099,46 @@ class ServingSession:
             nbytes = (src_led.bytes_of(req.rid) if src_led is not None
                       else src_rt.plan.kv_prompt_bytes)
             dst_led = dst_rt._kv_led()
+            # a request holding a shared-prefix reference carries only
+            # its suffix in the rid; the prefix rides the refcounted
+            # entry. On the destination: a resident same-key entry is
+            # a HIT (only the suffix moves and charges), a first-fill
+            # charges the prefix into the dst shared entry, and with
+            # no room to share the full context lands in the rid.
+            shared = req.prefix_ref is not None and src_led is not None
+            pbytes = src_rt._kv_prefix_bytes() if shared else 0.0
+            attach = None
             if dst_led is not None:
-                if not dst_rt._kv_charge(dst_led, mreq, nbytes):
+                if shared and dst_rt.prefix_enabled:
+                    attach = dst_rt._kv_prefix_attach(dst_led, mreq)
+                rid_bytes = nbytes if attach is not None \
+                    else nbytes + pbytes
+                if not dst_rt._kv_charge(dst_led, mreq, rid_bytes):
+                    # all-or-nothing: undo the attach so a rejected
+                    # hand-off leaves BOTH ledgers untouched
+                    if attach is not None:
+                        dst_rt._kv_prefix_release(dst_led, mreq)
                     src_rt.stats.kv_migration_rejects += 1
                     return False
+                if attach == "hit":
+                    dst_rt.stats.kv_prefix_hits += 1
+                    dst_rt.stats.kv_shared_bytes += pbytes
             if src_led is not None:
                 src_led.release(req.rid)   # free AFTER the dst charge
+                src_rt._kv_prefix_release(src_led, req)
+            # wire payload: the suffix, plus the prefix unless the
+            # destination already holds it (a hit moves nothing extra)
+            wire = nbytes + (0.0 if attach == "hit" else pbytes)
             st = src_rt.stats
             st.kv_migrations += 1
-            st.kv_migrated_bytes += nbytes
+            st.kv_migrated_bytes += wire
             st.cross_core_hops += hops
             ft.in_transit += 1
 
             def land(_t: float) -> None:
                 ft.in_transit -= 1
 
-            delay = topo.transfer_cycles(cp, cd, nbytes)
+            delay = topo.transfer_cycles(cp, cd, wire)
             dst_sim.inject_migration(hd.sim_idx, t + delay, mreq,
                                      on_land=land)
             # the injection may have pulled the destination core's
@@ -1057,21 +1228,39 @@ class ServingSession:
                       n: int) -> List[Optional[int]]:
         """Per-request generation lengths: sampled from the handle's
         distribution on a deterministic stream, or the plan default."""
+        lens, _ = self._sample_requests(handle, n)
+        return lens
+
+    def _sample_requests(
+            self, handle: TenantHandle, n: int,
+    ) -> Tuple[List[Optional[int]], List[int]]:
+        """Sample generation lengths AND shared-prefix keys for ``n``
+        requests on the same deterministic stream slot, then advance
+        the handle's cursor once — lengths and keys of request *i*
+        always travel together regardless of which was sampled."""
         if handle.gen_lens is None:
             lens: List[Optional[int]] = [None] * n
         else:
             lens = [int(x) for x in
                     handle.gen_lens.sample(n, stream=handle.submitted)]
+        if handle.prefix_profile is None:
+            keys = [0] * n
+        else:
+            keys = [int(k) for k in handle.prefix_profile.sample(
+                n, stream=handle.submitted)]
         handle.submitted += 1
-        return lens
+        return lens, keys
 
     def submit(self, handle: Union[TenantHandle, FabricTenant],
                at_s: Optional[float] = None,
-               gen_len: Optional[int] = None) -> None:
+               gen_len: Optional[int] = None,
+               prefix_key: Optional[int] = None) -> None:
         """Admit one request for ``handle`` at ``at_s`` seconds
         (default: now). ``gen_len`` pins this request's token count;
         otherwise the handle's distribution (or plan default) rules.
-        Fabric tenants admit at their prefill pool."""
+        ``prefix_key`` pins the shared-prefix group (0 = private);
+        otherwise the handle's prefix profile samples it. Fabric
+        tenants admit at their prefill pool."""
         handle = self._ingress(handle)
         self._rt(handle)
         sim = self._sim_of(handle)
@@ -1080,9 +1269,15 @@ class ServingSession:
             raise ValueError(
                 f"arrival at t={at_s}s is in the past "
                 f"(session time {self.now_s:.6f}s)")
-        if gen_len is None:
-            gen_len = self._gen_lens_for(handle, 1)[0]
-        sim.inject_request(handle.sim_idx, at, gen_len=gen_len)
+        if gen_len is None or (prefix_key is None
+                               and handle.prefix_profile is not None):
+            lens, keys = self._sample_requests(handle, 1)
+            if gen_len is None:
+                gen_len = lens[0]
+            if prefix_key is None:
+                prefix_key = keys[0]
+        sim.inject_request(handle.sim_idx, at, gen_len=gen_len,
+                           prefix_key=int(prefix_key or 0))
 
     def submit_arrivals(self, handle: Union[TenantHandle, FabricTenant],
                         arrivals: "ArrivalProcess") -> int:
@@ -1092,10 +1287,10 @@ class ServingSession:
         self._rt(handle)
         sim = self._sim_of(handle)
         times = arrivals.times_s()
-        lens = self._gen_lens_for(handle, len(times))
-        for t_s, g in zip(times, lens):
+        lens, keys = self._sample_requests(handle, len(times))
+        for t_s, g, k in zip(times, lens, keys):
             sim.inject_request(handle.sim_idx, self._cycles(float(t_s)),
-                               gen_len=g)
+                               gen_len=g, prefix_key=k or 0)
         return len(times)
 
     # ---------------- driving ----------------

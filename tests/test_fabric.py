@@ -134,14 +134,20 @@ def test_migrate_entry_reject_leaves_both_untouched():
 
 _MIG_OPS = st.lists(
     st.tuples(
-        st.sampled_from(["alloc", "free", "migrate"]),
+        st.sampled_from(["alloc", "free", "migrate", "acq", "rel"]),
         st.integers(min_value=0, max_value=2),   # src ledger
         st.integers(min_value=0, max_value=2),   # dst ledger (migrate)
-        st.integers(min_value=0, max_value=5),   # request id
+        st.integers(min_value=0, max_value=5),   # request id / prefix key
         st.integers(min_value=0, max_value=3 * SEG),  # bytes (alloc)
     ),
     max_size=60,
 )
+
+# a prefix key's byte size is a pure function of the key (the hash
+# names the exact token range), so every acquire of the same key asks
+# for the same bytes — mismatches are a separate KVLedgerError test
+def _key_bytes(key: int) -> int:
+    return (key + 1) * SEG // 2
 
 
 @given(ops=_MIG_OPS,
@@ -149,15 +155,17 @@ _MIG_OPS = st.lists(
                      min_size=3, max_size=3))
 @settings(max_examples=150, deadline=None)
 def test_cross_ledger_migration_conserves_segments(ops, caps):
-    """Any interleaving of alloc / free / cross-ledger migrate against
-    three ledgers: per-ledger bookkeeping matches a mirror model, a
-    reject changes nothing, and the cluster-wide total is conserved
+    """Any interleaving of alloc / free / cross-ledger migrate /
+    shared-prefix acquire / release against three ledgers: per-ledger
+    bookkeeping (private AND refcounted pools) matches a mirror model,
+    a reject changes nothing, and the cluster-wide total is conserved
     across every successful migration (no leak, no double-count)."""
     pytest.importorskip("hypothesis")
     leds = [KVLedger(c * SEG, SEG) for c in caps]
     mirrors = [dict() for _ in leds]
+    shmirrors = [dict() for _ in leds]       # key -> [bytes, refs]
     for op, i, j, rid, n in ops:
-        src, msrc = leds[i], mirrors[i]
+        src, msrc, mshr = leds[i], mirrors[i], shmirrors[i]
         dst, mdst = leds[j], mirrors[j]
         if op == "alloc":
             if src.alloc(rid, n):
@@ -168,29 +176,57 @@ def test_cross_ledger_migration_conserves_segments(ops, caps):
             else:
                 with pytest.raises(KVLedgerError):
                     src.free(rid)
+        elif op == "acq":                    # shared-prefix arm
+            pb = _key_bytes(rid)
+            ok = src.acquire_shared(rid, pb)
+            if rid in mshr:
+                assert ok                    # resident: refcount bump
+                mshr[rid][1] += 1
+            elif ok:
+                mshr[rid] = [pb, 1]          # all-or-nothing first fill
+            else:                            # no room: nothing changed
+                assert pb > src.available
+        elif op == "rel":
+            if rid in mshr:
+                mshr[rid][1] -= 1
+                freed = src.release_shared(rid)
+                if mshr[rid][1] == 0:
+                    assert freed == mshr.pop(rid)[0]
+                else:
+                    assert freed == 0        # not the last holder
+            else:
+                with pytest.raises(KVLedgerError):
+                    src.release_shared(rid)  # refcount underflow
         else:  # migrate
             if rid not in msrc:
                 with pytest.raises(KVLedgerError):
                     src.migrate_entry_to(dst, rid)
                 continue
-            before = sum(led.in_use for led in leds)
+            before = sum(led.in_use + led.shared_in_use for led in leds)
             held = msrc[rid]
             moved = src.migrate_entry_to(dst, rid)
             if i == j:                       # same ledger: no-op
                 assert moved == held
             elif moved == -1:                # destination pressure
-                assert held > dst.capacity - dst.reserved - dst.in_use
+                assert held > (dst.capacity - dst.reserved - dst.in_use
+                               - dst.shared_in_use)
                 assert src.bytes_of(rid) == held
             else:
                 assert moved == held
                 mdst[rid] = mdst.get(rid, 0) + held
                 del msrc[rid]
             # conservation: a migration moves bytes, never mints them
-            assert sum(led.in_use for led in leds) == before
-        for led, mir in zip(leds, mirrors):
-            assert led.reserved + led.in_use <= led.capacity
+            assert (sum(led.in_use + led.shared_in_use for led in leds)
+                    == before)
+        for led, mir, shm in zip(leds, mirrors, shmirrors):
+            assert (led.reserved + led.in_use
+                    + led.shared_in_use <= led.capacity)
             assert led.in_use == sum(mir.values())
             assert led.entries == mir
+            assert led.shared == shm
+            assert led.shared_in_use == sum(b for b, _ in shm.values())
+            # refcounts never go negative (present => >= 1)
+            assert all(refs >= 1 for _, refs in shm.values())
 
 
 # ----------------------------------------------------------------------
