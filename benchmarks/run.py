@@ -33,6 +33,7 @@ from benchmarks import (
     fig_chunked_prefill,
     fig_colocation,
     fig_fabric,
+    fig_fault,
     fig_kv_pressure,
     fig_prefix_cache,
     table3_harvest_overhead,
@@ -49,6 +50,7 @@ SUITES = {
     "fig_colocation": fig_colocation,
     "fig_chunked_prefill": fig_chunked_prefill,
     "fig_fabric": fig_fabric,
+    "fig_fault": fig_fault,
     "fig_kv_pressure": fig_kv_pressure,
     "fig_prefix_cache": fig_prefix_cache,
 }

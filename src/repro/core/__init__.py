@@ -13,12 +13,14 @@ from repro.core.allocator import (
     optimal_ratio,
     place_phase_pair,
 )
+from repro.core.allocator import pick_evacuation_core
 from repro.core.fabric import (
     FabricLink,
     FabricTopology,
     Placement,
     random_phase_pair,
 )
+from repro.core.faults import FaultEvent, FaultSchedule
 from repro.core.compiler import (
     CompiledPhase,
     CompiledRequestPlan,
@@ -54,7 +56,10 @@ __all__ = [
     "normalized_exec_time",
     "optimal_ratio",
     "place_phase_pair",
+    "pick_evacuation_core",
     "FabricLink",
+    "FaultEvent",
+    "FaultSchedule",
     "FabricTopology",
     "Placement",
     "random_phase_pair",

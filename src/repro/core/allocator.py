@@ -150,6 +150,35 @@ def place_phase_pair(topology: "FabricTopology",
     return best
 
 
+def pick_evacuation_core(topology: "FabricTopology", src: int,
+                         healthy: Sequence[int],
+                         loads: Optional[Sequence[float]] = None,
+                         kv_bytes: float = 0.0) -> Optional[int]:
+    """Failover companion to :func:`place_phase_pair`: pick the core a
+    whole vNPU evacuates to after ``src`` faults.
+
+    Minimizes, in order: the priced bulk-transfer cost of the vNPU's
+    live occupancy (``topology.transfer_cycles(src, dst, kv_bytes)``
+    — an unreachable destination still qualifies, but only after every
+    reachable one, since the state must then be rebuilt rather than
+    copied), then the destination load, then the core id. ``src``
+    itself and non-``healthy`` cores are never candidates. Returns
+    ``None`` when no healthy destination exists (the caller falls
+    back to suspend/restart)."""
+    best_key: Optional[Tuple] = None
+    best: Optional[int] = None
+    for dst in healthy:
+        if dst == src:
+            continue
+        cost = topology.transfer_cycles(src, dst, kv_bytes)
+        load = loads[dst] if loads is not None else 0.0
+        key = (0 if math.isfinite(cost) else 1,
+               cost if math.isfinite(cost) else 0.0, load, dst)
+        if best_key is None or key < best_key:
+            best_key, best = key, dst
+    return best
+
+
 def estimate_memory(trace: WorkloadTrace, n_me: int,
                     core: NPUCoreConfig = DEFAULT_CORE) -> Tuple[int, int]:
     """§III-B memory allocation: HBM from the compiler's footprint

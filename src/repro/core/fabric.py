@@ -93,6 +93,9 @@ class FabricTopology:
         for nbrs in self._adj:
             nbrs.sort()
         self._paths: Dict[int, Dict[int, Tuple[int, ...]]] = {}
+        # pristine link set, kept so fault injection can restore a
+        # degraded/failed link to its exact base parameters
+        self._base_links: Dict[Tuple[int, int], FabricLink] = dict(self.links)
 
     # ---------------- builders ----------------
     @classmethod
@@ -139,6 +142,49 @@ class FabricTopology:
         links = {(a, b): link
                  for a in range(n) for b in range(a + 1, n)}
         return cls(n, links, kind="fully_connected")
+
+    # ---------------- fault injection ----------------
+    def _rebuild_adj(self) -> None:
+        self._adj = [[] for _ in range(self.n_cores)]
+        for a, b in self.links:
+            self._adj[a].append(b)
+            self._adj[b].append(a)
+        for nbrs in self._adj:
+            nbrs.sort()
+        self._paths.clear()
+
+    def _base_key(self, a: int, b: int) -> Tuple[int, int]:
+        key = (min(a, b), max(a, b))
+        if key not in self._base_links:
+            raise ValueError(f"no link ({a}, {b}) in this topology")
+        return key
+
+    def degrade_link(self, a: int, b: int, bw_scale: float) -> None:
+        """Scale link (a, b)'s bandwidth to ``bw_scale`` x its BASE
+        bandwidth. ``bw_scale == 0`` is a full outage: the link drops
+        out of the graph and routes re-plan around it (a pair left
+        with no path prices transfers at ``inf`` — migration hooks
+        reject and decode locally). Idempotent per absolute scale."""
+        key = self._base_key(a, b)
+        base = self._base_links[key]
+        if bw_scale < 0:
+            raise ValueError(f"bw_scale must be >= 0, got {bw_scale}")
+        if bw_scale == 0:
+            self.links.pop(key, None)
+        else:
+            self.links[key] = FabricLink(bandwidth=base.bandwidth * bw_scale,
+                                         latency=base.latency)
+        self._rebuild_adj()
+
+    def fail_link(self, a: int, b: int) -> None:
+        """Full link outage — shorthand for ``degrade_link(a, b, 0)``."""
+        self.degrade_link(a, b, 0.0)
+
+    def restore_link(self, a: int, b: int) -> None:
+        """Return link (a, b) to its pristine base parameters."""
+        key = self._base_key(a, b)
+        self.links[key] = self._base_links[key]
+        self._rebuild_adj()
 
     # ---------------- queries ----------------
     def neighbors(self, core: int) -> Tuple[int, ...]:

@@ -46,6 +46,10 @@ class CoreState:
     # temporal mode: cumulative oversubscribed demand
     demand_me: int = 0
     demand_ve: int = 0
+    # fault state: a failed core accepts no placements until restored;
+    # faulted HBM segments are permanently out of every free list
+    failed: bool = False
+    faulted_hbm_segs: List[int] = field(default_factory=list)
 
     def __post_init__(self):
         c = self.core
@@ -68,6 +72,8 @@ class CoreState:
         return (total - len(self.free_hbm_segs)) / max(total, 1)
 
     def fits_spatial(self, cfg: VNPUConfig) -> bool:
+        if self.failed:
+            return False
         c = self.core
         n_sram = -(-max(cfg.sram_bytes, c.sram_segment) // c.sram_segment)
         n_hbm = -(-max(cfg.hbm_bytes, c.hbm_segment) // c.hbm_segment)
@@ -223,7 +229,14 @@ class VNPUManager:
                 raise ValueError(
                     f"core_hint {core_hint} out of range for "
                     f"{len(self.cores)} cores")
+            if self.cores[core_hint].failed:
+                raise RuntimeError(
+                    f"core {core_hint} has failed; place elsewhere")
             pool = [self.cores[core_hint]]
+        elif any(cs.failed for cs in pool):
+            pool = [cs for cs in pool if not cs.failed]
+            if not pool:
+                raise RuntimeError("every core in the pool has failed")
         if v.mapping == "spatial":
             # greedy §III-C: among cores that fit, pick the one where
             # adding this vNPU best balances EU-frac vs mem-frac.
@@ -261,6 +274,85 @@ class VNPUManager:
         cs.residents.append(v.vnpu_id)
         v.pnpu_id, v.core_id = cs.pnpu_id, cs.core_id
         v.state = VNPUState.MAPPED
+
+    # ------------------------------------------------------------------
+    # fault injection
+    # ------------------------------------------------------------------
+    def fail_core(self, idx: int) -> List[int]:
+        """Mark core ``idx`` failed: no new placements land on it
+        until :meth:`restore_core`. Residents stay mapped (the control
+        plane evacuates or suspends them). Returns the resident vNPU
+        ids at fault time."""
+        cs = self.cores[idx]
+        cs.failed = True
+        return list(cs.residents)
+
+    def restore_core(self, idx: int) -> None:
+        """A transient core fault healed: accept placements again."""
+        self.cores[idx].failed = False
+
+    def healthy_cores(self) -> List[int]:
+        """Indices of cores currently accepting placements."""
+        return [i for i, cs in enumerate(self.cores) if not cs.failed]
+
+    def fault_hbm_segments(self, v: VNPU, n: int = 1) -> int:
+        """``n`` of vNPU ``v``'s HBM isolation segments fault away
+        (a bad HBM row inside its allocation). All-or-nothing: the
+        ledger capacity shrinks FIRST — raising
+        :class:`~repro.core.vnpu.KVLedgerError` untouched when the
+        live occupancy would no longer fit, so the caller evicts down
+        (or escalates to evacuation) and retries — and only then do
+        the physical segments leave the vNPU, parked on the core's
+        ``faulted_hbm_segs`` list (never returned to a free list).
+        Returns the bytes removed."""
+        if v.segments is None or v.kv_ledger is None:
+            raise ValueError(f"vNPU {v.name!r} is not mapped")
+        cs = self._core_of(v)
+        if cs is None:
+            raise ValueError(f"vNPU {v.name!r} is not resident on any core")
+        n = min(n, len(v.segments.hbm_segments))
+        if n <= 0:
+            return 0
+        seg = v.kv_ledger.segment_bytes
+        v.kv_ledger.shrink_capacity(n * seg)   # raises before any mutation
+        hbm = v.segments.hbm_segments
+        lost, kept = hbm[-n:], hbm[:-n]
+        cs.faulted_hbm_segs.extend(lost)
+        cs.faulted_hbm_segs.sort()
+        v.segments = MemorySegments(
+            v.segments.sram_segments, kept,
+            v.segments.sram_segment_size, v.segments.hbm_segment_size)
+        return n * seg
+
+    def fault_free_hbm_segments(self, idx: int, n: int = 1) -> int:
+        """``n`` HBM segments fault out of core ``idx``'s FREE pool —
+        a bad row outside any allocation, or the segments a vNPU
+        vacated when its HBM fault escalated to whole-vNPU failover.
+        Clamped to the free list; returns the segments faulted."""
+        cs = self.cores[idx]
+        n = min(n, len(cs.free_hbm_segs))
+        if n <= 0:
+            return 0
+        lost = cs.free_hbm_segs[-n:]
+        del cs.free_hbm_segs[-n:]
+        cs.faulted_hbm_segs.extend(lost)
+        cs.faulted_hbm_segs.sort()
+        return n
+
+    def hbm_census(self) -> List[Tuple[int, int, int, int]]:
+        """Per-core ``(free, resident, faulted, total)`` HBM segment
+        counts — conservation holds iff ``free + resident + faulted ==
+        total`` on every core at all times."""
+        out = []
+        for cs in self.cores:
+            total = cs.core.hbm_bytes // cs.core.hbm_segment
+            resident = sum(
+                len(self.vnpus[i].segments.hbm_segments)
+                for i in cs.residents
+                if self.vnpus[i].segments is not None)
+            out.append((len(cs.free_hbm_segs), resident,
+                        len(cs.faulted_hbm_segs), total))
+        return out
 
     # ------------------------------------------------------------------
     def collocated(self, v: VNPU) -> List[VNPU]:
@@ -330,6 +422,37 @@ class VNPUManager:
                 del self._loans[key]
             got += back
         return got
+
+    def return_borrowed(self, v: VNPU) -> int:
+        """Give back every byte ``v`` borrowed from co-residents (a
+        loan cannot follow a vNPU off its core, so evacuation unwinds
+        the borrower side first). Only IDLE borrowed capacity can
+        leave — the caller evicts ``v``'s KV down to its own segments
+        before calling; live KV still riding borrowed capacity raises,
+        loans untouched past the ones already returned. Returns the
+        bytes returned."""
+        led = v.kv_ledger
+        got = 0
+        for key in sorted(k for k in self._loans if k[1] == v.vnpu_id):
+            n = self._loans[key]
+            back = 0 if led is None else led.revoke(n)
+            if back < n:
+                if led is not None:
+                    led.grant(back)     # undo the partial revoke
+                raise KVLedgerError(
+                    f"vNPU {v.name!r} still holds live KV on {n - back} B "
+                    f"of borrowed capacity; evict before evacuating")
+            lender = self.vnpus.get(key[0])
+            if lender is not None and lender.kv_ledger is not None:
+                lender.kv_ledger.reclaim_lent(back)
+            del self._loans[key]
+            got += back
+        return got
+
+    def borrowers_of(self, v: VNPU) -> List[int]:
+        """vnpu_ids currently borrowing capacity from ``v`` (sorted;
+        failover force-drains them before evacuating the lender)."""
+        return sorted(b for (l, b) in self._loans if l == v.vnpu_id)
 
     def loans_of(self, v: VNPU) -> Tuple[int, int]:
         """(bytes lent out, bytes borrowed) per the loan table."""

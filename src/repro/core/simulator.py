@@ -92,6 +92,12 @@ _ARRIVAL_K = "arrk"  # arrival carrying a shared-prefix key (payload
                   # side-table, like _MIGRATE — the plain _ARRIVAL
                   # path stays byte-identical when sharing is unused)
 _MIGRATE = "mig"  # heap event kind for cross-core decode hand-offs
+_ARRIVAL_R = "arrr"  # retried arrival (deadline/fault re-admission):
+                  # payload side-table carries (gen_len, prefix_key,
+                  # retries, original arrival) — plain arrivals never
+                  # touch this path
+_WAKE = "wake"    # kick an idle tenant's iteration picker (evacuation
+                  # landing on the destination core)
 _MIXED = object()  # sentinel: cohort engines span several owners
                   # landing after their fabric transfer delay
 
@@ -203,7 +209,8 @@ class _Request:
 
     __slots__ = ("arrival", "gen_len", "tokens_done", "last_token_t",
                  "chunks_done", "prefill_done", "rid", "ttft_seen",
-                 "kv_swapped", "prefix_key", "prefix_ref", "prefix_cached")
+                 "kv_swapped", "prefix_key", "prefix_ref", "prefix_cached",
+                 "deadline", "retries")
 
     def __init__(self, arrival: float, gen_len: int = 1, rid: int = 0,
                  prefix_key: int = 0):
@@ -223,6 +230,9 @@ class _Request:
                                      # entry (None while not admitted)
         self.prefix_cached = 0       # prefix tokens skipped on a hit
                                      # (0 on first-fill: full prefill)
+        self.deadline = math.inf     # absolute admission deadline for
+                                     # THIS attempt (inf = none)
+        self.retries = 0             # re-admissions this request took
 
 
 @dataclass
@@ -302,6 +312,27 @@ class TenantStats:
     reclaim_blocked: float = 0.0     # Table III: stall due to being
                                      # harvested (reclaim ctx windows)
     preemptions: int = 0
+    # ---- fault injection / failover (all zero with faults off) ----
+    faults_survived: int = 0         # injected faults this tenant rode
+                                     # out without losing completed work
+    evacuations: int = 0             # whole-vNPU migrations to another
+                                     # core after a core fault
+    evacuated_bytes: float = 0.0     # live KV bytes those evacuations
+                                     # carried over the fabric
+    hbm_fault_segments: int = 0      # HBM isolation segments lost to
+                                     # segment faults (vNPU shrunk)
+    deadline_misses: int = 0         # requests that timed out in the
+                                     # admission queue
+    retries: int = 0                 # re-admissions scheduled (deadline
+                                     # misses + fault aborts with retry
+                                     # budget left) — distinct from
+                                     # kv_restarts
+    retry_successes: int = 0         # retried requests that completed
+    retries_exhausted: int = 0       # requests dropped after their
+                                     # last retry also failed
+    downtime_cycles: float = 0.0     # cycles this tenant spent frozen
+                                     # by faults (evacuation transfers,
+                                     # suspend-until-recovery gaps)
 
     def p95(self) -> float:
         """p95 of end-to-end request latency, in cycles."""
@@ -461,6 +492,21 @@ class _TenantRT:
                                               float], bool]] = None
         self._rid = itertools.count()      # per-request ledger keys
         self._t = 0.0                      # time of the current pick
+        # deadline/retry admission (inert at the 0 defaults: no sweep
+        # runs, no deadline is stamped — bit-identical to the
+        # pre-fault engine)
+        self.deadline_cycles = 0.0         # per-attempt admission
+                                           # deadline (0 = none)
+        self.max_retries = 0               # re-admission budget
+        # serving-layer callback that schedules the re-admission of a
+        # timed-out / fault-aborted request (backoff + re-injection);
+        # None drops the request after counting the miss
+        self.retry_hook: Optional[Callable[[_Request, float],
+                                           None]] = None
+        # failover: an evacuated tenant stays parked until its bulk
+        # state transfer lands (the session's inject_wake un-parks it);
+        # 0.0 never freezes — bit-identical to the pre-fault engine
+        self.frozen_until = 0.0
         self.ready_me: List[Chunk] = []
         self.ready_ve: List[Chunk] = []
         # incremental scheduling: the simulator swaps in its shared
@@ -493,8 +539,11 @@ class _TenantRT:
 
     def _new_request(self, arrival: float, gen_len: int,
                      prefix_key: int = 0) -> _Request:
-        return _Request(arrival, gen_len, rid=next(self._rid),
-                        prefix_key=prefix_key)
+        req = _Request(arrival, gen_len, rid=next(self._rid),
+                       prefix_key=prefix_key)
+        if self.deadline_cycles > 0:
+            req.deadline = arrival + self.deadline_cycles
+        return req
 
     def start_request(self, t: float, arrival: Optional[float] = None,
                       gen_len: Optional[int] = None,
@@ -521,6 +570,10 @@ class _TenantRT:
         ledger-aware variants (:meth:`_pick_phase_kv`, or the gated
         checks inside :meth:`_pick_budgeted`)."""
         self._t = t
+        if t < self.frozen_until:
+            return   # evacuation transfer in flight: stay parked
+        if self.deadline_cycles > 0 and self.waiting:
+            self._sweep_deadlines(t)
         budgeted = (self.plan.iteration_token_budget > 0
                     and self.plan.can_piggyback)
         if budgeted:
@@ -535,6 +588,109 @@ class _TenantRT:
         self.cursor = -1
         self.loop_remaining = {}
         self._advance(t)
+
+    def _sweep_deadlines(self, t: float) -> None:
+        """Drop admission-queue requests whose per-attempt deadline
+        lapsed (deadline/retry admission — only requests still WAITING
+        time out; work in flight always runs to completion). Each miss
+        either re-enters admission through the serving layer's retry
+        hook (bounded budget, exponential backoff) or is dropped."""
+        expired = [r for r in self.waiting if r.deadline <= t]
+        if not expired:
+            return
+        led = self._kv_led()
+        st = self.stats
+        for req in expired:
+            self.waiting.remove(req)
+            if led is not None:
+                # waiting requests hold no KV by invariant; lenient
+                # release keeps that true even across future churn
+                led.release(req.rid)
+                self._kv_prefix_release(led, req)
+            st.deadline_misses += 1
+            self.retry_or_drop(req, t)
+
+    def retry_or_drop(self, req: _Request, t: float) -> None:
+        """Route a timed-out or fault-aborted request back to
+        admission when retry budget remains (the serving layer's hook
+        schedules the backoff + re-injection); count the exhaustion
+        otherwise. With no hook installed the request just drops."""
+        hook = self.retry_hook
+        if hook is None:
+            return
+        if req.retries < self.max_retries:
+            hook(req, t)
+        else:
+            self.stats.retries_exhausted += 1
+
+    def arrive_retry(self, t: float, gen_len: Optional[int] = None,
+                     prefix_key: int = 0, retries: int = 1,
+                     orig_arrival: float = 0.0,
+                     ttft_seen: bool = False) -> None:
+        """A re-admission lands after its backoff: end-to-end latency
+        still spans the ORIGINAL arrival, the per-attempt deadline
+        restarts from now, and a first token already emitted by a
+        fault-aborted attempt is never re-sampled into TTFT."""
+        if self.removed:
+            return
+        req = self._new_request(orig_arrival,
+                                self.plan.gen_len if gen_len is None
+                                else gen_len,
+                                prefix_key=prefix_key)
+        req.retries = retries
+        req.ttft_seen = ttft_seen
+        if self.deadline_cycles > 0:
+            req.deadline = t + self.deadline_cycles
+        if retries > 0:
+            # retries == 0 is a re-sequenced arrival (a pending arrival
+            # replayed after a suspend gap keeps its original timestamp
+            # this way) — not a re-admission, so it doesn't count
+            self.stats.retries += 1
+        self.waiting.append(req)
+        if not self.in_request:
+            self._start_iteration(t)
+
+    def abort_iteration(self, t: float) -> List[_Request]:
+        """Cancel the in-flight iteration (core fault): every served
+        request lands back in a queue with its ledger charges
+        consistent. Decode riders keep their KV and stay in
+        ``decoding`` — only the step's un-emitted token is lost; a
+        swap-in resumer returns to the FRONT of ``swapped`` with its
+        bytes released again; a prefill / prefix / piggyback owner
+        loses the attempt's charges, resets its cursors, and parks at
+        the front of ``waiting``. Returns the requests whose attempt
+        was lost (fault-abort retry candidates)."""
+        if not self.in_request:
+            return []
+        led = self._kv_led()
+        lost: List[_Request] = []
+        kind = self.active_kind
+        if kind == DECODE:
+            pass
+        elif kind == SWAPIN:
+            req = self.active[0]
+            if led is not None:
+                req.kv_swapped = led.release(req.rid)
+            self.swapped.insert(0, req)
+        else:
+            req = self.piggy_req if kind == PIGGYBACK else self.active[0]
+            if led is not None:
+                led.release(req.rid)
+                self._kv_prefix_release(led, req)
+            req.tokens_done = 0
+            req.prefill_done = 0
+            req.chunks_done = 0
+            self.waiting.appendleft(req)
+            lost.append(req)
+        self.piggy_req = None
+        self.piggy_slice = 0
+        self.active = []
+        self.active_kind = ""
+        self.in_request = False
+        self.outstanding = 0
+        self.ready_me.clear()
+        self.ready_ve.clear()
+        return lost
 
     def _pick_phase(self) -> bool:
         """PR-3 iteration selection (budget unset) — bit-identical to
@@ -584,6 +740,13 @@ class _TenantRT:
         if nbytes <= 0:
             return True
         if not led.alloc(req.rid, nbytes):
+            # retired (zero-holder, retained) prefix entries are the
+            # cheapest victims: no live request loses state
+            if led.retired:
+                led.evict_retired(nbytes - led.available, now=self._t)
+            if led.alloc(req.rid, nbytes):
+                self._kv_mark_peaks(led)
+                return True
             hook = self.kv_pressure_hook
             if hook is None or hook(nbytes - led.available) <= 0:
                 return False
@@ -618,17 +781,22 @@ class _TenantRT:
         caller's job (counted once, on the attempt that admits)."""
         key = req.prefix_key
         pbytes = self._kv_prefix_bytes()
-        if led.shared_refs(key) > 0:
+        if led.shared_refs(key) > 0 or key in led.retired:
+            # resident OR retained with zero holders: both are hits —
+            # the retained entry's bytes never left
             led.acquire_shared(key, pbytes)
             req.prefix_ref = key
             req.prefix_cached = self.plan.prefix_len
             return "hit"
         if not led.acquire_shared(key, pbytes):
-            hook = self.kv_pressure_hook
-            if hook is None or hook(pbytes - led.available) <= 0:
-                return None
+            if led.retired:
+                led.evict_retired(pbytes - led.available, now=self._t)
             if not led.acquire_shared(key, pbytes):
-                return None
+                hook = self.kv_pressure_hook
+                if hook is None or hook(pbytes - led.available) <= 0:
+                    return None
+                if not led.acquire_shared(key, pbytes):
+                    return None
         req.prefix_ref = key
         req.prefix_cached = 0
         self._kv_mark_peaks(led)
@@ -640,7 +808,7 @@ class _TenantRT:
         release)."""
         if req.prefix_ref is None or led is None:
             return 0.0
-        freed = led.release_shared(req.prefix_ref)
+        freed = led.release_shared(req.prefix_ref, now=self._t)
         req.prefix_ref = None
         req.prefix_cached = 0
         return freed
@@ -662,11 +830,16 @@ class _TenantRT:
         :func:`repro.core.policies.pick_eviction_victim`); under
         ``"evict"`` its KV swaps out (HBM re-read on resume), under
         ``"reject"`` it aborts back to admission and restarts from
-        token 0. Returns False when no candidate exists."""
+        token 0. Retired (zero-holder, retained) prefix entries go
+        FIRST — freeing one costs no live request its state. Returns
+        False when no candidate exists."""
+        led = self._kv_led()
+        if led is not None and led.retired \
+                and led.evict_retired(1, now=t) > 0:
+            return True
         cands = [r for r in self.decoding if r is not exclude]
         if not cands:
             return False
-        led = self._kv_led()
         refs_of = None
         if self.prefix_enabled:
             # shared-prefix holders whose entry other live requests
@@ -746,7 +919,11 @@ class _TenantRT:
         headroom = (len(self.decoding) + 1) * self.plan.kv_token_bytes
         headroom = min(headroom, max(led.capacity - led.reserved - need, 0))
         if not led.fits(need + headroom):
-            return False
+            if not led.retired:
+                return False
+            led.evict_retired(need + headroom - led.available, now=t)
+            if not led.fits(need + headroom):
+                return False
         self.swapped.pop(0)
         self._kv_charge(led, req, need)
         req.kv_swapped = 0
@@ -970,6 +1147,13 @@ class _TenantRT:
                 free_tok = max(shared_skip - req.prefill_done, 0)
                 fit = (free_tok + int(led.available // per)
                        if per > 0 else slice_)
+                if fit < floor_tok and led.retired:
+                    # retained zero-holder entries give way before a
+                    # prompt parks
+                    led.evict_retired(
+                        (floor_tok - free_tok) * per - led.available, now=t)
+                    fit = (free_tok + int(led.available // per)
+                           if per > 0 else slice_)
                 if fit < floor_tok:
                     # no memory for even a floored slice: the prompt
                     # waits for admission (dropping a just-taken
@@ -1153,6 +1337,8 @@ class _TenantRT:
             if led is not None:
                 led.release(req.rid)   # exact free of the request's KV
                 self._kv_prefix_release(led, req)
+        if req.retries > 0:
+            self.stats.retry_successes += 1
         self.stats.latencies.append(t - req.arrival)
         self.stats.completions.append(t)
         self.stats.requests_done += 1
@@ -1401,6 +1587,10 @@ class Simulator:
         # prefix-keyed arrivals keyed by token: (gen_len, prefix_key)
         # — plain arrivals keep riding the _ARRIVAL token slot
         self._arr_payloads: Dict[int, Tuple[int, int]] = {}
+        # retried arrivals keyed by token: (gen_len, prefix_key,
+        # retries, original arrival, ttft_seen)
+        self._retry_payloads: Dict[int, Tuple[int, int, int, float,
+                                              bool]] = {}
         self._events = 0
         # lazy-deletion heap hygiene: count of stale entries (preempted
         # or cancelled tokens) still sitting in the heap; compacted
@@ -1622,6 +1812,119 @@ class Simulator:
                        (max(at, self.now), next(self._seq), _MIGRATE, idx,
                         key))
 
+    def inject_retry(self, idx: int, at: float,
+                     gen_len: Optional[int] = None, prefix_key: int = 0,
+                     retries: int = 1, orig_arrival: float = 0.0,
+                     ttft_seen: bool = False) -> None:
+        """Deadline/fault re-admission: tenant ``idx`` re-receives a
+        request at cycle ``at`` (arrival + backoff). The request lands
+        carrying its retry count and ORIGINAL arrival timestamp so
+        end-to-end latency spans every attempt."""
+        rt = self.tenants[idx]
+        if rt.removed:
+            raise ValueError(f"tenant {idx} was deregistered")
+        if at < self.now - EPS:
+            raise ValueError(
+                f"retry at {at} is in the past (now={self.now})")
+        key = next(self._tok)
+        self._retry_payloads[key] = (
+            -1 if gen_len is None else int(gen_len), int(prefix_key),
+            int(retries), float(orig_arrival), bool(ttft_seen))
+        heapq.heappush(self._heap,
+                       (max(at, self.now), next(self._seq), _ARRIVAL_R,
+                        idx, key))
+
+    def inject_wake(self, idx: int, at: float) -> None:
+        """Kick tenant ``idx``'s iteration picker at cycle ``at`` (an
+        evacuated vNPU resumes once its bulk transfer lands). No-op if
+        an iteration is already in flight when the event fires."""
+        heapq.heappush(self._heap,
+                       (max(at, self.now), next(self._seq), _WAKE, idx, 0))
+
+    def abort_tenant(self, idx: int, t: float) -> List["_Request"]:
+        """Fault-abort tenant ``idx``'s in-flight iteration: cancel its
+        chunks on the engines (pending completion events go stale, like
+        :meth:`remove_tenant`) and restitute every served request to a
+        queue with its ledger charges consistent
+        (:meth:`_TenantRT.abort_iteration`). The tenant stays attached.
+        Returns the requests whose attempt was lost."""
+        rt = self.tenants[idx]
+        cancelled: set = set()
+        for e in self.mes + self.ves:
+            if not e.free and e.chunk is not None and e.tenant == idx:
+                cancelled.add(e.token)
+                self._unsquat(e, idx)
+                e.token = -1
+                e.chunk = None
+                e.tenant = -1
+                e.harvested = False
+        if cancelled:
+            self._stale += len(cancelled)
+            self._maybe_compact()
+            if self._inc:
+                # cancelled engines freed: co-tenants may harvest them
+                self._rebuild_free_index()
+                self._dirty.add(-1)
+        lost = rt.abort_iteration(t)
+        self._schedule(self.now)
+        return lost
+
+    def extract_tenant_events(self, idx: int
+                              ) -> List[Tuple[float, str, object]]:
+        """Remove every pending arrival / retry / migration / wake
+        event addressed to tenant ``idx`` from the heap (failover: the
+        events follow the tenant to the simulator it evacuates to).
+        Returns ``[(t, kind, payload)]`` sorted by time — the payload
+        is the kind's side-table tuple (the ``gen_len`` token slot for
+        plain arrivals; wakes are dropped, the re-attach re-kicks)."""
+        fault_kinds = (_ARRIVAL, _ARRIVAL_K, _ARRIVAL_R, _MIGRATE, _WAKE)
+        keep, out = [], []
+        for ev in self._heap:
+            t, _, kind, eid, token = ev
+            if kind not in fault_kinds or eid != idx:
+                keep.append(ev)
+                continue
+            if kind == _ARRIVAL:
+                out.append((t, _ARRIVAL, token))
+            elif kind == _ARRIVAL_K:
+                out.append((t, _ARRIVAL_K, self._arr_payloads.pop(token)))
+            elif kind == _ARRIVAL_R:
+                out.append((t, _ARRIVAL_R, self._retry_payloads.pop(token)))
+            elif kind == _MIGRATE:
+                out.append((t, _MIGRATE, self._mig_payloads.pop(token)))
+        if len(keep) != len(self._heap):
+            self._heap = keep
+            heapq.heapify(self._heap)
+        out.sort(key=lambda e: e[0])
+        return out
+
+    def replay_tenant_events(self, idx: int,
+                             events: Sequence[Tuple[float, str, object]]
+                             ) -> None:
+        """Re-inject events extracted by :meth:`extract_tenant_events`
+        onto tenant ``idx`` of THIS simulator (the failover
+        destination). Times earlier than ``now`` clamp forward."""
+        for t, kind, payload in events:
+            at = max(t, self.now)
+            if kind == _ARRIVAL:
+                g = payload
+                self.inject_request(idx, at,
+                                    gen_len=None if g < 0 else g)
+            elif kind == _ARRIVAL_K:
+                g, pk = payload
+                self.inject_request(idx, at,
+                                    gen_len=None if g < 0 else g,
+                                    prefix_key=pk)
+            elif kind == _ARRIVAL_R:
+                g, pk, n, orig, seen = payload
+                self.inject_retry(idx, at,
+                                  gen_len=None if g < 0 else g,
+                                  prefix_key=pk, retries=n,
+                                  orig_arrival=orig, ttft_seen=seen)
+            elif kind == _MIGRATE:
+                req, on_land = payload
+                self.inject_migration(idx, at, req, on_land=on_land)
+
     @property
     def next_event_at(self) -> float:
         """Cycle time of the earliest pending event (inf when idle) —
@@ -1764,6 +2067,17 @@ class Simulator:
             g, pk = self._arr_payloads.pop(token)
             self.tenants[eid].arrive(t, gen_len=None if g < 0 else g,
                                      prefix_key=pk)
+            return True
+        if kind == _ARRIVAL_R:
+            g, pk, n, orig, seen = self._retry_payloads.pop(token)
+            self.tenants[eid].arrive_retry(
+                t, gen_len=None if g < 0 else g, prefix_key=pk,
+                retries=n, orig_arrival=orig, ttft_seen=seen)
+            return True
+        if kind == _WAKE:
+            rt = self.tenants[eid]
+            if not rt.removed and not rt.in_request:
+                rt._start_iteration(t)
             return True
         if kind == _MIGRATE:
             req, on_land = self._mig_payloads.pop(token)

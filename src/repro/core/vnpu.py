@@ -152,6 +152,14 @@ class KVLedger:
         # refcounted cross-request prefix segments: key -> [bytes, refs]
         self.shared: Dict[int, List[int]] = {}
         self.shared_in_use = 0
+        # LRU retention: a shared entry whose last holder left is
+        # parked here (key -> [bytes, expires_at]) for up to
+        # ``retention_window`` cycles before its bytes free; retired
+        # entries are evicted FIRST under pressure. Window 0 (the
+        # default) disables retention entirely — last release frees
+        # immediately, exactly the pre-retention behaviour.
+        self.retention_window = 0.0
+        self.retired: Dict[int, List[float]] = {}
         # cross-tenant segment borrowing (manager-mediated)
         self.borrowed = 0      # extra capacity granted BY co-residents
         self.lent = 0          # own bytes parked FOR co-residents
@@ -254,6 +262,17 @@ class KVLedger:
                     f"for {n} B (prefix-hash collision?)")
             ent[1] += 1
             return True
+        parked = self.retired.get(key)
+        if parked is not None:
+            # retention HIT: the bytes never left — revive the entry
+            # at refcount 1 with zero fill cost.
+            if parked[0] != n:
+                raise KVLedgerError(
+                    f"retired entry {key} holds {int(parked[0])} B; acquire "
+                    f"asked for {n} B (prefix-hash collision?)")
+            del self.retired[key]
+            self.shared[key] = [n, 1]
+            return True
         if n > self.available:
             return False
         self.shared[key] = [n, 1]
@@ -261,10 +280,17 @@ class KVLedger:
         self._mark()
         return True
 
-    def release_shared(self, key: int) -> int:
+    def release_shared(self, key: int, now: Optional[float] = None) -> int:
         """Drop one holder of ``key``. The last release frees the
         entry's bytes exactly and returns them; earlier releases
-        return 0. Raises on an unknown key (refcount underflow)."""
+        return 0. Raises on an unknown key (refcount underflow).
+
+        With a positive ``retention_window`` and a ``now`` timestamp,
+        the last release instead PARKS the entry in the retired table
+        until ``now + retention_window`` — its bytes stay charged (a
+        re-``acquire_shared`` before expiry revives it for free) and
+        the release returns 0; the bytes free later via
+        :meth:`expire_retired` / :meth:`evict_retired`."""
         ent = self.shared.get(key)
         if ent is None:
             raise KVLedgerError(
@@ -274,6 +300,9 @@ class KVLedger:
             return 0
         n = ent[0]
         del self.shared[key]
+        if self.retention_window > 0 and now is not None:
+            self.retired[key] = [n, now + self.retention_window]
+            return 0
         self.shared_in_use -= n
         return n
 
@@ -285,6 +314,48 @@ class KVLedger:
     def shared_bytes_of(self, key: int) -> int:
         ent = self.shared.get(key)
         return 0 if ent is None else ent[0]
+
+    @property
+    def retired_bytes(self) -> int:
+        """Bytes held by retired (zero-holder, retained) entries."""
+        return sum(int(v[0]) for v in self.retired.values())
+
+    def expire_retired(self, now: float) -> int:
+        """Free every retired entry whose retention window has lapsed
+        (``expires_at <= now``); returns the bytes freed."""
+        freed = 0
+        for key in [k for k, v in self.retired.items() if v[1] <= now]:
+            n = int(self.retired.pop(key)[0])
+            self.shared_in_use -= n
+            freed += n
+        return freed
+
+    def evict_retired(self, nbytes: float, now: Optional[float] = None) -> int:
+        """Free retired entries under pressure — expired ones first,
+        then oldest-expiry-first — until at least ``nbytes`` are freed
+        or the table is empty. Returns the bytes freed. Retired
+        entries are strictly cheaper victims than live KV (no holder
+        loses state), so callers try this before PREMA eviction."""
+        freed = 0
+        if now is not None:
+            freed = self.expire_retired(now)
+        if freed >= nbytes:
+            return freed
+        for key in sorted(self.retired, key=lambda k: (self.retired[k][1], k)):
+            if freed >= nbytes:
+                break
+            n = int(self.retired.pop(key)[0])
+            self.shared_in_use -= n
+            freed += n
+        return freed
+
+    def flush_retired(self) -> int:
+        """Free ALL retired entries regardless of expiry (drain /
+        teardown); returns the bytes freed."""
+        n = self.retired_bytes
+        self.retired.clear()
+        self.shared_in_use -= n
+        return n
 
     # ------------------------------------------------------------------
     # cross-tenant borrowing (counters only; the VNPUManager owns the
@@ -341,6 +412,7 @@ class KVLedger:
         self.entries.clear()
         self.in_use = 0
         self.shared.clear()
+        self.retired.clear()
         self.shared_in_use = 0
         return n
 
@@ -364,6 +436,8 @@ class KVLedger:
         self.entries = dict(other.entries)
         self.shared = {k: list(v) for k, v in other.shared.items()}
         self.shared_in_use = other.shared_in_use
+        self.retention_window = other.retention_window
+        self.retired = {k: list(v) for k, v in other.retired.items()}
         self.borrowed = other.borrowed
         self.lent = other.lent
         self.peak_bytes = max(self.peak_bytes, other.peak_bytes)
@@ -391,10 +465,32 @@ class KVLedger:
             return n                   # same ledger: nothing to move
         if dst_rid is None:
             dst_rid = rid
+        if dst_rid in dst.entries:
+            # a silent alloc here would MERGE into the resident
+            # entry's bytes and the later free would release both
+            # requests' KV at once — refuse before touching anything.
+            raise KVLedgerError(
+                f"migrate target rid {dst_rid} already live in the "
+                f"destination ledger; both ledgers untouched")
         if not dst.alloc(dst_rid, n):
             return -1                  # reject: both ledgers untouched
         self.free(rid)
         return n
+
+    def shrink_capacity(self, nbytes: int) -> None:
+        """Permanently remove ``nbytes`` of capacity (an HBM segment
+        fault). Raises when the live occupancy would no longer fit —
+        the caller must evict/flush down to the new size first, or
+        escalate to evacuation."""
+        n = int(nbytes)
+        if n < 0 or n > self.capacity:
+            raise KVLedgerError(
+                f"cannot shrink {self.capacity} B ledger by {n} B")
+        if self.occupancy > self.capacity - n + self.borrowed:
+            raise KVLedgerError(
+                f"occupancy {self.occupancy} B exceeds the faulted "
+                f"capacity {self.capacity - n} B; evict first")
+        self.capacity -= n
 
     def _mark(self) -> None:
         used = self.occupancy

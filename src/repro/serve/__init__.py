@@ -1,6 +1,8 @@
 from repro.serve.engine import ServeEngine
 from repro.serve.session import (
     FabricTenant,
+    FaultEvent,
+    FaultSchedule,
     GenLenDistribution,
     NPUCluster,
     PoissonArrivals,
@@ -17,6 +19,8 @@ from repro.serve.vserve import MultiTenantServer, Tenant
 __all__ = [
     "ServeEngine",
     "FabricTenant",
+    "FaultEvent",
+    "FaultSchedule",
     "GenLenDistribution",
     "NPUCluster",
     "ServingSession",

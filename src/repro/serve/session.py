@@ -38,8 +38,10 @@ Example::
 from __future__ import annotations
 
 import heapq
+import itertools
 import math
-from dataclasses import dataclass, fields as _dc_fields
+from collections import deque
+from dataclasses import dataclass, field, fields as _dc_fields
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -47,15 +49,16 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.allocator import (Allocation, allocate_for_trace,
                                   estimate_memory, eu_utilization,
-                                  place_phase_pair)
+                                  pick_evacuation_core, place_phase_pair)
 from repro.core.compiler import CompiledRequestPlan, ProgramCache
 from repro.core.fabric import FabricTopology, Placement, random_phase_pair
+from repro.core.faults import FaultEvent, FaultSchedule
 from repro.core.mapper import ReconfigureError, VNPUManager
 from repro.core.policies import PolicyLike, resolve_policy
 from repro.core.simulator import (SimResult, Simulator, TenantSpec,
                                   TenantStats)
 from repro.core.stats import percentile
-from repro.core.vnpu import VNPU, VNPUConfig
+from repro.core.vnpu import KVLedgerError, VNPU, VNPUConfig
 from repro.npu.cost_model import RequestPlan, WorkloadTrace
 from repro.npu.hw_config import DEFAULT_CORE, NPUCoreConfig
 from repro.npu.trace import lm_trace, request_plan
@@ -180,6 +183,19 @@ class TenantHandle:
     # grants through VNPUManager.borrow_hbm, reclaimed when the owner
     # itself hits pressure). False keeps every charge path identical.
     kv_borrow: bool = False
+    # ---- deadline/retry admission (all off at the defaults) ----
+    # per-attempt admission deadline: a request still WAITING this
+    # many ms after (re-)admission times out and re-enters admission
+    # (bounded by max_retries, exponential backoff from
+    # retry_backoff_ms). Fault-aborted requests take the same path.
+    deadline_ms: Optional[float] = None
+    max_retries: int = 0
+    retry_backoff_ms: float = 0.0
+    # LRU retention window for shared prefix entries: a prefix whose
+    # last holder released it stays resident this many ms (revived at
+    # zero cost by the next same-key arrival; evicted FIRST under
+    # pressure). 0 frees at refcount zero — bit-identical off state.
+    kv_retention_ms: float = 0.0
 
     @property
     def generative(self) -> bool:
@@ -237,6 +253,19 @@ class TenantReport:
     # ---- cross-tenant HBM borrowing (zero with borrowing off) ----
     kv_borrowed_bytes: float = 0.0  # bytes granted from idle peer segments
     kv_reclaimed_bytes: float = 0.0  # lent bytes pulled back under pressure
+    # ---- fault injection / failover (all zero with faults off) ----
+    faults_survived: int = 0     # injected faults ridden out in place
+    evacuations: int = 0         # whole-vNPU migrations off a failed core
+    evacuated_bytes: float = 0.0  # live KV bytes those evacuations moved
+    hbm_fault_segments: int = 0  # HBM segments lost to segment faults
+    deadline_misses: int = 0     # admission-queue timeouts
+    retries: int = 0             # re-admissions scheduled (distinct
+                                 # from kv_restarts)
+    retry_successes: int = 0     # retried requests that completed
+    retries_exhausted: int = 0   # dropped after the last retry failed
+    downtime_ms: float = 0.0     # time frozen by faults (transfers,
+                                 # suspend-until-recovery gaps)
+    availability: float = 1.0    # 1 - downtime / attached lifetime
 
 
 # ----------------------------------------------------------------------
@@ -340,7 +369,11 @@ class NPUCluster:
                  hbm_bytes: Optional[int] = None,
                  core_hint: Optional[int] = None,
                  prefix_profile: Optional[PrefixProfile] = None,
-                 kv_borrow: bool = False) -> TenantHandle:
+                 kv_borrow: bool = False,
+                 deadline_ms: Optional[float] = None,
+                 max_retries: int = 0,
+                 retry_backoff_ms: float = 0.0,
+                 kv_retention_ms: float = 0.0) -> TenantHandle:
         """Pay-as-you-go entry point: the tenant buys `eu_budget` EUs;
         the allocator picks the ME/VE split from the compile-time
         profile (§III-B). Generative tenants pass ``plan`` (the trace
@@ -364,7 +397,18 @@ class NPUCluster:
         the prefix KV and admit charging only the unshared suffix.
         ``kv_borrow`` lets the tenant borrow idle HBM segments from
         co-resident ledgers under pressure (reclaimed whole when the
-        owner needs them back)."""
+        owner needs them back).
+
+        ``deadline_ms`` sets a per-attempt admission deadline from the
+        tenant's SLO: a request still waiting that long times out and
+        re-enters admission up to ``max_retries`` times with
+        exponential backoff from ``retry_backoff_ms`` (fault-aborted
+        requests take the same path; retries are counted separately
+        from ``kv_restarts``). ``kv_retention_ms`` keeps a shared
+        prefix entry resident that long after its LAST holder releases
+        it — the next same-key arrival revives it at zero fill cost,
+        and retained entries are the FIRST eviction victims under
+        pressure."""
         if kv_policy and (plan is None or plan.kv_token_bytes <= 0):
             raise ValueError(
                 f"kv_policy={kv_policy!r} needs a generative plan with "
@@ -391,6 +435,26 @@ class NPUCluster:
             raise ValueError(
                 f"tenant {name!r}: kv_borrow needs live KV accounting "
                 f"(set kv_policy='evict' or 'reject')")
+        if (deadline_ms is not None or max_retries) and plan is None:
+            raise ValueError(
+                f"tenant {name!r}: deadline/retry admission needs a "
+                f"generative plan (register_generative)")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(
+                f"tenant {name!r}: deadline_ms must be > 0, "
+                f"got {deadline_ms}")
+        if max_retries < 0 or retry_backoff_ms < 0:
+            raise ValueError(
+                f"tenant {name!r}: max_retries and retry_backoff_ms "
+                f"must be >= 0")
+        if kv_retention_ms < 0:
+            raise ValueError(
+                f"tenant {name!r}: kv_retention_ms must be >= 0, "
+                f"got {kv_retention_ms}")
+        if kv_retention_ms and prefix_profile is None:
+            raise ValueError(
+                f"tenant {name!r}: kv_retention_ms retains shared "
+                f"prefix entries — it needs a prefix_profile")
         alloc = allocate_for_trace(trace, eu_budget, self.core)
         sram, hbm = estimate_memory(trace, alloc.n_me, self.core)
         if hbm_bytes is not None:
@@ -430,7 +494,11 @@ class NPUCluster:
                                     if hbm_bytes is not None else None),
                          core_hint=core_hint,
                          prefix_profile=prefix_profile,
-                         kv_borrow=bool(kv_borrow))
+                         kv_borrow=bool(kv_borrow),
+                         deadline_ms=deadline_ms,
+                         max_retries=int(max_retries),
+                         retry_backoff_ms=float(retry_backoff_ms),
+                         kv_retention_ms=float(kv_retention_ms))
         self.tenants.append(h)
         return h
 
@@ -734,7 +802,8 @@ def reports_from_result(tenants: Sequence[TenantHandle], res: SimResult,
 
 
 def _tenant_report(h: TenantHandle, st, ms: float,
-                   throughput_rps: float, queued: int = 0) -> TenantReport:
+                   throughput_rps: float, queued: int = 0,
+                   elapsed_cycles: float = 0.0) -> TenantReport:
     """One TenantReport from a handle + its simulator stats — the
     single place where cycles become milliseconds (``ms`` is the
     cycles->ms factor, ``1e3 / freq_hz``) and where SLO verdicts
@@ -780,6 +849,17 @@ def _tenant_report(h: TenantHandle, st, ms: float,
         kv_shared_bytes=st.kv_shared_bytes,
         kv_borrowed_bytes=st.kv_borrowed_bytes,
         kv_reclaimed_bytes=st.kv_reclaimed_bytes,
+        faults_survived=st.faults_survived,
+        evacuations=st.evacuations,
+        evacuated_bytes=st.evacuated_bytes,
+        hbm_fault_segments=st.hbm_fault_segments,
+        deadline_misses=st.deadline_misses,
+        retries=st.retries,
+        retry_successes=st.retry_successes,
+        retries_exhausted=st.retries_exhausted,
+        downtime_ms=st.downtime_cycles * ms,
+        availability=(max(0.0, 1.0 - st.downtime_cycles / elapsed_cycles)
+                      if elapsed_cycles > 0 else 1.0),
     )
 
 
@@ -854,6 +934,26 @@ AutoscaleHook = Callable[["ServingSession", TenantHandle, Sequence[float]],
                          Optional[int]]
 
 
+@dataclass
+class _Suspended:
+    """A tenant frozen by a core fault it could not evacuate from
+    (``failover="restart"``, or no healthy destination): its vNPU is
+    destroyed, every in-flight attempt was fault-aborted through the
+    retry path, and the pieces needed to rebuild it — config, stats,
+    rid counter, pending heap events — park here until the home core
+    recovers (``core_up``)."""
+
+    handle: TenantHandle
+    cfg: VNPUConfig
+    stats: TenantStats
+    rid: object                  # the runtime's itertools.count cursor
+    events: List[Tuple[float, str, object]]
+    core: int                    # home core (resume target)
+    since: float                 # cycles when the fault froze it
+    attached_at: float           # original attach time (throughput)
+    weights: int = 0             # reserved weight bytes to re-pin
+
+
 # ----------------------------------------------------------------------
 class ServingSession:
     """Request plane: an open-loop serving run on a pNPU cluster.
@@ -877,9 +977,41 @@ class ServingSession:
     def __init__(self, cluster: NPUCluster, hbm_scale: float = 1.0,
                  fair_slice: float = 50_000.0,
                  autoscaler: Optional[AutoscaleHook] = None,
-                 incremental: bool = True):
+                 incremental: bool = True,
+                 faults: Optional[FaultSchedule] = None,
+                 failover: str = "evacuate"):
+        """``faults`` injects a deterministic
+        :class:`~repro.core.faults.FaultSchedule` into the run (event
+        times and recovery windows in SECONDS, the session's API
+        domain): core failures, per-link bandwidth degradation or
+        outage, and HBM segment faults fire interleaved with the
+        simulation at their scheduled instants. ``failover`` picks the
+        core-fault response: ``"evacuate"`` migrates each resident
+        vNPU whole — live KV, pending events, queue state — to the
+        best surviving core over the priced fabric (falling back to
+        suspend when no destination fits); ``"restart"`` is the
+        kill-and-restart baseline — every in-flight request is
+        fault-aborted into the deadline/retry path and the tenant
+        rebuilds from scratch when its core recovers. With ``faults``
+        left None every run is bit-identical to the fault-free
+        engine."""
+        if failover not in ("evacuate", "restart"):
+            raise ValueError(
+                f"unknown failover policy {failover!r}; "
+                f"use 'evacuate' or 'restart'")
         self.cluster = cluster
         self.autoscaler = autoscaler
+        self.failover = failover
+        self.faults = faults
+        self._fseq = itertools.count()
+        # fault events in CYCLES, heap-ordered; transient core faults
+        # push their own core_up at fire time
+        self._fault_q: List[Tuple[float, int, FaultEvent]] = []
+        if faults is not None:
+            for ev in faults:
+                heapq.heappush(self._fault_q,
+                               (self._cycles(ev.at), next(self._fseq), ev))
+        self._suspended: List[_Suspended] = []
         self.sims: List[Simulator] = [
             Simulator((), policy=cluster.policy_cls, core=cluster.core,
                       hbm_scale=hbm_scale, fair_slice=fair_slice,
@@ -935,7 +1067,43 @@ class ServingSession:
             # every charge path stays bit-identical.
             sim.tenants[handle.sim_idx].kv_pressure_hook = \
                 self._make_kv_relief(handle)
+        rt = sim.tenants[handle.sim_idx]
+        freq = self.cluster.core.freq_hz
+        if handle.deadline_ms:
+            rt.deadline_cycles = handle.deadline_ms * freq / 1e3
+        if handle.max_retries > 0:
+            rt.max_retries = handle.max_retries
+            rt.retry_hook = self._make_retry(handle)
+        if handle.kv_retention_ms and handle.vnpu is not None \
+                and handle.vnpu.kv_ledger is not None:
+            handle.vnpu.kv_ledger.retention_window = \
+                handle.kv_retention_ms * freq / 1e3
         self._autoscale_cursor[(handle.core_idx, handle.sim_idx)] = 0
+
+    def _make_retry(self, handle: TenantHandle):
+        """The re-admission scheduler for one tenant (installed as its
+        runtime's ``retry_hook``): a timed-out or fault-aborted
+        request re-enters admission after an exponential backoff
+        (``retry_backoff_ms * 2^retries``), carrying its ORIGINAL
+        arrival (e2e latency spans every attempt) and its TTFT flag (a
+        first token emitted by an aborted attempt is never
+        re-sampled)."""
+        base = self._cycles(handle.retry_backoff_ms / 1e3)
+
+        def retry(req, t: float) -> None:
+            sim = self._sim_of(handle)
+            delay = base * (2 ** req.retries)
+            sim.inject_retry(handle.sim_idx, t + delay,
+                             gen_len=req.gen_len,
+                             prefix_key=req.prefix_key,
+                             retries=req.retries + 1,
+                             orig_arrival=req.arrival,
+                             ttft_seen=req.ttft_seen)
+            # the injection may pull this core's horizon earlier than
+            # its cluster-heap entry
+            self._pending_bumps.append(handle.core_idx)
+
+        return retry
 
     def _make_kv_relief(self, handle: TenantHandle):
         """The cross-tenant HBM relief callback for one KV-accounted
@@ -1084,12 +1252,23 @@ class ServingSession:
         pressure leaves both ledgers untouched and the request decodes
         locally on the prefill core (``kv_migration_rejects``)."""
         topo = self.cluster.topology
-        cp, cd, hops = ft.prefill_core, ft.decode_core, ft.hops
 
         def migrate(src_rt, req, t: float) -> bool:
             hd = ft.decode
             if hd.sim_idx < 0:
                 return False           # decode pool gone: stay local
+            # read the pair's cores per hand-off: failover may have
+            # evacuated either pool to a different core, and a link
+            # fault may have severed the path since the last hand-off
+            cp, cd = ft.prefill_core, ft.decode_core
+            hopf = topo.hops(cp, cd)
+            if not math.isfinite(hopf):
+                # link outage left the pools disconnected: refuse the
+                # hand-off and decode locally, like destination
+                # pressure does
+                src_rt.stats.kv_migration_rejects += 1
+                return False
+            hops = int(hopf)
             dst_sim = self.sims[hd.core_idx]
             dst_rt = dst_sim.tenants[hd.sim_idx]
             if dst_rt.removed:
@@ -1308,6 +1487,21 @@ class ServingSession:
         return self.now_s
 
     def _advance(self, t_end: float) -> None:
+        """Drive the cluster to ``t_end`` cycles, firing injected
+        faults at their scheduled instants: the simulation advances to
+        each fault's timestamp first (every core aligned), the fault
+        applies — core failure triggering evacuation or suspension,
+        link degradation re-pricing the fabric, HBM segment faults
+        shrinking vNPUs — and the run resumes. With no schedule this
+        is exactly the fault-free lockstep drive (:meth:`_drive`)."""
+        q = self._fault_q
+        while q and q[0][0] <= t_end:
+            at, _, ev = heapq.heappop(q)
+            self._drive(at)
+            self._apply_fault(ev, at)
+        self._drive(t_end)
+
+    def _drive(self, t_end: float) -> None:
         """Cluster-level lockstep scheduler: repeatedly advance the
         core simulator holding the globally-earliest pending event.
         Every cross-core hand-off is injected at
@@ -1361,6 +1555,381 @@ class ServingSession:
         if math.isfinite(t_end):
             for s in sims:
                 s.run_until(t_end)   # clock alignment; no events left
+
+    # ---------------- fault injection & failover ----------------
+    def _apply_fault(self, ev: FaultEvent, t: float) -> None:
+        """Fire one scheduled fault at cycle ``t`` (every simulator is
+        aligned at ``t`` when this runs)."""
+        man = self.cluster.manager
+        topo = self.cluster.topology
+        if ev.kind == "link_degrade":
+            topo.degrade_link(ev.link[0], ev.link[1], ev.bw_scale)
+        elif ev.kind == "link_restore":
+            topo.restore_link(ev.link[0], ev.link[1])
+        elif ev.kind == "core_down":
+            self._core_down(ev, t)
+        elif ev.kind == "core_up":
+            man.restore_core(ev.core)
+            self._resume_core(ev.core, t)
+        elif ev.kind == "hbm_fault":
+            self._hbm_fault(ev, t)
+
+    def _core_down(self, ev: FaultEvent, t: float) -> None:
+        """A core fails: mark it unplaceable, schedule its recovery if
+        the fault is transient, then fail over every resident session
+        tenant — whole-vNPU evacuation under ``failover="evacuate"``
+        (suspend when no destination fits), kill-and-restart
+        suspension under ``"restart"``."""
+        man = self.cluster.manager
+        if man.cores[ev.core].failed:
+            return                     # already down: nothing new fails
+        man.fail_core(ev.core)
+        if ev.transient:
+            up = t + self._cycles(ev.recovery)
+            heapq.heappush(self._fault_q,
+                           (up, next(self._fseq),
+                            FaultEvent(at=0.0, kind="core_up",
+                                       core=ev.core)))
+        for h in [h for h in list(self.cluster.tenants)
+                  if h.sim_idx >= 0 and h.core_idx == ev.core]:
+            moved = self.failover == "evacuate" and self._evacuate(h, t)
+            if not moved:
+                self._suspend(h, t)
+
+    def _evacuate(self, handle: TenantHandle, t: float) -> bool:
+        """Whole-vNPU failover: move ``handle`` — vNPU shape, live KV
+        ledger (per-request, shared-prefix AND retained entries),
+        queue state, pending heap events — to the best surviving core,
+        priced as one bulk transfer over the fabric. All-or-nothing:
+        any step that cannot complete (no healthy destination, no
+        fabric path, placement or ledger-migration failure, loans that
+        cannot unwind) leaves the source mapping intact and returns
+        False, and the caller falls back to suspend/restart. The
+        tenant stays frozen until the transfer lands (downtime)."""
+        man = self.cluster.manager
+        topo = self.cluster.topology
+        v = handle.vnpu
+        if v is None:
+            return False
+        led = v.kv_ledger
+        src = handle.core_idx
+        sim = self.sims[src]
+        rt = sim.tenants[handle.sim_idx]
+        live_kv = (led.in_use + led.shared_in_use) if led is not None else 0
+        occ = led.occupancy if led is not None else 0
+        loads = [cs.eu_used_frac + cs.mem_used_frac for cs in man.cores]
+        dst = pick_evacuation_core(topo, src, man.healthy_cores(),
+                                   loads=loads, kv_bytes=float(occ))
+        if dst is None:
+            return False
+        delay = topo.transfer_cycles(src, dst, float(occ))
+        if not math.isfinite(delay):
+            return False        # no fabric path: state cannot be copied
+        # 1. cancel the in-flight iteration (lost attempts land back in
+        #    the waiting queue and travel with it)
+        sim.abort_tenant(handle.sim_idx, t)
+        # 2. unwind HBM loans — same-core agreements cannot follow the
+        #    vNPU to another core
+        if led is not None and not self._unwind_loans(handle, rt, t):
+            return False
+        # 3. place the replacement on the destination core
+        seg = self.cluster.core.hbm_segment
+        cap = int(led.capacity) if led is not None else v.config.hbm_bytes
+        cfg = VNPUConfig(n_me=v.config.n_me, n_ve=v.config.n_ve,
+                         sram_bytes=v.config.sram_bytes,
+                         hbm_bytes=-(-cap // seg) * seg,
+                         priority=v.config.priority)
+        try:
+            nv = man.create(cfg, name=v.name, mapping=self.cluster.mapping,
+                            core_hint=dst)
+        except RuntimeError:
+            return False
+        # 4. carry the ledger (destination charged before the source
+        #    frees — a failure here destroys the replacement and leaves
+        #    the source untouched)
+        if led is not None:
+            try:
+                nv.kv_ledger.migrate_from(led)
+            except KVLedgerError:
+                man.destroy(nv)
+                return False
+        # 5. the point of no return: pull pending events + queue state,
+        #    detach from the failed core, re-attach on the destination
+        events = sim.extract_tenant_events(handle.sim_idx)
+        snap = (deque(rt.waiting), list(rt.prefilling), list(rt.decoding),
+                list(rt.swapped), rt.stats, rt._rid,
+                rt.yield_to_decode, rt.force_prefill)
+        rt.stats = TenantStats(name=rt.stats.name)  # src sim: no double
+        attached_at = handle.attached_at
+        sim.remove_tenant(handle.sim_idx)
+        man.destroy(v)
+        handle.vnpu = nv
+        handle.core_hint = dst
+        self._attach(handle)
+        handle.attached_at = attached_at
+        nrt = self._rt(handle)
+        (nrt.waiting, nrt.prefilling, nrt.decoding, nrt.swapped,
+         nrt.stats, nrt._rid, nrt.yield_to_decode,
+         nrt.force_prefill) = snap
+        nrt.frozen_until = t + delay
+        dst_sim = self.sims[dst]
+        dst_sim.replay_tenant_events(handle.sim_idx, events)
+        dst_sim.inject_wake(handle.sim_idx, t + delay)
+        self._pending_bumps.append(dst)
+        st = nrt.stats
+        st.evacuations += 1
+        st.faults_survived += 1
+        st.evacuated_bytes += live_kv
+        st.downtime_cycles += delay
+        self._autoscale_cursor[(handle.core_idx, handle.sim_idx)] = \
+            len(st.latencies)
+        self._refresh_fabric(handle)
+        return True
+
+    def _unwind_loans(self, handle: TenantHandle, rt, t: float) -> bool:
+        """Settle every HBM loan touching ``handle`` before its vNPU
+        leaves the core. Lender side: idle lent segments come home
+        first, then borrowers' KV is force-evicted (PREMA victims)
+        until the rest follows. Borrower side: the tenant's own KV is
+        evicted down to its own segments, then every borrowed byte
+        returns. False when a loan cannot unwind (evacuation falls
+        back to suspend)."""
+        man = self.cluster.manager
+        v = handle.vnpu
+        for _ in range(100_000):
+            lent, _borrowed = man.loans_of(v)
+            if lent <= 0:
+                break
+            if man.reclaim_hbm(v, lent) > 0:
+                continue
+            if not self._evict_borrower(v, t):
+                return False
+        else:                          # pragma: no cover - guard rail
+            return False
+        for _ in range(100_000):
+            try:
+                man.return_borrowed(v)
+                return True
+            except KVLedgerError:
+                led = v.kv_ledger
+                if led is not None and led.retired \
+                        and led.evict_retired(led.segment_bytes, now=t) > 0:
+                    continue
+                if not rt._kv_evict_one(t):
+                    return False
+        return False                   # pragma: no cover - guard rail
+
+    def _evict_borrower(self, v: VNPU, t: float) -> bool:
+        """Force one PREMA eviction inside a tenant borrowing from
+        ``v`` (loan unwinding: the idle share already came home, so a
+        borrower must give up live KV for the rest to follow)."""
+        man = self.cluster.manager
+        for bid in man.borrowers_of(v):
+            bh = next((h for h in self.cluster.tenants
+                       if h.vnpu is not None and h.vnpu.vnpu_id == bid
+                       and h.sim_idx >= 0), None)
+            if bh is None:
+                continue
+            brt = self._rt(bh)
+            bled = bh.vnpu.kv_ledger
+            if bled is not None and bled.retired \
+                    and bled.evict_retired(bled.segment_bytes, now=t) > 0:
+                return True
+            if brt._kv_evict_one(t):
+                return True
+        return False
+
+    def _suspend(self, handle: TenantHandle, t: float) -> None:
+        """Kill-and-restart failover (the ``"restart"`` baseline, and
+        the fallback when evacuation has nowhere to go): the in-flight
+        iteration is cancelled, every live request is fault-aborted
+        into the deadline/retry path (bounded budget — requests out of
+        retries are dropped and counted), the vNPU is destroyed, and
+        the tenant parks until its home core recovers."""
+        man = self.cluster.manager
+        sim = self._sim_of(handle)
+        rt = self._rt(handle)
+        sim.abort_tenant(handle.sim_idx, t)
+        v = handle.vnpu
+        led = v.kv_ledger if v is not None else None
+        live = (list(rt.waiting) + list(rt.prefilling)
+                + list(rt.swapped) + list(rt.decoding))
+        for req in live:
+            if led is not None:
+                led.release(req.rid)
+                rt._kv_prefix_release(led, req)
+            # the retry hook injects into THIS sim's heap; the events
+            # are extracted below and replayed at resume
+            rt.retry_or_drop(req, t)
+        rt.waiting.clear()
+        rt.prefilling.clear()
+        rt.decoding.clear()
+        rt.swapped.clear()
+        if led is not None:
+            led.flush_retired()
+        weights = int(led.reserved) if led is not None else 0
+        seg = self.cluster.core.hbm_segment
+        cap = int(led.capacity) if led is not None else \
+            (v.config.hbm_bytes if v is not None else 0)
+        cfg = VNPUConfig(n_me=v.config.n_me, n_ve=v.config.n_ve,
+                         sram_bytes=v.config.sram_bytes,
+                         hbm_bytes=-(-cap // seg) * seg,
+                         priority=v.config.priority)
+        events = sim.extract_tenant_events(handle.sim_idx)
+        snap = _Suspended(handle=handle, cfg=cfg, stats=rt.stats,
+                          rid=rt._rid, events=events,
+                          core=handle.core_idx, since=t,
+                          attached_at=handle.attached_at,
+                          weights=weights)
+        rt.stats = TenantStats(name=rt.stats.name)  # src sim: no double
+        sim.remove_tenant(handle.sim_idx)
+        if v is not None:
+            man.destroy(v)             # settles any remaining loans
+        handle.vnpu = None
+        handle.sim_idx = -1
+        self._suspended.append(snap)
+
+    def _resume_core(self, core: int, t: float) -> None:
+        """A core recovered: rebuild every tenant suspended from it —
+        fresh vNPU at the pre-fault shape, stats and rid counter
+        carried over, pending events replayed (stale arrivals keep
+        their ORIGINAL timestamps so e2e latency spans the outage).
+        Tenants that no longer fit stay suspended until the next
+        recovery."""
+        man = self.cluster.manager
+        for s in list(self._suspended):
+            if s.core != core:
+                continue
+            h = s.handle
+            try:
+                nv = man.create(s.cfg, name=h.name,
+                                mapping=self.cluster.mapping,
+                                core_hint=core)
+            except RuntimeError:
+                continue               # no room yet; stay suspended
+            if h.kv_policy and s.weights:
+                nv.kv_ledger.reserve(s.weights)
+            h.vnpu = nv
+            h.core_hint = core
+            self._attach(h)
+            h.attached_at = s.attached_at
+            nrt = self._rt(h)
+            nrt.stats = s.stats
+            nrt._rid = s.rid
+            self._replay_preserving(self._sim_of(h), h.sim_idx, s.events)
+            st = nrt.stats
+            st.downtime_cycles += t - s.since
+            st.faults_survived += 1
+            self._autoscale_cursor[(h.core_idx, h.sim_idx)] = \
+                len(st.latencies)
+            self._refresh_fabric(h)
+            self._pending_bumps.append(h.core_idx)
+            self._suspended.remove(s)
+
+    def _replay_preserving(self, sim: Simulator, idx: int,
+                           events: Sequence[Tuple[float, str, object]]
+                           ) -> None:
+        """Replay extracted heap events after a suspend gap. Events
+        still in the future replay verbatim; plain/keyed arrivals the
+        outage swallowed land NOW but keep their original timestamp as
+        the request's arrival (via a zero-count retry), so queueing
+        time spent suspended stays in the latency record."""
+        now = sim.now
+        for t, kind, payload in events:
+            if t >= now:
+                sim.replay_tenant_events(idx, [(t, kind, payload)])
+                continue
+            if kind == "arr":
+                g = payload
+                sim.inject_retry(idx, now, gen_len=None if g < 0 else g,
+                                 retries=0, orig_arrival=t)
+            elif kind == "arrk":
+                g, pk = payload
+                sim.inject_retry(idx, now, gen_len=None if g < 0 else g,
+                                 prefix_key=pk, retries=0, orig_arrival=t)
+            else:                      # retries / migrations: clamp
+                sim.replay_tenant_events(idx, [(t, kind, payload)])
+
+    def _hbm_fault(self, ev: FaultEvent, t: float) -> None:
+        """``n_segments`` HBM segments fault on one core. The victim
+        is the resident session tenant holding the most HBM (the
+        widest blast surface; deterministic tie-break). Graceful
+        degradation: live KV is evicted down — retained prefix entries
+        first, then PREMA victims — until the shrunken allocation
+        holds the occupancy, and the vNPU's ledger + segment list
+        shrink in place (resizes keep honoring the smaller size). When
+        even the resident weights cannot fit, the fault escalates to
+        whole-vNPU failover and the vacated segments fault out of the
+        core's free pool."""
+        man = self.cluster.manager
+        cands = [h for h in self.cluster.tenants
+                 if h.sim_idx >= 0 and h.core_idx == ev.core
+                 and h.vnpu is not None and h.vnpu.segments is not None]
+        if not cands:
+            man.fault_free_hbm_segments(ev.core, ev.n_segments)
+            return
+        h = max(cands, key=lambda x: (len(x.vnpu.segments.hbm_segments),
+                                      -x.vnpu.vnpu_id))
+        rt = self._rt(h)
+        sim = self._sim_of(h)
+        led = h.vnpu.kv_ledger
+        seg = self.cluster.core.hbm_segment
+        n = min(ev.n_segments, len(h.vnpu.segments.hbm_segments))
+        if n <= 0 or led is None:
+            return
+        if led.reserved > led.capacity - n * seg:
+            # weights alone overflow the shrunken vNPU: escalate
+            moved = self.failover == "evacuate" and self._evacuate(h, t)
+            if not moved:
+                self._suspend(h, t)
+            man.fault_free_hbm_segments(ev.core, n)
+            return
+        target = led.capacity - n * seg + led.borrowed
+        if led.occupancy > target:
+            sim.abort_tenant(h.sim_idx, t)
+        for _ in range(100_000):
+            if led.occupancy <= target:
+                break
+            if led.retired \
+                    and led.evict_retired(led.occupancy - target,
+                                          now=t) > 0:
+                continue
+            if not rt._kv_evict_one(t):
+                break
+        if led.occupancy > target:
+            # eviction could not clear the segments (e.g. lent bytes
+            # pinned by a borrower): escalate like the weights case
+            moved = self.failover == "evacuate" and self._evacuate(h, t)
+            if not moved:
+                self._suspend(h, t)
+            man.fault_free_hbm_segments(ev.core, n)
+            return
+        man.fault_hbm_segments(h.vnpu, n)
+        h.hbm_bytes = int(led.capacity)
+        st = rt.stats
+        st.hbm_fault_segments += n
+        st.faults_survived += 1
+        sim.inject_wake(h.sim_idx, t)   # re-kick if the abort idled it
+        self._pending_bumps.append(h.core_idx)
+
+    def _refresh_fabric(self, handle: TenantHandle) -> None:
+        """Failover moved a disaggregated pool to another core: point
+        its :class:`FabricTenant` record — and, for a prefill pool,
+        its freshly-attached runtime's migrate hook — at the new
+        placement. Hand-off pricing re-reads the pair's cores per
+        request, so in-flight accounting stays consistent."""
+        topo = self.cluster.topology
+        for ft in self.fabric_tenants:
+            if handle is ft.prefill:
+                ft.prefill_core = handle.core_idx
+            elif handle is ft.decode:
+                ft.decode_core = handle.core_idx
+            else:
+                continue
+            hopf = topo.hops(ft.prefill_core, ft.decode_core)
+            ft.hops = int(hopf) if math.isfinite(hopf) else 0
+            if ft.prefill.sim_idx >= 0:
+                self._rt(ft.prefill).migrate_hook = self._make_migrator(ft)
 
     def _autoscale_step(self) -> None:
         if self.autoscaler is None:
@@ -1441,7 +2010,8 @@ class ServingSession:
             elapsed_s = max(now - h.attached_at, 1.0) / core.freq_hz
             out.append(_tenant_report(
                 h, rt.stats, ms, rt.stats.requests_done / elapsed_s,
-                queued=rt.in_flight))
+                queued=rt.in_flight,
+                elapsed_cycles=max(now - h.attached_at, 0.0)))
         if handle is None:
             out.extend(self._fabric_report(ft)
                        for ft in self.fabric_tenants)
@@ -1485,7 +2055,8 @@ class ServingSession:
         elapsed_s = max(now - attached, 1.0) / core.freq_hz
         rep = _tenant_report(
             shim, merged, ms, merged.requests_done / elapsed_s,
-            queued=rp.in_flight + rd.in_flight + ft.in_transit)
+            queued=rp.in_flight + rd.in_flight + ft.in_transit,
+            elapsed_cycles=max(now - attached, 0.0))
         rep.n_me = hp.vnpu.config.n_me + hd.vnpu.config.n_me
         rep.n_ve = hp.vnpu.config.n_ve + hd.vnpu.config.n_ve
         return rep

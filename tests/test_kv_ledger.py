@@ -77,6 +77,59 @@ def test_migrate_carries_state_and_rejects_shrink_below_live():
     assert small.in_use == 0             # failed migrate changed nothing
 
 
+def test_migrate_entry_unknown_rid_raises_both_untouched():
+    src, dst = KVLedger(8 * SEG, SEG), KVLedger(8 * SEG, SEG)
+    src.alloc(1, 2 * SEG)
+    with pytest.raises(KVLedgerError, match="unknown"):
+        src.migrate_entry_to(dst, 99)
+    assert src.in_use == 2 * SEG and dst.in_use == 0
+
+
+def test_migrate_entry_dst_pressure_rejects_both_untouched():
+    src, dst = KVLedger(8 * SEG, SEG), KVLedger(2 * SEG, SEG)
+    src.alloc(1, 3 * SEG)
+    dst.alloc(7, SEG)
+    assert src.migrate_entry_to(dst, 1) == -1    # 3 segs into 1 free
+    assert src.in_use == 3 * SEG and src.bytes_of(1) == 3 * SEG
+    assert dst.in_use == SEG                     # partial-failure: no
+    assert dst.bytes_of(1) == 0                  # half-charged entry
+
+
+def test_migrate_entry_dst_rid_collision_raises_both_untouched():
+    src, dst = KVLedger(8 * SEG, SEG), KVLedger(8 * SEG, SEG)
+    src.alloc(1, 2 * SEG)
+    dst.alloc(1, SEG)
+    with pytest.raises(KVLedgerError, match="already live"):
+        src.migrate_entry_to(dst, 1)             # silent merge refused
+    assert src.bytes_of(1) == 2 * SEG and dst.bytes_of(1) == SEG
+    # an explicit non-colliding destination rid works
+    assert src.migrate_entry_to(dst, 1, dst_rid=2) == 2 * SEG
+    assert src.in_use == 0 and dst.bytes_of(2) == 2 * SEG
+
+
+def test_migrate_entry_same_ledger_is_a_noop():
+    led = KVLedger(4 * SEG, SEG)
+    led.alloc(1, SEG)
+    assert led.migrate_entry_to(led, 1) == SEG
+    assert led.bytes_of(1) == SEG and led.in_use == SEG
+
+
+def test_migrate_from_failure_leaves_source_fully_usable():
+    a = KVLedger(8 * SEG, SEG, reserved_bytes=SEG)
+    a.alloc(1, 2 * SEG)
+    a.acquire_shared(5, SEG)
+    small = KVLedger(3 * SEG, SEG)
+    with pytest.raises(KVLedgerError, match="exceeds the resized"):
+        small.migrate_from(a)                    # 4 live segs into 3
+    # the failed rollover mutated NEITHER side: source still serves
+    assert small.in_use == 0 and small.shared_in_use == 0
+    assert a.bytes_of(1) == 2 * SEG and a.shared_refs(5) == 1
+    assert a.alloc(2, SEG)                       # and still allocates
+    ok = KVLedger(8 * SEG, SEG)
+    ok.migrate_from(a)
+    assert ok.occupancy == a.occupancy           # retry lands exactly
+
+
 # ----------------------------------------------------------------------
 # property: arbitrary op sequences vs an independent mirror model
 # ----------------------------------------------------------------------

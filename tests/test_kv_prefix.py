@@ -335,7 +335,7 @@ def test_sharing_off_fabric_golden_bit_identical(engine):
 # sharing ON: determinism, engine agreement, pressure composition
 # ----------------------------------------------------------------------
 def _sharing_session(kv_segs=4, ratio=1.0, n=24, engine="inc",
-                     gen_mean=96.0):
+                     gen_mean=96.0, **reg_kw):
     cluster = NPUCluster(core=SMALL_CORE, policy="neu10")
     sess = ServingSession(cluster, incremental=(engine != "full"))
     if engine == "ref":
@@ -346,7 +346,7 @@ def _sharing_session(kv_segs=4, ratio=1.0, n=24, engine="inc",
         gen_lens=GenLenDistribution(mean=gen_mean, max_len=256, seed=11),
         eu_budget=4, kv_policy="evict", hbm_bytes=WSEG + kv_segs * SEG,
         prefix_profile=PrefixProfile(prefix_len=64, share_ratio=ratio,
-                                     n_prefixes=1, seed=3))
+                                     n_prefixes=1, seed=3), **reg_kw)
     sess.submit_arrivals(chat, PoissonArrivals(rate_rps=200_000.0,
                                                n=n, seed=1))
     return sess, chat
@@ -587,3 +587,84 @@ def test_live_resize_keeps_shared_prefix_segments():
     assert st_.requests_done == 24
     led = chat.vnpu.kv_ledger
     assert led.in_use == 0 and led.shared_in_use == 0 and not led.shared
+
+
+# ----------------------------------------------------------------------
+# LRU retention window: zero-holder entries linger, revive for free,
+# expire on schedule, and are first-choice eviction victims
+# ----------------------------------------------------------------------
+def test_retention_parks_and_revives_for_free():
+    led = KVLedger(8 * SEG, SEG)
+    led.retention_window = 100.0
+    led.acquire_shared(7, 2 * SEG)
+    assert led.release_shared(7, now=10.0) == 0   # parked, not freed
+    assert led.shared_refs(7) == 0
+    assert led.retired_bytes == 2 * SEG
+    assert led.shared_in_use == 2 * SEG           # bytes stay charged
+    assert led.acquire_shared(7, 2 * SEG)         # retention HIT...
+    assert led.shared_refs(7) == 1
+    assert led.retired_bytes == 0                 # ...revived in place
+    with pytest.raises(KVLedgerError, match="collision"):
+        led.release_shared(7, now=20.0)
+        led.acquire_shared(7, SEG)                # size mismatch guard
+
+
+def test_retention_expiry_and_pressure_eviction_order():
+    led = KVLedger(8 * SEG, SEG)
+    led.retention_window = 100.0
+    for key, t in ((1, 0.0), (2, 50.0)):
+        led.acquire_shared(key, SEG)
+        led.release_shared(key, now=t)            # expire at 100 / 150
+    assert led.expire_retired(now=99.0) == 0      # neither lapsed yet
+    assert led.expire_retired(now=100.0) == SEG   # exactly on schedule
+    assert led.retired_bytes == SEG
+    # pressure eviction takes the oldest-expiry survivor
+    assert led.evict_retired(SEG, now=120.0) == SEG
+    assert led.retired_bytes == 0 and led.shared_in_use == 0
+
+
+def test_retention_flush_clear_and_migrate_carry():
+    led = KVLedger(8 * SEG, SEG)
+    led.retention_window = 100.0
+    led.acquire_shared(3, 2 * SEG)
+    led.release_shared(3, now=5.0)
+    dst = KVLedger(8 * SEG, SEG)
+    dst.migrate_from(led)                         # failover carries the
+    assert dst.retired_bytes == 2 * SEG           # retention table...
+    assert dst.retention_window == 100.0          # ...and the window
+    assert dst.acquire_shared(3, 2 * SEG)         # still revivable
+    assert led.flush_retired() == 2 * SEG         # teardown frees all
+    assert led.shared_in_use == 0
+    led.acquire_shared(4, SEG)
+    led.release_shared(4, now=6.0)
+    led.clear()                                   # per-request wipe
+    assert led.retired_bytes == 0 and led.shared_in_use == 0
+
+
+def test_retention_off_is_inert():
+    led = KVLedger(8 * SEG, SEG)                  # window defaults to 0
+    led.acquire_shared(9, SEG)
+    assert led.release_shared(9, now=10.0) == SEG  # frees immediately
+    assert led.retired_bytes == 0 and led.shared_in_use == 0
+
+
+def test_session_retention_turns_thrash_into_hits():
+    """Same sharing workload, zero vs generous retention: with the
+    window on, a prefix whose holders all drain before the next
+    arrival revives from the retired table instead of re-filling."""
+    base_sess, base_chat = _sharing_session(kv_segs=8, gen_mean=8.0)
+    base_sess.drain()
+    base = _sharing_fingerprint(base_sess, base_chat)
+
+    sess, chat = _sharing_session(kv_segs=8, gen_mean=8.0,
+                                  kv_retention_ms=50.0)
+    sess.drain()
+    led = chat.vnpu.kv_ledger
+    st_ = sess.sim.tenants[chat.sim_idx].stats
+    assert st_.requests_done == base[0]
+    assert st_.kv_prefix_hits >= base_sess.sim.tenants[
+        base_chat.sim_idx].stats.kv_prefix_hits
+    assert led.in_use == 0
+    assert led.shared_in_use == led.retired_bytes  # only retained bytes
+    led.flush_retired()
+    assert led.shared_in_use == 0
