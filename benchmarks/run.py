@@ -30,6 +30,7 @@ from benchmarks import (
     fig22_utilization,
     fig25_scaling,
     fig26_hbm,
+    fig_admission,
     fig_chunked_prefill,
     fig_colocation,
     fig_fabric,
@@ -53,6 +54,7 @@ SUITES = {
     "fig_fault": fig_fault,
     "fig_kv_pressure": fig_kv_pressure,
     "fig_prefix_cache": fig_prefix_cache,
+    "fig_admission": fig_admission,
 }
 
 # "chat_ttft_p95=0.0063ms" / "speedup=1.50x" / "interleaved=9" ->

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 from repro.core.vnpu import VNPUConfig
 from repro.npu.cost_model import WorkloadTrace
@@ -177,6 +177,38 @@ def pick_evacuation_core(topology: "FabricTopology", src: int,
         if best_key is None or key < best_key:
             best_key, best = key, dst
     return best
+
+
+def credit_weighted_fill(asks: Sequence[Tuple[str, float, int, int]],
+                         free_eus: int, free_segments: int,
+                         total_eus: int, total_segments: int,
+                         ) -> List[str]:
+    """Credit-weighted DRF/knapsack over the fleet's two scarce
+    resources — the admission companion to the Eq. 1-4 split. Each
+    ask is ``(name, credit, eus, hbm_segments)``; the fill ranks asks
+    by credit per dominant share (DRF's scalar:
+    ``max(eus/total_eus, segs/total_segs)``) and greedily grants
+    while the free pool lasts, skipping asks that no longer fit
+    (classic knapsack greedy — a big low-density ask never blocks a
+    small affordable one behind it).
+
+    Tie-breaks, in order (all deterministic): higher credit-per-
+    dominant-share, then higher absolute credit (of two equal-density
+    asks the longer-accrued account goes first), then ascending name.
+    Returns the granted names in drain order."""
+    def density(credit: float, eus: int, segs: int) -> float:
+        dom = max(eus / total_eus if total_eus else 0.0,
+                  segs / total_segments if total_segments else 0.0)
+        return credit / dom if dom > 0 else math.inf
+    ranked = sorted(asks, key=lambda a: (-density(a[1], a[2], a[3]),
+                                         -a[1], a[0]))
+    granted: List[str] = []
+    for name, _credit, eus, segs in ranked:
+        if eus <= free_eus and segs <= free_segments:
+            granted.append(name)
+            free_eus -= eus
+            free_segments -= segs
+    return granted
 
 
 def estimate_memory(trace: WorkloadTrace, n_me: int,

@@ -836,3 +836,28 @@ def pick_eviction_victim(requests, plan, context_of, shared_refs_of=None):
         if best_key is None or key > best_key:
             best, best_key = req, key
     return best
+
+
+# ----------------------------------------------------------------------
+# live SLO violation signals (credit-based admission, PREMA tokens)
+# ----------------------------------------------------------------------
+def slo_violation_signal(stats, slo_ttft_cycles=None, slo_tbt_cycles=None,
+                         ttft_seen: int = 0, tbt_seen: int = 0,
+                         ) -> Tuple[int, int, int]:
+    """Count NEW latency samples violating the tenant's declared SLOs
+    — the live signal the credit admission controller debits accounts
+    with (:mod:`repro.core.admission`). Scans the tenant's
+    ``TenantStats`` TTFT / TBT series past the caller's cursors (the
+    controller stores them per account, so every sample is converted
+    into at most one debit) against the SLOs in CYCLES (the stats
+    domain; the serving layer converts its ms SLOs once). Returns
+    ``(violations, new_ttft_cursor, new_tbt_cursor)``; a None SLO
+    skips its series entirely."""
+    v = 0
+    if slo_ttft_cycles is not None:
+        v += sum(1 for x in stats.ttft[ttft_seen:] if x > slo_ttft_cycles)
+        ttft_seen = len(stats.ttft)
+    if slo_tbt_cycles is not None:
+        v += sum(1 for x in stats.tbt[tbt_seen:] if x > slo_tbt_cycles)
+        tbt_seen = len(stats.tbt)
+    return v, ttft_seen, tbt_seen

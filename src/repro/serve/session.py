@@ -47,6 +47,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.admission import (AdmissionAsk, AdmissionController,
+                                  FleetState)
 from repro.core.allocator import (Allocation, allocate_for_trace,
                                   estimate_memory, eu_utilization,
                                   pick_evacuation_core, place_phase_pair)
@@ -54,7 +56,8 @@ from repro.core.compiler import CompiledRequestPlan, ProgramCache
 from repro.core.fabric import FabricTopology, Placement, random_phase_pair
 from repro.core.faults import FaultEvent, FaultSchedule
 from repro.core.mapper import ReconfigureError, VNPUManager
-from repro.core.policies import PolicyLike, resolve_policy
+from repro.core.policies import (PolicyLike, resolve_policy,
+                                 slo_violation_signal)
 from repro.core.simulator import (SimResult, Simulator, TenantSpec,
                                   TenantStats)
 from repro.core.stats import percentile
@@ -266,6 +269,9 @@ class TenantReport:
     downtime_ms: float = 0.0     # time frozen by faults (transfers,
                                  # suspend-until-recovery gaps)
     availability: float = 1.0    # 1 - downtime / attached lifetime
+    # ---- credit admission (zero with the gate off) ----
+    credit: float = 0.0          # rolled-forward account balance
+    admission_deferrals: int = 0  # times the gate deferred this tenant
 
 
 # ----------------------------------------------------------------------
@@ -882,6 +888,31 @@ class FabricTenant:
     in_transit: int = 0
 
 
+@dataclass
+class AdmissionTicket:
+    """A registration the credit gate DEFERRED: the ask parks in the
+    session's re-admission queue and is retried after every
+    ``run_until`` window as the tenant's credit recovers (and the
+    fleet's pressure drops). ``handle`` is set the moment the tenant
+    is actually admitted; arrivals submitted against a still-deferred
+    ticket queue in ``pending_arrivals`` and are injected at
+    admission time with their ORIGINAL timestamps, so end-to-end
+    latency spans the deferral."""
+
+    name: str
+    kind: str                    # "plain" | "model" | "generative"
+    ask: AdmissionAsk
+    args: tuple
+    kwargs: dict
+    deferrals: int = 0
+    handle: Union[TenantHandle, FabricTenant, None] = None
+    pending_arrivals: List[object] = field(default_factory=list)
+
+    @property
+    def admitted(self) -> bool:
+        return self.handle is not None
+
+
 # ----------------------------------------------------------------------
 class SLOAutoscaler:
     """SLO-aware autoscaling as a session hook (replaces the ad-hoc
@@ -979,7 +1010,8 @@ class ServingSession:
                  autoscaler: Optional[AutoscaleHook] = None,
                  incremental: bool = True,
                  faults: Optional[FaultSchedule] = None,
-                 failover: str = "evacuate"):
+                 failover: str = "evacuate",
+                 admission: Optional[AdmissionController] = None):
         """``faults`` injects a deterministic
         :class:`~repro.core.faults.FaultSchedule` into the run (event
         times and recovery windows in SECONDS, the session's API
@@ -994,7 +1026,18 @@ class ServingSession:
         fault-aborted into the deadline/retry path and the tenant
         rebuilds from scratch when its core recovers. With ``faults``
         left None every run is bit-identical to the fault-free
-        engine."""
+        engine.
+
+        ``admission`` installs the fleet-scale credit gate
+        (:class:`~repro.core.admission.AdmissionController`):
+        :meth:`register` / :meth:`register_generative` then consult
+        it BEFORE placing a vNPU — a low-credit ask under fleet
+        pressure is down-sized or deferred (returned as an
+        :class:`AdmissionTicket` and retried from the re-admission
+        queue after every ``run_until`` window), live TTFT/TBT
+        violations debit tenant accounts, and autoscale grows pass
+        the same gate. Left None (the default), every registration
+        path is bit-identical to the ungated engine."""
         if failover not in ("evacuate", "restart"):
             raise ValueError(
                 f"unknown failover policy {failover!r}; "
@@ -1026,6 +1069,12 @@ class ServingSession:
         self._pending_bumps: List[int] = []
         # autoscale windows consumed, keyed (core_idx, sim_idx[, series])
         self._autoscale_cursor: Dict[Tuple, int] = {}
+        self.admission = admission
+        # deferred registrations, retried after every run_until window
+        self.admission_queue: List[AdmissionTicket] = []
+        # reentrancy latch: queue drains and fabric pool registrations
+        # must not re-consult the gate for an already-admitted ask
+        self._gate_bypass = False
         for h in cluster.tenants:
             self._attach(h)
 
@@ -1079,6 +1128,166 @@ class ServingSession:
             handle.vnpu.kv_ledger.retention_window = \
                 handle.kv_retention_ms * freq / 1e3
         self._autoscale_cursor[(handle.core_idx, handle.sim_idx)] = 0
+        if self.admission is not None:
+            # every attached tenant holds a credit account (pre-session
+            # cluster registrations and failover re-attaches included);
+            # touch is idempotent so a balance survives re-attachment
+            self.admission.touch(self._handle_ask(handle), sim.now / freq)
+
+    # ---------------- credit admission gate ----------------
+    def _fleet_state(self) -> FleetState:
+        """Cluster-wide free/total EU + HBM-segment snapshot the
+        credit gate prices against (free over healthy cores; totals
+        over the whole fleet, so pressure rises when cores fault)."""
+        man = self.cluster.manager
+        core = self.cluster.core
+        free_eus = free_segs = 0
+        for cs in man.cores:
+            if cs.failed:
+                continue
+            free_eus += len(cs.free_mes) + len(cs.free_ves)
+            free_segs += len(cs.free_hbm_segs)
+        n = len(man.cores)
+        return FleetState(
+            free_eus=free_eus, total_eus=n * (core.n_me + core.n_ve),
+            free_hbm_segments=free_segs,
+            total_hbm_segments=n * (core.hbm_bytes // core.hbm_segment))
+
+    def _segments_of(self, hbm_bytes: Optional[int]) -> int:
+        if hbm_bytes is None:
+            return 0
+        seg = self.cluster.core.hbm_segment
+        return -(-int(hbm_bytes) // seg)
+
+    def _handle_ask(self, handle: TenantHandle) -> AdmissionAsk:
+        return AdmissionAsk(name=handle.name, eus=handle.eu_budget,
+                            hbm_segments=self._segments_of(handle.hbm_bytes),
+                            slo_ttft_ms=handle.slo_ttft_ms,
+                            slo_tbt_ms=handle.slo_tbt_ms,
+                            slo_p95_ms=handle.slo_p95_ms)
+
+    def _refund(self, name: str, price: float) -> None:
+        """Undo an admission debit whose registration the manager then
+        refused (the gate's fleet counts are fungible EUs; placement
+        needs type-matched MEs/VEs — the manager stays authoritative).
+        ``spend(-p)`` preserves the conservation ledger."""
+        acct = self.admission.accounts.get(name)
+        if acct is not None and price > 0.0:
+            acct.spend(-price)
+
+    def _gated(self, kind: str, name: str, eu_budget: int,
+               args: tuple, kwargs: dict,
+               ) -> Union[TenantHandle, "FabricTenant", AdmissionTicket]:
+        """One registration ask through the credit gate. Admitted asks
+        (possibly down-sized) register immediately and return the
+        handle; deferred asks — by credit, by fleet capacity, or by a
+        placement refusal the fleet-level counts could not see — queue
+        an :class:`AdmissionTicket` that retries after every
+        ``run_until`` window."""
+        ask = AdmissionAsk(
+            name=name, eus=eu_budget,
+            hbm_segments=self._segments_of(kwargs.get("hbm_bytes")),
+            slo_ttft_ms=kwargs.get("slo_ttft_ms"),
+            slo_tbt_ms=kwargs.get("slo_tbt_ms"),
+            slo_p95_ms=kwargs.get("slo_p95_ms"),
+            min_eus=kwargs.pop("min_eus", 2))
+        ticket = AdmissionTicket(name=name, kind=kind, ask=ask,
+                                 args=args, kwargs=kwargs)
+        decision = self.admission.decide(ask, self.now_s,
+                                         self._fleet_state())
+        if decision.status != "defer":
+            try:
+                self._admit_ticket(ticket, decision.eus)
+                return ticket.handle
+            except RuntimeError:
+                self._refund(name, decision.price)
+        ticket.deferrals += 1
+        self.admission_queue.append(ticket)
+        return ticket
+
+    def _admit_ticket(self, ticket: AdmissionTicket, eus: int) -> None:
+        """A queued ticket cleared the gate: perform the real
+        registration (bypassing the gate — the decision is made) and
+        inject every arrival that queued against the ticket, original
+        timestamps intact."""
+        bypass, self._gate_bypass = self._gate_bypass, True
+        try:
+            if ticket.kind == "plain":
+                trace, = ticket.args
+                h = self.register(ticket.name, trace, eus,
+                                  **ticket.kwargs)
+            elif ticket.kind == "model":
+                cfg, = ticket.args
+                h = self.register_model(cfg, eu_budget=eus,
+                                        **ticket.kwargs)
+            else:
+                cfg, placement = ticket.args
+                h = self.register_generative(ticket.name, cfg,
+                                             placement=placement,
+                                             eu_budget=eus,
+                                             **ticket.kwargs)
+        finally:
+            self._gate_bypass = bypass
+        ticket.handle = h
+        for arrivals in ticket.pending_arrivals:
+            self.submit_arrivals(h, arrivals, clamp=True)
+        ticket.pending_arrivals.clear()
+
+    def _admission_step(self) -> None:
+        """Post-window credit bookkeeping: feed live violation
+        signals (SLO-violating TTFT/TBT samples, deadline misses)
+        into tenant accounts as debits, then retry the re-admission
+        queue in credit-weighted knapsack order."""
+        ctl = self.admission
+        if ctl is None:
+            return
+        now_s = self.now_s
+        freq = self.cluster.core.freq_hz
+        for h in self.cluster.tenants:
+            if h.sim_idx < 0:
+                continue
+            acct = ctl.accounts.get(h.name)
+            if acct is None:
+                continue
+            st = self._rt(h).stats
+            v, acct.ttft_seen, acct.tbt_seen = slo_violation_signal(
+                st,
+                slo_ttft_cycles=(h.slo_ttft_ms * freq / 1e3
+                                 if h.slo_ttft_ms else None),
+                slo_tbt_cycles=(h.slo_tbt_ms * freq / 1e3
+                                if h.slo_tbt_ms else None),
+                ttft_seen=acct.ttft_seen, tbt_seen=acct.tbt_seen)
+            v += st.deadline_misses - acct.misses_seen
+            acct.misses_seen = st.deadline_misses
+            ctl.observe(h.name, now_s, v)
+        if not self.admission_queue:
+            return
+        fleet = self._fleet_state()
+        order = ctl.rank([t.ask for t in self.admission_queue],
+                         now_s, fleet)
+        by_name = {t.name: t for t in self.admission_queue}
+        # ranked tickets drain first (credit-weighted knapsack order);
+        # the rest still get a decide() pass — the knapsack ranks
+        # full-size asks, but decide() may admit one down-sized.
+        pending = [by_name[n] for n in order if n in by_name]
+        ranked = set(order)
+        pending += [t for t in list(self.admission_queue)
+                    if t.name not in ranked]
+        for ticket in pending:
+            decision = ctl.decide(ticket.ask, now_s, self._fleet_state())
+            if decision.status == "defer":
+                ticket.deferrals += 1
+                continue
+            try:
+                self._admit_ticket(ticket, decision.eus)
+            except RuntimeError:
+                # the manager refused placement (fleet counts are
+                # fungible EUs; the mapper needs type-matched MEs/VEs)
+                # — refund the debit and keep the ticket queued
+                self._refund(ticket.name, decision.price)
+                ticket.deferrals += 1
+                continue
+            self.admission_queue.remove(ticket)
 
     def _make_retry(self, handle: TenantHandle):
         """The re-admission scheduler for one tenant (installed as its
@@ -1093,6 +1302,22 @@ class ServingSession:
         def retry(req, t: float) -> None:
             sim = self._sim_of(handle)
             delay = base * (2 ** req.retries)
+            if delay <= 0.0:
+                # zero-backoff floor: a re-admission landing at exactly
+                # t re-enters the same still-congested queue instant it
+                # just timed out of, and sustained pressure burns every
+                # retry without the request ever leaving WAITING. Floor
+                # the horizon at the next event tick (the earliest the
+                # queue can have moved), or one sweep period when the
+                # heap is idle.
+                rt = sim.tenants[handle.sim_idx]
+                nxt = sim.next_event_at
+                if math.isfinite(nxt) and nxt > t:
+                    delay = nxt - t
+                elif rt.deadline_cycles > 0:
+                    delay = rt.deadline_cycles
+                else:
+                    delay = 1.0
             sim.inject_retry(handle.sim_idx, t + delay,
                              gen_len=req.gen_len,
                              prefix_key=req.prefix_key,
@@ -1150,26 +1375,42 @@ class ServingSession:
 
     # ---------------- tenant lifecycle (all legal mid-run) ----------------
     def register(self, name: str, trace: WorkloadTrace, eu_budget: int,
-                 **kw) -> TenantHandle:
+                 **kw) -> Union[TenantHandle, AdmissionTicket]:
         """Register a tenant on the cluster AND attach it to the live
         simulation (legal mid-run). ``eu_budget`` is execution units
         (engines); SLO kwargs (``slo_p95_ms`` etc.) are milliseconds.
-        See :meth:`NPUCluster.register`."""
+        See :meth:`NPUCluster.register`.
+
+        With a credit :class:`~repro.core.admission.AdmissionController`
+        installed, the ask passes the gate first: it may be admitted
+        down-sized (fewer EUs), or deferred — an
+        :class:`AdmissionTicket` is returned instead of a handle and
+        the registration retries after every ``run_until`` window."""
+        if self.admission is not None and not self._gate_bypass:
+            return self._gated("plain", name, eu_budget, (trace,),
+                               dict(kw))
         h = self.cluster.register(name, trace, eu_budget, **kw)
         self._attach(h)
         return h
 
-    def register_model(self, cfg: ModelConfig, **kw) -> TenantHandle:
+    def register_model(self, cfg: ModelConfig,
+                       **kw) -> Union[TenantHandle, AdmissionTicket]:
         """Register a fixed-phase model tenant mid-run (trace built
         from ``cfg``; see :meth:`NPUCluster.register_model` for the
-        batch/seq token knobs)."""
+        batch/seq token knobs). Credit-gated like :meth:`register`."""
+        if self.admission is not None and not self._gate_bypass:
+            kwargs = dict(kw)
+            eu_budget = kwargs.pop("eu_budget", 4)
+            return self._gated("model", cfg.name, eu_budget, (cfg,),
+                               kwargs)
         h = self.cluster.register_model(cfg, **kw)
         self._attach(h)
         return h
 
     def register_generative(self, name: str, cfg: ModelConfig,
                             placement: Optional[Placement] = None,
-                            **kw) -> Union[TenantHandle, FabricTenant]:
+                            **kw) -> Union[TenantHandle, FabricTenant,
+                                           AdmissionTicket]:
         """Register a phase-structured LLM tenant mid-run (prefill +
         gen-length-distributed decode chain; see
         :meth:`NPUCluster.register_generative`).
@@ -1180,12 +1421,34 @@ class ServingSession:
         default — see :class:`~repro.core.fabric.Placement`), and
         every request that finishes prefill migrates its KV to the
         decode core over the priced link model. Returns a
-        :class:`FabricTenant` in that case."""
+        :class:`FabricTenant` in that case.
+
+        Credit-gated like :meth:`register`; a disaggregated pair is
+        gated as ONE ask (the summed EU budget) so a deferral parks
+        the whole pair, never half of it."""
+        if self.admission is not None and not self._gate_bypass:
+            kwargs = dict(kw)
+            eu_budget = kwargs.pop("eu_budget", 4)
+            return self._gated("generative", name, eu_budget,
+                               (cfg, placement), kwargs)
         if placement is not None:
-            return self._register_fabric(name, cfg, placement, **kw)
+            return self._register_fabric_gated(name, cfg, placement, **kw)
         h = self.cluster.register_generative(name, cfg, **kw)
         self._attach(h)
         return h
+
+    def _register_fabric_gated(self, name: str, cfg: ModelConfig,
+                               placement: Placement,
+                               **kw) -> FabricTenant:
+        """Fabric pair registration with the gate latched off: the
+        pair's ask was decided as one unit; the per-pool inner
+        ``register_generative`` calls must not be re-gated (half a
+        pair deferred would strand the other half)."""
+        bypass, self._gate_bypass = self._gate_bypass, True
+        try:
+            return self._register_fabric(name, cfg, placement, **kw)
+        finally:
+            self._gate_bypass = bypass
 
     def _register_fabric(self, name: str, cfg: ModelConfig,
                          placement: Placement, eu_budget: int = 4,
@@ -1343,7 +1606,45 @@ class ServingSession:
         if handle not in self.cluster.tenants:
             raise ValueError(f"tenant {handle.name!r} is not registered")
         if handle.sim_idx >= 0:
-            self._sim_of(handle).remove_tenant(handle.sim_idx)
+            sim = self._sim_of(handle)
+            man = self.cluster.manager
+            v = handle.vnpu
+            led = v.kv_ledger if v is not None else None
+            if led is not None:
+                # Unwind the LENDER side of every HBM loan before
+                # teardown (same protocol as _evacuate): idle lent
+                # segments come home first, then borrowers' live KV is
+                # force-evicted until the rest follows. Destroying a
+                # lender with live borrowed KV on its segments would
+                # strand the loan table mid-settle and break
+                # hbm_census conservation.
+                t = sim.now
+                for _ in range(100_000):
+                    lent, _borrowed = man.loans_of(v)
+                    if lent <= 0:
+                        break
+                    if man.reclaim_hbm(v, lent) > 0:
+                        continue
+                    if not self._evict_borrower(v, t):
+                        raise KVLedgerError(
+                            f"tenant {handle.name!r} deregistered while "
+                            f"{lent} B of its segments hold a borrower's "
+                            f"live KV that cannot be evicted; drain the "
+                            f"borrower first")
+            sim.remove_tenant(handle.sim_idx)
+            if led is not None and led.borrowed > 0:
+                # BORROWER side: remove_tenant cleared this tenant's
+                # own KV, so every borrowed byte is idle now — return
+                # it all (lender counters settle) instead of leaking
+                # the grant into manager.destroy's settle path
+                man.return_borrowed(v)
+            # drop this slot's autoscale cursors (plain and per-series
+            # fabric keys): a new tenant landing on a reused sim slot
+            # must not inherit the old tenant's latency window
+            slot = (handle.core_idx, handle.sim_idx)
+            for key in [k for k in self._autoscale_cursor
+                        if k[:2] == slot]:
+                del self._autoscale_cursor[key]
         self.cluster.deregister(handle)
 
     def set_iteration_token_budget(self, handle: TenantHandle,
@@ -1458,17 +1759,33 @@ class ServingSession:
         sim.inject_request(handle.sim_idx, at, gen_len=gen_len,
                            prefix_key=int(prefix_key or 0))
 
-    def submit_arrivals(self, handle: Union[TenantHandle, FabricTenant],
-                        arrivals: "ArrivalProcess") -> int:
+    def submit_arrivals(self,
+                        handle: Union[TenantHandle, FabricTenant,
+                                      AdmissionTicket],
+                        arrivals: "ArrivalProcess",
+                        clamp: bool = False) -> int:
         """Admit a whole arrival process (Poisson / trace-driven);
-        returns the number of requests injected."""
+        returns the number of requests injected. A still-deferred
+        :class:`AdmissionTicket` queues the process instead (0
+        injected now); it is injected the moment the gate admits the
+        tenant, with any arrival that fell due DURING the deferral
+        landing at the admission instant (the earliest legal clock —
+        ``clamp`` is how the replay path asks for that)."""
+        if isinstance(handle, AdmissionTicket):
+            if handle.admitted:
+                return self.submit_arrivals(handle.handle, arrivals)
+            handle.pending_arrivals.append(arrivals)
+            return 0
         handle = self._ingress(handle)
         self._rt(handle)
         sim = self._sim_of(handle)
         times = arrivals.times_s()
         lens, keys = self._sample_requests(handle, len(times))
         for t_s, g, k in zip(times, lens, keys):
-            sim.inject_request(handle.sim_idx, self._cycles(float(t_s)),
+            at = self._cycles(float(t_s))
+            if clamp and at < sim.now:
+                at = sim.now
+            sim.inject_request(handle.sim_idx, at,
                                gen_len=g, prefix_key=k or 0)
         return len(times)
 
@@ -1479,11 +1796,21 @@ class ServingSession:
         Returns the new session time (seconds)."""
         self._advance(self._cycles(t_s))
         self._autoscale_step()
+        self._admission_step()
         return self.now_s
 
     def drain(self) -> float:
-        """Process every injected arrival and all in-flight work."""
+        """Process every injected arrival and all in-flight work.
+        Deferred admissions are retried between passes until no
+        further ticket clears the gate (credit accrues with simulated
+        time, so an idle cluster cannot loop forever)."""
         self._advance(math.inf)
+        while self.admission is not None and self.admission_queue:
+            n = len(self.admission_queue)
+            self._admission_step()
+            if len(self.admission_queue) >= n:
+                break             # nothing admitted: no more progress
+            self._advance(math.inf)
         return self.now_s
 
     def _advance(self, t_end: float) -> None:
@@ -1944,6 +2271,8 @@ class ServingSession:
             recent = [x * ms for x in stats.latencies[cursor:]]
             new_budget = self.autoscaler(self, h, recent)
             if new_budget is not None and new_budget != h.eu_budget:
+                if not self._approve_scaleup(h, new_budget):
+                    continue   # credit gate refused; retry next window
                 self._autoscale_cursor[key] = len(stats.latencies)
                 try:
                     self.resize(h, new_budget)
@@ -1951,6 +2280,17 @@ class ServingSession:
                     pass  # no room to grow; hold at current size
         for ft in self.fabric_tenants:
             self._autoscale_fabric(ft, ms)
+
+    def _approve_scaleup(self, h: TenantHandle, new_budget: int) -> bool:
+        """Autoscale grows pass the credit gate too: the incremental
+        EUs are priced at current fleet pressure and debited from the
+        tenant's account. Always true with the gate off (and for
+        shrinks — releasing capacity is never gated)."""
+        if self.admission is None or new_budget <= h.eu_budget:
+            return True
+        return self.admission.approve_scaleup(
+            h.name, new_budget - h.eu_budget, self.now_s,
+            self._fleet_state())
 
     def _autoscale_fabric(self, ft: FabricTenant, ms: float) -> None:
         """Per-core phase-pair autoscaling: TTFT violations grow the
@@ -1972,6 +2312,8 @@ class ServingSession:
             recent = [x * ms for x in series[cursor:]]
             new_budget = decide(self, h, recent, slo)
             if new_budget is not None and new_budget != h.eu_budget:
+                if not self._approve_scaleup(h, new_budget):
+                    continue   # credit gate refused; retry next window
                 self._autoscale_cursor[key] = len(series)
                 try:
                     self.resize(h, new_budget)
@@ -2015,6 +2357,13 @@ class ServingSession:
         if handle is None:
             out.extend(self._fabric_report(ft)
                        for ft in self.fabric_tenants)
+        if self.admission is not None:
+            now_s = self.now_s
+            for rep in out:
+                acct = self.admission.accounts.get(rep.name)
+                if acct is not None:
+                    rep.credit = self.admission.balance(rep.name, now_s)
+                    rep.admission_deferrals = acct.deferrals
         return out
 
     # stats where the pair-wise merge is a max, not a sum

@@ -1,0 +1,501 @@
+"""Credit-based SLO admission control (fleet scale) + the admission/
+loan lifecycle bugfix sweep: CreditAccount conservation (hypothesis),
+price/decide/downsize/defer unit coverage, knapsack tie-breaks, gate
+integration (defer -> re-admit -> arrival replay, scale-up gating,
+report fields, free-fleet bit-identity with the gate off), composition
+with KV pressure and faults, and the three lifecycle regressions —
+deregister loan unwinding on both sides, stale autoscale cursors on
+sim-slot reuse, and the zero-backoff retry storm."""
+import math
+
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.admission import (AdmissionAsk, AdmissionController,
+                                  CreditAccount, FleetState)
+from repro.core.allocator import credit_weighted_fill
+from repro.core.fabric import FabricLink, FabricTopology
+from repro.core.faults import FaultEvent, FaultSchedule
+from repro.npu.hw_config import DEFAULT_CORE
+from repro.serve.session import (AdmissionTicket, GenLenDistribution,
+                                 NPUCluster, PoissonArrivals,
+                                 ServingSession, SLOAutoscaler)
+from tests.hypothesis_compat import given, settings, st
+
+CFG = SMOKES["qwen2-0.5b"]
+SEG = 64 * 1024
+CORE = DEFAULT_CORE.with_(hbm_bytes=64 * SEG, hbm_segment=SEG)
+BIG_CORE = DEFAULT_CORE.with_(hbm_bytes=1024 * SEG, hbm_segment=SEG)
+LINK = FabricLink(bandwidth=16.0, latency=400_000.0)
+WEIGHTS = CFG.param_count() * 2
+WSEG = -(-WEIGHTS // SEG) * SEG
+
+
+def _census_ok(sess):
+    return all(f + r + x == t
+               for f, r, x, t in sess.cluster.manager.hbm_census())
+
+
+def _one_core(admission=None, core=CORE, **kw):
+    topo = FabricTopology.mesh(1, LINK)
+    cluster = NPUCluster(core=core, policy="neu10", topology=topo)
+    return ServingSession(cluster, admission=admission, **kw)
+
+
+# ----------------------------------------------------------------------
+# FleetState / pricing / decide unit coverage
+# ----------------------------------------------------------------------
+def test_fleet_state_pressure_is_dominant_resource():
+    f = FleetState(free_eus=2, total_eus=8,
+                   free_hbm_segments=48, total_hbm_segments=64)
+    assert f.pressure == pytest.approx(0.75)          # EUs dominate
+    assert f.dominant_share(2, 32) == pytest.approx(0.5)
+    assert f.fits(2, 48) and not f.fits(3, 0) and not f.fits(0, 49)
+
+
+def test_price_free_below_free_level_then_linear():
+    ctl = AdmissionController(price_scale=4.0, free_level=0.5)
+    idle = FleetState(8, 8, 64, 64)
+    assert ctl.price(4, 0, idle) == 0.0
+    half = FleetState(4, 8, 64, 64)                    # exactly at knee
+    assert ctl.price(4, 0, half) == 0.0
+    full = FleetState(0, 8, 64, 64)                    # saturated
+    assert ctl.price(4, 0, full) == pytest.approx(4.0 * 0.5)
+    mid = FleetState(2, 8, 64, 64)                     # pressure 0.75
+    assert ctl.price(4, 0, mid) == pytest.approx(4.0 * 0.5 * 0.5)
+
+
+def test_decide_admit_downsize_defer_paths():
+    ctl = AdmissionController(initial_credit=1.0, free_level=0.0,
+                              price_scale=4.0)
+    idle = FleetState(16, 16, 64, 64)
+    ask = AdmissionAsk(name="a", eus=4, hbm_segments=8, min_eus=2)
+    d = ctl.decide(ask, 0.0, idle)
+    assert d.status == "admit" and d.eus == 4 and d.price == 0.0
+    # pressure makes the full ask unaffordable but a smaller one fits
+    tight = FleetState(4, 16, 8, 64)                   # pressure 0.875
+    acct = ctl.accounts["a"]
+    acct.spend(acct.credit - ctl.price(3, 8, tight) - 1e-9)
+    d = ctl.decide(ask, 0.0, tight)
+    assert d.status == "downsize" and 2 <= d.eus < 4
+    # broke: even the floored ask is unaffordable -> defer on credit
+    acct.spend(acct.credit + 1.0)
+    d = ctl.decide(ask, 0.0, tight)
+    assert d.status == "defer" and d.reason == "credit"
+    # misfit: the floored ask does not fit -> defer on capacity
+    rich = ctl.touch(AdmissionAsk(name="b", eus=4, hbm_segments=8), 0.0)
+    rich.spend(rich.credit - 100.0)
+    d = ctl.decide(AdmissionAsk(name="b", eus=4, hbm_segments=8),
+                   0.0, FleetState(1, 16, 8, 64))
+    assert d.status == "defer" and d.reason == "capacity"
+    assert ctl.accounts["a"].deferrals == 1
+    assert all(a.conserved() for a in ctl.accounts.values())
+
+
+def test_hbm_ask_is_never_downsized():
+    ctl = AdmissionController(free_level=0.0)
+    a = ctl.touch(AdmissionAsk(name="a", eus=4, hbm_segments=32), 0.0)
+    a.spend(a.credit - 1e9)
+    # plenty of EUs, not enough segments: no EU walk can help
+    d = ctl.decide(AdmissionAsk(name="a", eus=4, hbm_segments=32),
+                   0.0, FleetState(16, 16, 16, 64))
+    assert d.status == "defer" and d.reason == "capacity"
+
+
+def test_accrual_rate_follows_declared_strictness():
+    ctl = AdmissionController(base_rate=0.1, slo_rate=1.0)
+    lax = ctl.accrual_rate(AdmissionAsk(name="l", eus=2))
+    strict = ctl.accrual_rate(AdmissionAsk(name="s", eus=2,
+                                           slo_ttft_ms=2.0,
+                                           slo_tbt_ms=1.0))
+    assert lax == pytest.approx(0.1)
+    assert strict == pytest.approx(0.1 + 1.0 * (0.5 + 1.0))
+    # touch is idempotent: a failover re-attach keeps the balance
+    a = ctl.touch(AdmissionAsk(name="s", eus=2, slo_ttft_ms=2.0), 0.0)
+    a.spend(a.credit - 42.0)
+    assert ctl.touch(AdmissionAsk(name="s", eus=2), 5.0).credit == 42.0
+
+
+def test_decay_bounds_hoarded_credit():
+    ctl = AdmissionController(initial_credit=0.0, base_rate=1.0,
+                              slo_rate=0.0, decay_halflife_s=1.0)
+    acct = ctl.touch(AdmissionAsk(name="a", eus=2), 0.0)
+    dt = 0.05
+    for i in range(1, 2001):
+        acct.advance(i * dt)
+    # discrete equilibrium of decay-then-accrue:
+    # c* = rate*dt / (1 - exp(-dt/tau)) — approaches rate*tau as dt->0,
+    # never more than one step's accrual above it
+    eq = acct.rate * dt / (1.0 - math.exp(-dt / acct.tau_s))
+    assert acct.credit == pytest.approx(eq, rel=1e-6)
+    assert acct.rate * acct.tau_s < eq < acct.rate * (acct.tau_s + dt)
+    assert acct.conserved()
+
+
+# ----------------------------------------------------------------------
+# credit-weighted knapsack: ordering + tie-breaks
+# ----------------------------------------------------------------------
+def test_knapsack_grants_by_credit_density():
+    # b asks the same resources with twice the credit -> drains first;
+    # the pool only fits one
+    got = credit_weighted_fill([("a", 1.0, 4, 0), ("b", 2.0, 4, 0)],
+                               free_eus=4, free_segments=0,
+                               total_eus=16, total_segments=0)
+    assert got == ["b"]
+
+
+def test_knapsack_skips_misfit_without_blocking_smaller():
+    # the high-credit big ask does not fit; the small one behind it
+    # still drains (greedy knapsack, not strict FIFO-by-rank)
+    got = credit_weighted_fill([("big", 9.0, 12, 0), ("small", 1.0, 2, 0)],
+                               free_eus=4, free_segments=0,
+                               total_eus=16, total_segments=0)
+    assert got == ["small"]
+
+
+def test_knapsack_tie_breaks_credit_then_name():
+    # equal density (same ask, same credit-per-share): higher absolute
+    # credit first; full tie falls back to ascending name
+    got = credit_weighted_fill(
+        [("z", 2.0, 2, 0), ("m", 4.0, 4, 0), ("a", 2.0, 2, 0)],
+        free_eus=16, free_segments=0, total_eus=16, total_segments=0)
+    assert got == ["a", "m", "z"] or got == ["m", "a", "z"]
+    # density: m = 4/(4/16) = 16, a = z = 2/(2/16) = 16 -> all equal;
+    # credit breaks first (m), then name (a before z)
+    assert got == ["m", "a", "z"]
+
+
+# ----------------------------------------------------------------------
+# hypothesis: accounts conserve accrual - decay - debits under churn
+# ----------------------------------------------------------------------
+@settings(deadline=None, max_examples=60)
+@given(st.lists(st.tuples(st.sampled_from(["advance", "violate",
+                                           "decide", "scaleup"]),
+                          st.floats(min_value=0.001, max_value=2.0),
+                          st.integers(min_value=0, max_value=3)),
+                min_size=1, max_size=40))
+def test_credit_accounts_conserve_under_churn(ops):
+    ctl = AdmissionController(initial_credit=0.5, decay_halflife_s=0.7,
+                              free_level=0.25)
+    fleet = FleetState(6, 16, 40, 64)
+    now = 0.0
+    ask = AdmissionAsk(name="t", eus=4, hbm_segments=8,
+                       slo_ttft_ms=2.0, min_eus=2)
+    ctl.touch(ask, now)
+    for op, dt, k in ops:
+        now += dt
+        if op == "advance":
+            ctl.balance("t", now)
+        elif op == "violate":
+            ctl.observe("t", now, k)
+        elif op == "decide":
+            ctl.decide(ask, now, fleet)
+        else:
+            ctl.approve_scaleup("t", k, now, fleet)
+        acct = ctl.accounts["t"]
+        assert acct.conserved(1e-6)
+        assert acct.last_s <= now + 1e-12
+    acct = ctl.accounts["t"]
+    assert acct.credit == pytest.approx(
+        acct.initial + acct.accrued - acct.decayed - acct.debited,
+        abs=1e-6)
+
+
+# ----------------------------------------------------------------------
+# session integration: gate off by default, free fleet = bit-identical
+# ----------------------------------------------------------------------
+def _gated_run(admission):
+    sess = _one_core(admission=admission, core=BIG_CORE)
+    chat = sess.register_generative(
+        "chat", CFG, prompt_len=128, gen_lens=8, eu_budget=4,
+        kv_policy="evict", hbm_bytes=WSEG + 8 * SEG,
+        slo_ttft_ms=5.0, slo_tbt_ms=2.0)
+    assert not isinstance(chat, AdmissionTicket)
+    sess.submit_arrivals(chat, PoissonArrivals(rate_rps=200.0, n=20,
+                                               seed=1))
+    sess.drain()
+    return sess.latencies_ms(chat), sess
+
+
+def test_free_fleet_gate_is_bit_identical_to_off():
+    """Below ``free_level`` utilization every ask is free and admitted
+    at full size — the gate must be invisible in the dynamics."""
+    off, _ = _gated_run(None)
+    on, sess = _gated_run(AdmissionController())
+    assert on == off
+    assert all(a.conserved() for a in
+               sess.admission.accounts.values())
+
+
+def test_report_exposes_credit_and_deferrals():
+    _, sess = _gated_run(AdmissionController())
+    rep, = sess.report()
+    assert rep.credit > 0.0
+    assert rep.admission_deferrals == 0
+    # gate off: the fields stay zero
+    _, off_sess = _gated_run(None)
+    assert off_sess.report()[0].credit == 0.0
+
+
+def test_deferred_ticket_admits_when_capacity_frees():
+    ctl = AdmissionController(initial_credit=0.2, free_level=0.3,
+                              base_rate=0.5)
+    sess = _one_core(admission=ctl)
+    chat = sess.register_generative(
+        "chat", CFG, prompt_len=128, gen_lens=8, eu_budget=6,
+        hbm_bytes=32 * SEG, slo_ttft_ms=2.0, slo_tbt_ms=1.0)
+    sess.submit_arrivals(chat, PoissonArrivals(rate_rps=20_000.0,
+                                               n=30, seed=1))
+    burst = sess.register_generative(
+        "burst", CFG, prompt_len=128, gen_lens=8, eu_budget=6,
+        min_eus=2, hbm_bytes=16 * SEG)
+    assert isinstance(burst, AdmissionTicket)
+    # arrivals queue against the ticket, nothing injected yet
+    n = sess.submit_arrivals(burst, PoissonArrivals(rate_rps=10_000.0,
+                                                    n=10, seed=2))
+    assert n == 0 and len(burst.pending_arrivals) == 1
+    for w in range(1, 11):
+        sess.run_until(w * 0.01)
+    assert not burst.admitted and burst.deferrals >= 1
+    # the incumbent leaves -> the queued ticket clears next window and
+    # its arrivals replay (past ones land at the admission instant)
+    sess.deregister(chat)
+    sess.run_until(0.12)
+    assert burst.admitted and burst.handle.eu_budget == 6
+    sess.drain()
+    rep = {r.name: r for r in sess.report()}
+    assert rep["burst"].requests_done == 10
+    assert rep["burst"].admission_deferrals == burst.deferrals
+    assert _census_ok(sess)
+    assert all(a.conserved() for a in ctl.accounts.values())
+
+
+def test_scaleup_passes_the_credit_gate():
+    """A broke tenant's autoscale grow is denied (and counted); the
+    same run without pressure-priced scale-ups resizes freely."""
+    ctl = AdmissionController(initial_credit=0.0, base_rate=0.0,
+                              slo_rate=0.0, free_level=0.0)
+    sess = _one_core(admission=ctl, core=BIG_CORE,
+                     autoscaler=SLOAutoscaler(step_eus=2, max_eus=8,
+                                              min_samples=3))
+    slow = sess.register_generative(
+        "slow", CFG, prompt_len=512, gen_lens=64, eu_budget=2,
+        slo_p95_ms=0.01)
+    sess.submit_arrivals(slow, PoissonArrivals(rate_rps=5000.0, n=40,
+                                               seed=3))
+    t = 0.0
+    for _ in range(8):
+        t += 0.01
+        sess.run_until(t)
+    assert slow.eu_budget == 2                    # never allowed to grow
+    assert ctl.accounts["slow"].scaleups_denied >= 1
+    sess.drain()
+    assert all(a.conserved() for a in ctl.accounts.values())
+
+
+# ----------------------------------------------------------------------
+# composition: credit gate x KV pressure x faults
+# ----------------------------------------------------------------------
+def test_admission_composes_with_faults_and_kv_pressure():
+    """Multi-core fabric under a transient core fault with KV-evicting
+    tenants and the gate on: a deferred tenant admitted mid-chaos
+    replays cleanly, every arrival is accounted, census conserves and
+    so do the credit accounts."""
+    topo = FabricTopology.mesh(2, LINK)
+    sch = FaultSchedule([FaultEvent(at=0.0002, kind="core_down", core=1,
+                                    recovery=0.002)])
+    cluster = NPUCluster(core=CORE, policy="neu10", topology=topo)
+    ctl = AdmissionController(initial_credit=0.3, free_level=0.2,
+                              base_rate=1.0)
+    sess = ServingSession(cluster, admission=ctl, faults=sch,
+                          failover="evacuate")
+    chat = sess.register_generative(
+        "chat", CFG, prompt_len=128,
+        gen_lens=GenLenDistribution(mean=32.0, max_len=64, seed=7),
+        eu_budget=6, kv_policy="evict", hbm_bytes=WSEG + 4 * SEG,
+        slo_ttft_ms=2.0, slo_tbt_ms=1.0)
+    assert not isinstance(chat, AdmissionTicket)
+    sess.submit_arrivals(chat, PoissonArrivals(rate_rps=20_000.0,
+                                               n=24, seed=1))
+    late = sess.register_generative(
+        "late", CFG, prompt_len=128, gen_lens=8, eu_budget=10,
+        min_eus=2, kv_policy="evict", hbm_bytes=WSEG + 2 * SEG)
+    if isinstance(late, AdmissionTicket):
+        sess.submit_arrivals(late, PoissonArrivals(rate_rps=5000.0,
+                                                   n=8, seed=2))
+        w = 0
+        while not late.admitted and w < 600:
+            w += 1
+            sess.run_until(w * 0.01)
+        assert late.admitted
+        late_done = 8
+    else:
+        sess.submit_arrivals(late, PoissonArrivals(rate_rps=5000.0,
+                                                   n=8, seed=2))
+        late_done = 8
+    sess.drain()
+    rep = {r.name: r for r in sess.report()}
+    assert rep["chat"].requests_done == 24
+    assert rep["late"].requests_done == late_done
+    assert _census_ok(sess)
+    assert not sess.cluster.manager._loans
+    assert all(a.conserved() for a in ctl.accounts.values())
+
+
+# ----------------------------------------------------------------------
+# bugfix regression: deregister unwinds HBM loans (both sides)
+# ----------------------------------------------------------------------
+def _loan_pair():
+    """A squeezed borrower holding the owner's idle segments (the
+    test_kv_prefix borrow idiom, paused mid-loan)."""
+    cluster = NPUCluster(core=BIG_CORE, policy="neu10")
+    sess = ServingSession(cluster)
+    needy = sess.register_generative(
+        "needy", CFG, prompt_len=128,
+        gen_lens=GenLenDistribution(mean=96.0, max_len=256, seed=11),
+        eu_budget=2, kv_policy="evict", hbm_bytes=WSEG + 2 * SEG,
+        kv_borrow=True)
+    owner = sess.register_generative(
+        "owner", CFG, prompt_len=128, gen_lens=64, eu_budget=2,
+        kv_policy="evict", hbm_bytes=WSEG + 8 * SEG)
+    sess.submit_arrivals(needy, PoissonArrivals(rate_rps=200_000.0,
+                                                n=24, seed=1))
+    sess.run_until(0.01)
+    man = cluster.manager
+    lent, _ = man.loans_of(owner.vnpu)
+    assert lent > 0 and needy.vnpu.kv_ledger.borrowed == lent
+    return sess, needy, owner, man
+
+
+def test_deregister_borrower_returns_loans():
+    sess, needy, owner, man = _loan_pair()
+    sess.deregister(needy)
+    assert owner.vnpu.kv_ledger.lent == 0
+    assert man.loans_of(owner.vnpu) == (0, 0)
+    assert not man._loans                       # loan table fully settled
+    assert _census_ok(sess)
+    # the owner keeps serving at full capacity afterwards
+    for i in range(4):
+        sess.submit(owner, at_s=sess.now_s + 1e-6 * (i + 1))
+    sess.drain()
+    assert sess.report(owner)[0].requests_done == 4
+
+
+def test_deregister_lender_reclaims_loans():
+    sess, needy, owner, man = _loan_pair()
+    sess.deregister(owner)
+    assert needy.vnpu.kv_ledger.borrowed == 0
+    assert needy.vnpu.kv_ledger.in_use == 0
+    assert not man._loans
+    assert _census_ok(sess)
+    # the borrower survives the reclaim and keeps serving
+    for i in range(4):
+        sess.submit(needy, at_s=sess.now_s + 1e-6 * (i + 1))
+    sess.drain()
+    assert sess.report(needy)[0].requests_done == 24 + 4
+
+
+# ----------------------------------------------------------------------
+# bugfix regression: stale autoscale cursors on sim-slot reuse
+# ----------------------------------------------------------------------
+def test_deregister_drops_autoscale_cursors():
+    sess = _one_core(core=BIG_CORE,
+                     autoscaler=SLOAutoscaler(step_eus=2, max_eus=8,
+                                              min_samples=3))
+    a = sess.register_generative("a", CFG, prompt_len=128, gen_lens=8,
+                                 eu_budget=2, slo_p95_ms=1000.0)
+    sess.submit_arrivals(a, PoissonArrivals(rate_rps=5000.0, n=20,
+                                            seed=1))
+    sess.run_until(0.01)
+    slot = (a.core_idx, a.sim_idx)
+    sess._autoscale_cursor[slot] = len(sess._rt(a).stats.latencies)
+    # a lazily-created per-series key (the fabric autoscaler's shape)
+    # must die with the tenant too
+    sess._autoscale_cursor[slot + ("ttft",)] = 7
+    sess.deregister(a)
+    assert not any(k[:2] == slot for k in sess._autoscale_cursor)
+    # a successor windows from ZERO: its very first autoscale decision
+    # sees only its own samples, and the breach is acted on promptly
+    b = sess.register_generative("b", CFG, prompt_len=512, gen_lens=64,
+                                 eu_budget=2, slo_p95_ms=0.01)
+    assert sess._autoscale_cursor[(b.core_idx, b.sim_idx)] == 0
+    sess.submit_arrivals(b, PoissonArrivals(rate_rps=5000.0, n=20,
+                                            seed=2, start_s=sess.now_s))
+    t = sess.now_s
+    for _ in range(6):
+        t += 0.01
+        sess.run_until(t)
+    assert b.eu_budget > 2                   # the hook resized it
+    sess.drain()
+
+
+def test_cursor_table_stays_bounded_under_churn():
+    """deregister -> register -> autoscale cycles: the cursor table
+    tracks LIVE tenants only (the pre-fix leak grew one stale entry
+    per departed tenant, forever)."""
+    sess = _one_core(core=BIG_CORE,
+                     autoscaler=SLOAutoscaler(step_eus=2, max_eus=4,
+                                              min_samples=3))
+    for i in range(6):
+        h = sess.register_generative(
+            f"t{i}", CFG, prompt_len=128, gen_lens=8, eu_budget=2,
+            slo_p95_ms=1000.0)
+        sess.submit_arrivals(h, PoissonArrivals(rate_rps=5000.0, n=5,
+                                                seed=i,
+                                                start_s=sess.now_s))
+        sess.run_until(sess.now_s + 0.01)
+        sess.deregister(h)
+        assert len(sess._autoscale_cursor) == 0
+    assert _census_ok(sess)
+
+
+# ----------------------------------------------------------------------
+# bugfix regression: zero-backoff retry storm
+# ----------------------------------------------------------------------
+def test_zero_backoff_retries_land_on_distinct_timestamps():
+    """With ``retry_backoff_ms=0`` a re-admitted request must land
+    STRICTLY AFTER the cycle it expired in (next event tick, else one
+    sweep period) — never at the same instant, where the deadline
+    sweep would re-expire it before anything can move."""
+    sess = _one_core(core=BIG_CORE)
+    chat = sess.register_generative(
+        "chat", CFG, prompt_len=512, gen_lens=64, eu_budget=2,
+        deadline_ms=0.05, max_retries=3, retry_backoff_ms=0.0)
+    sim = sess._sim_of(chat)
+    seen = []
+    orig = sim.inject_retry
+
+    def spy(idx, at, **kw):
+        seen.append((sim.now, at))
+        return orig(idx, at, **kw)
+
+    sim.inject_retry = spy
+    sess.submit_arrivals(chat, PoissonArrivals(rate_rps=200_000.0,
+                                               n=24, seed=1))
+    sess.drain()
+    assert seen                                  # deadline hits happened
+    assert all(at > now for now, at in seen)     # strictly in the future
+    r = sess.report(chat)[0]
+    # every arrival either completed or exhausted its retries — no
+    # request burned its whole budget inside one frozen timestamp
+    # without the run terminating
+    assert r.requests_done + r.retries_exhausted == 24
+    assert r.retries >= 1
+    assert _census_ok(sess)
+
+
+def test_zero_backoff_retry_can_still_succeed():
+    """Once the backlog clears, a zero-backoff retry admitted at the
+    next tick completes (progress, not just exhaustion)."""
+    sess = _one_core(core=BIG_CORE)
+    chat = sess.register_generative(
+        "chat", CFG, prompt_len=128, gen_lens=8, eu_budget=4,
+        deadline_ms=0.3, max_retries=8, retry_backoff_ms=0.0)
+    sess.submit_arrivals(chat, PoissonArrivals(rate_rps=100_000.0,
+                                               n=24, seed=5))
+    sess.drain()
+    r = sess.report(chat)[0]
+    assert r.requests_done + r.retries_exhausted == 24
+    if r.retries:                                # pressure did expire some
+        assert r.retry_successes >= 1 or r.retries_exhausted >= 1
+    assert r.requests_done > 0
